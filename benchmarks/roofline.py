@@ -1,0 +1,92 @@
+"""Roofline report: reads the dry-run JSONs and prints the per-cell table
+(three terms, dominant bottleneck, MODEL_FLOPS/HLO ratio)."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro import configs
+from repro.configs.shapes import SHAPES
+
+PEAK_FLOPS_BF16 = 197e12
+CHIPS = {"16x16": 256, "2x16x16": 512}
+
+
+def model_flops_for(arch: str, shape_name: str) -> float:
+    """Analytic MODEL_FLOPS: 6·N·D train, 2·N·D prefill, 2·N per decode
+    token (N = active params for MoE)."""
+    cfg = configs.get_config(arch)
+    n = cfg.active_param_count()
+    shape = SHAPES[shape_name]
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    return 2.0 * n * shape.global_batch  # one token per sequence
+
+
+def load_records(dryrun_dir: str = "experiments/dryrun") -> list[dict]:
+    recs = []
+    for fn in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        with open(fn) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def rows(dryrun_dir: str = "experiments/dryrun", mesh: str = "16x16") -> list[dict]:
+    out = []
+    for rec in load_records(dryrun_dir):
+        if rec["mesh"] != mesh:
+            continue
+        r = rec["roofline"]
+        chips = CHIPS[rec["mesh"]]
+        mf = model_flops_for(rec["arch"], rec["shape"])
+        hlo_global = rec["hlo"]["dot_flops"] * chips
+        useful = mf / hlo_global if hlo_global else 0.0
+        bound = max(r["compute_seconds"], r["memory_seconds"], r["collective_seconds"])
+        # roofline fraction: useful-compute time / bound time
+        frac = (mf / chips / PEAK_FLOPS_BF16) / bound if bound else 0.0
+        out.append(
+            dict(
+                arch=rec["arch"],
+                shape=rec["shape"],
+                mesh=rec["mesh"],
+                compute_s=r["compute_seconds"],
+                memory_s=r["memory_seconds"],
+                collective_s=r["collective_seconds"],
+                dominant=r["dominant"],
+                model_flops=mf,
+                useful_ratio=useful,
+                roofline_fraction=frac,
+                mem_per_dev_gib=rec["memory"]["peak_estimate_bytes"] / 2**30,
+            )
+        )
+    return out
+
+
+def main() -> None:
+    for mesh in ("16x16", "2x16x16"):
+        rws = rows(mesh=mesh)
+        if not rws:
+            continue
+        print(f"\n=== roofline ({mesh}) ===")
+        print(
+            f"{'arch':<18}{'shape':<13}{'compute':>9}{'memory':>9}{'collect':>9}"
+            f"{'dominant':>11}{'useful':>8}{'fraction':>9}{'GiB/dev':>9}"
+        )
+        for r in sorted(rws, key=lambda r: (r["arch"], r["shape"])):
+            print(
+                f"{r['arch']:<18}{r['shape']:<13}"
+                f"{r['compute_s']*1e3:>8.1f}m{r['memory_s']*1e3:>8.1f}m"
+                f"{r['collective_s']*1e3:>8.1f}m{r['dominant']:>11}"
+                f"{r['useful_ratio']:>8.2f}{r['roofline_fraction']:>9.3f}"
+                f"{r['mem_per_dev_gib']:>9.2f}"
+            )
+
+
+if __name__ == "__main__":
+    main()

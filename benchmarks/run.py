@@ -1,0 +1,58 @@
+# One function per paper table. Prints ``name,us_per_call,derived`` CSV.
+"""Benchmark driver: every paper table/figure, one CSV row per condition.
+
+    PYTHONPATH=src python -m benchmarks.run            # all
+    PYTHONPATH=src python -m benchmarks.run fig4 table3  # subset
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    from benchmarks import paper_benchmarks as B
+
+    suites = {
+        "fig1": B.fig1_breakdown,
+        "table1": B.table1_exec_env,
+        "table2": B.table2_resnets,
+        "table3": B.table3_cost_model,
+        "table7": B.table7_lowres_training,
+        "fig4": B.fig4_pareto,
+        "fig78": B.fig78_systems_lesion,
+        "fig9": B.fig9_video_agg,
+        "table8": B.table8_scaling,
+    }
+    wanted = sys.argv[1:] or list(suites)
+    print("name,us_per_call,derived")
+    for name in wanted:
+        fn = suites[name]
+        t0 = time.time()
+        try:
+            for row_name, us, derived in fn():
+                print(f"{row_name},{us:.2f},{derived}")
+        except Exception as e:  # noqa: BLE001
+            print(f"{name}.ERROR,0,{type(e).__name__}: {e}")
+            traceback.print_exc(file=sys.stderr)
+        print(f"# {name} took {time.time()-t0:.1f}s", file=sys.stderr)
+
+    # roofline table (reads the dry-run artifacts if present)
+    try:
+        from benchmarks import roofline
+
+        import os
+        dr = "experiments/dryrun_opt" if os.path.isdir("experiments/dryrun_opt") else "experiments/dryrun"
+        for r in roofline.rows(dr, mesh="16x16"):
+            print(
+                f"roofline.{r['arch']}.{r['shape']},{max(r['compute_s'], r['memory_s'], r['collective_s'])*1e6:.0f},"
+                f"dominant={r['dominant']} fraction={r['roofline_fraction']:.3f}"
+            )
+    except Exception as e:  # noqa: BLE001
+        print(f"roofline.ERROR,0,{e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,173 @@
+"""Shared vision-benchmark substrate: tiny CNNs trained on the synthetic
+datasets, decode timing, and a process-level cache so fig4/fig5/fig6/
+table7 share trained models instead of retraining.
+
+Scaled to the CPU-only container: 64x64 inputs, 3-stage CNNs standing in
+for ResNet-18/34/50 (relative depth/width ratios preserved), a few hundred
+images per dataset.  All *measured* numbers (decode throughput, exec
+throughput, pipelined throughput, accuracy) are real wall-clock/eval
+numbers from this substrate; where the paper's T4 numbers are needed for
+context we cite them explicitly as calibration constants.
+"""
+
+from __future__ import annotations
+
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data import datasets
+from repro.preprocessing import ops as P
+from repro.preprocessing.formats import ImageFormat, StoredImage
+from repro.training import lowres_aug
+
+INPUT = 64  # DNN input resolution for the scaled substrate
+
+# scaled stand-ins for ResNet-18 / 34 / 50
+MODEL_FAMILY = {
+    "cnn-s": dict(widths=(8, 16, 32), blocks=1),
+    "cnn-m": dict(widths=(12, 24, 48), blocks=2),
+    "cnn-l": dict(widths=(16, 32, 64), blocks=3),
+}
+
+
+def conv(x, w, stride=1):
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME", dimension_numbers=("NCHW", "HWIO", "NCHW")
+    )
+
+
+def init_cnn(key, widths, blocks, num_classes):
+    ks = jax.random.split(key, 1 + len(widths) * blocks + 1)
+    params = {"stem": jax.random.normal(ks[0], (3, 3, 3, widths[0]), jnp.float32) * 0.2}
+    layers = []
+    cin = widths[0]
+    i = 1
+    for wdt in widths:
+        for b in range(blocks):
+            layers.append(jax.random.normal(ks[i], (3, 3, cin, wdt), jnp.float32) * (2.0 / (9 * cin)) ** 0.5)
+            cin = wdt
+            i += 1
+    params["layers"] = layers
+    params["head"] = jax.random.normal(ks[i], (cin, num_classes), jnp.float32) * cin**-0.5
+    return params
+
+
+def cnn_forward(params, x):
+    y = jax.nn.relu(conv(x, params["stem"], stride=2))
+    stage = 0
+    for i, w in enumerate(params["layers"]):
+        stride = 2 if (i > 0 and w.shape[2] != w.shape[3]) else 1
+        y = jax.nn.relu(conv(y, w, stride=stride))
+    y = y.mean(axis=(2, 3))
+    return y @ params["head"]
+
+
+@functools.lru_cache(maxsize=None)
+def dataset_cache(name: str, n_train: int, n_test: int):
+    train_x, train_y = datasets.raw_image_batch(name, n_train, seed=0)
+    test_x, test_y = datasets.raw_image_batch(name, n_test, seed=1)
+    stored = [StoredImage.from_array(img) for img in test_x]
+    return train_x, train_y, test_x, test_y, stored
+
+
+def preprocess_batch(imgs: np.ndarray, condition: str) -> np.ndarray:
+    """condition: 'full' | 'png161' | 'jq95' | 'jq75' — what the DNN sees at
+    TEST time (decode the corresponding stored format, upscale to INPUT)."""
+    out = np.empty((len(imgs), 3, INPUT, INPUT), np.float32)
+    chain_tail = [P.ToFloat(), P.Normalize(), P.ChannelsFirst()]
+    for i, img in enumerate(imgs):
+        if condition == "full":
+            x = img
+        elif condition == "png161":
+            x = lowres_aug.lowres_augment(img, 161, img.shape[0], jpeg_quality=None)
+        elif condition == "jq95":
+            x = lowres_aug.lowres_augment(img, 161, img.shape[0], jpeg_quality=95)
+        elif condition == "jq75":
+            x = lowres_aug.lowres_augment(img, 161, img.shape[0], jpeg_quality=75)
+        else:
+            raise ValueError(condition)
+        x = P.Resize(INPUT, INPUT).apply_host(x)
+        out[i] = P.apply_chain_host(chain_tail, x)
+    return out
+
+
+_train_cache: dict = {}
+
+
+def train_model(
+    dataset: str,
+    model: str,
+    train_condition: str,  # 'reg' or one of the low-res conditions
+    steps: int = 50,
+    batch: int = 24,
+    n_train: int = 160,
+    n_test: int = 96,
+    lr: float = 3e-3,
+):
+    """Train one tiny CNN; returns (params, accuracy_by_test_condition)."""
+    key = (dataset, model, train_condition)
+    if key in _train_cache:
+        return _train_cache[key]
+    spec = datasets.IMAGE_DATASETS[dataset]
+    train_x, train_y, test_x, test_y, _ = dataset_cache(dataset, n_train, n_test)
+
+    mk = MODEL_FAMILY[model]
+    params = init_cnn(jax.random.PRNGKey(0), mk["widths"], mk["blocks"], spec.num_classes)
+
+    # training-time inputs: regular full-res or low-res-augmented (§5.3)
+    cond = "full" if train_condition == "reg" else train_condition
+    xs = preprocess_batch(train_x, cond)
+    ys = train_y
+
+    @jax.jit
+    def step(params, opt, x, y):
+        def loss_fn(p):
+            logits = cnn_forward(p, x)
+            logz = jax.nn.logsumexp(logits, axis=-1)
+            ll = jnp.take_along_axis(logits, y[:, None], axis=-1)[:, 0] - logz
+            return -ll.mean()
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        new_m = jax.tree.map(lambda g, m: 0.9 * m + g, grads, opt)
+        new_params = jax.tree.map(lambda p, m: p - lr * m, params, new_m)
+        return new_params, new_m, loss
+
+    opt = jax.tree.map(jnp.zeros_like, params)
+    rng = np.random.default_rng(0)
+    for s in range(steps):
+        idx = rng.integers(0, len(xs), batch)
+        params, opt, loss = step(params, opt, jnp.asarray(xs[idx]), jnp.asarray(ys[idx]))
+
+    fwd = jax.jit(lambda x: cnn_forward(params, x))
+    accs = {}
+    for cond in ("full", "png161", "jq95", "jq75"):
+        xt = preprocess_batch(test_x, cond)
+        preds = np.asarray(jnp.argmax(fwd(jnp.asarray(xt)), axis=-1))
+        accs[cond] = float((preds == test_y).mean())
+    result = (params, accs, fwd)
+    _train_cache[key] = result
+    return result
+
+
+def measure_decode_throughput(stored: list[StoredImage], fmt: ImageFormat, repeats=2) -> float:
+    t0 = time.perf_counter()
+    n = 0
+    for _ in range(repeats):
+        for s in stored[:48]:
+            s.decode(fmt)
+            n += 1
+    return n / (time.perf_counter() - t0)
+
+
+def measure_exec_throughput(fwd, batch=32, iters=6) -> float:
+    x = jnp.zeros((batch, 3, INPUT, INPUT), jnp.float32)
+    jax.block_until_ready(fwd(x))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fwd(x)
+    jax.block_until_ready(out)
+    return batch * iters / (time.perf_counter() - t0)

@@ -1,0 +1,73 @@
+"""Image-analytics deployment (paper §3.2 classification example).
+
+Full SMOL loop on a synthetic dataset: train the model family at two
+input-fidelity conditions (regular + low-res-augmented, §5.3), calibrate
+decode/exec throughputs, generate the 𝒟 x ℱ plan space, and report the
+Pareto frontier + the plan selected under an accuracy constraint.
+
+    PYTHONPATH=src python examples/image_analytics.py
+"""
+
+import sys
+
+sys.path.insert(0, "benchmarks")
+
+import numpy as np  # noqa: E402
+
+from benchmarks import vision_common as V  # noqa: E402
+from repro.core.cost_model import estimate_smol, pareto_frontier  # noqa: E402
+from repro.preprocessing.formats import (  # noqa: E402
+    FULL_JPEG_Q95,
+    THUMB_JPEG_161_Q75,
+    THUMB_JPEG_161_Q95,
+    THUMB_PNG_161,
+)
+
+FORMATS = {
+    "full": FULL_JPEG_Q95,
+    "png161": THUMB_PNG_161,
+    "jq95": THUMB_JPEG_161_Q95,
+    "jq75": THUMB_JPEG_161_Q75,
+}
+
+
+class Plan:
+    def __init__(self, name, throughput, accuracy):
+        self.name, self.throughput, self.accuracy = name, throughput, accuracy
+
+    def __repr__(self):
+        return f"{self.name}: {self.throughput:.0f} im/s @ {self.accuracy:.3f}"
+
+
+def main():
+    ds = "animals-10"
+    stored = V.dataset_cache(ds, 8, 96)[4]
+    dec = {k: V.measure_decode_throughput(stored, f) for k, f in FORMATS.items()}
+    print("decode throughputs:", {k: round(v, 1) for k, v in dec.items()})
+
+    plans = []
+    for model in ("cnn-s", "cnn-l"):
+        _, reg_accs, fwd = V.train_model(ds, model, "reg")
+        _, aug_accs, _ = V.train_model(ds, model, "png161")  # §5.3 training
+        exec_tput = V.measure_exec_throughput(fwd)
+        plans.append(Plan(f"naive/{model}@full", estimate_smol(dec["full"], [exec_tput]),
+                          reg_accs["full"]))
+        for cond in ("png161", "jq95", "jq75"):
+            plans.append(Plan(f"smol/{model}@{cond}",
+                              estimate_smol(dec[cond], [exec_tput]), aug_accs[cond]))
+
+    front = pareto_frontier(plans)
+    print("\nPareto frontier (throughput x accuracy):")
+    for p in front:
+        print("  ", p)
+
+    naive_best = max(p for p in plans if p.name.startswith("naive"))
+    floor = naive_best.accuracy - 0.02
+    feasible = [p for p in plans if p.accuracy >= floor]
+    chosen = max(feasible, key=lambda p: p.throughput)
+    print(f"\naccuracy-constrained selection (floor {floor:.3f}): {chosen}")
+    print(f"speedup over naive full-res plan: {chosen.throughput / naive_best.throughput:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Architecture registry: the 10 assigned archs + the paper's ResNets."""
+
+from __future__ import annotations
+
+import importlib
+
+from repro.models.config import ModelConfig
+
+ARCH_MODULES = {
+    "qwen3-32b": "repro.configs.qwen3_32b",
+    "internlm2-1.8b": "repro.configs.internlm2_1_8b",
+    "internlm2-20b": "repro.configs.internlm2_20b",
+    "gemma3-1b": "repro.configs.gemma3_1b",
+    "internvl2-26b": "repro.configs.internvl2_26b",
+    "xlstm-125m": "repro.configs.xlstm_125m",
+    "whisper-large-v3": "repro.configs.whisper_large_v3",
+    "hymba-1.5b": "repro.configs.hymba_1_5b",
+    "deepseek-v2-236b": "repro.configs.deepseek_v2_236b",
+    "olmoe-1b-7b": "repro.configs.olmoe_1b_7b",
+}
+
+ARCH_NAMES = list(ARCH_MODULES)
+
+
+def get_config(name: str) -> ModelConfig:
+    return importlib.import_module(ARCH_MODULES[name]).CONFIG
+
+
+def get_smoke_config(name: str) -> ModelConfig:
+    return importlib.import_module(ARCH_MODULES[name]).SMOKE
+
+
+# Cells skipped in the dry-run matrix, with reasons (DESIGN.md §5).
+SKIP_CELLS: dict[tuple[str, str], str] = {
+    ("qwen3-32b", "long_500k"): "pure full attention: 500k decode is architecturally quadratic-history",
+    ("internlm2-1.8b", "long_500k"): "pure full attention",
+    ("internlm2-20b", "long_500k"): "pure full attention",
+    ("internvl2-26b", "long_500k"): "pure full attention (VLM backbone)",
+    ("deepseek-v2-236b", "long_500k"): "full attention (MLA compresses the cache but attends globally)",
+    ("olmoe-1b-7b", "long_500k"): "pure full attention",
+    ("whisper-large-v3", "long_500k"): "enc-dec: decoder ceiling is 448 tokens; 500k meaningless",
+}
+
+
+def cell_is_skipped(arch: str, shape: str) -> str | None:
+    return SKIP_CELLS.get((arch, shape))

@@ -1,0 +1,10 @@
+"""SMOL core: the paper's contribution as a composable JAX library.
+
+* cost_model — preprocessing-aware throughput estimation (Eq. 2/3/4)
+* dag        — preprocessing-DAG optimization (§6.2)
+* placement  — host/accelerator operator placement (§6.3)
+* planner    — 𝒟 × ℱ plan generation, Pareto selection (§3)
+* engine     — pipelined end-to-end runtime (§6.1)
+* cascade    — Tahoma-style model cascades
+* aggregation — BlazeIt-style control-variate aggregation
+"""

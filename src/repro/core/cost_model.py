@@ -1,0 +1,138 @@
+"""Preprocessing-aware cost modeling (paper §4).
+
+Three throughput estimators for a configuration C = (cascade of DNNs,
+input format, preprocessing plan):
+
+* ``blazeit`` — Eq. 2: cascade execution only, preprocessing ignored.
+* ``tahoma`` — Eq. 3: additive preprocessing + execution (no pipelining).
+* ``smol``   — Eq. 4: min(T_preproc, T_exec_cascade) — pipelined.
+
+plus the accuracy estimator (held-out validation set) and a calibration
+harness that *measures* stage throughputs the way the paper does.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Sequence
+
+
+def cascade_exec_throughput(
+    exec_throughputs: Sequence[float],
+    pass_fractions: Sequence[float] | None = None,
+) -> float:
+    """Effective execution throughput of a cascade (the inner term of
+    Eqs. 2 and 4).
+
+    ``pass_fractions[j]`` is the fraction of inputs that *reach* stage j
+    (so ``pass_fractions[0] == 1``; the paper's alpha_j are per-stage
+    pass-through rates, with reach fractions their running product).
+    """
+    k = len(exec_throughputs)
+    if pass_fractions is None:
+        pass_fractions = [1.0] * k
+    assert len(pass_fractions) == k
+    denom = sum(pf / t for pf, t in zip(pass_fractions, exec_throughputs))
+    return 1.0 / denom if denom > 0 else float("inf")
+
+
+def estimate_blazeit(
+    preproc_throughput: float,
+    exec_throughputs: Sequence[float],
+    pass_fractions: Sequence[float] | None = None,
+) -> float:
+    """Eq. 2 — ignores preprocessing entirely."""
+    del preproc_throughput
+    return cascade_exec_throughput(exec_throughputs, pass_fractions)
+
+
+def estimate_tahoma(
+    preproc_throughput: float,
+    exec_throughputs: Sequence[float],
+    pass_fractions: Sequence[float] | None = None,
+) -> float:
+    """Eq. 3 — additive; ignores that stages pipeline."""
+    t_exec = cascade_exec_throughput(exec_throughputs, pass_fractions)
+    return 1.0 / (1.0 / preproc_throughput + 1.0 / t_exec)
+
+
+def estimate_smol(
+    preproc_throughput: float,
+    exec_throughputs: Sequence[float],
+    pass_fractions: Sequence[float] | None = None,
+) -> float:
+    """Eq. 4 — pipelined: the slower stage bounds end-to-end throughput."""
+    t_exec = cascade_exec_throughput(exec_throughputs, pass_fractions)
+    return min(preproc_throughput, t_exec)
+
+
+ESTIMATORS: dict[str, Callable[..., float]] = {
+    "blazeit": estimate_blazeit,
+    "tahoma": estimate_tahoma,
+    "smol": estimate_smol,
+}
+
+
+@dataclasses.dataclass
+class StageThroughputs:
+    """Measured stage throughputs for one configuration (items/sec)."""
+
+    preproc: float
+    exec_stages: tuple[float, ...]
+    pass_fractions: tuple[float, ...] = (1.0,)
+
+    def estimate(self, estimator: str = "smol") -> float:
+        return ESTIMATORS[estimator](self.preproc, self.exec_stages, self.pass_fractions)
+
+
+def measure_throughput(
+    fn: Callable[[], None],
+    items_per_call: int,
+    warmup: int = 1,
+    repeats: int = 3,
+    min_seconds: float = 0.05,
+) -> float:
+    """Wall-clock throughput of ``fn`` in items/sec (median of repeats)."""
+    for _ in range(warmup):
+        fn()
+    samples = []
+    for _ in range(repeats):
+        n, t0 = 0, time.perf_counter()
+        while True:
+            fn()
+            n += items_per_call
+            dt = time.perf_counter() - t0
+            if dt >= min_seconds:
+                break
+        samples.append(n / dt)
+    samples.sort()
+    return samples[len(samples) // 2]
+
+
+@dataclasses.dataclass
+class PlanEstimate:
+    """The cost model's verdict on one plan."""
+
+    throughput: float
+    accuracy: float
+    stages: StageThroughputs
+
+    def dominates(self, other: "PlanEstimate") -> bool:
+        return (
+            self.throughput >= other.throughput
+            and self.accuracy >= other.accuracy
+            and (self.throughput > other.throughput or self.accuracy > other.accuracy)
+        )
+
+
+def pareto_frontier(items: list, key=lambda e: (e.throughput, e.accuracy)) -> list:
+    """Pareto-optimal subset under (throughput, accuracy), both maximized."""
+    pts = sorted(items, key=lambda it: (-key(it)[0], -key(it)[1]))
+    out, best_acc = [], float("-inf")
+    for it in pts:
+        _, acc = key(it)
+        if acc > best_acc:
+            out.append(it)
+            best_acc = acc
+    return out

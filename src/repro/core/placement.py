@@ -1,0 +1,115 @@
+"""Hardware- and input-aware preprocessing operator placement (paper §6.3).
+
+Preprocessing chains are sequential, so a placement is a *split point* k:
+ops[:k] run on the host (CPU workers), ops[k:] run on the accelerator,
+fused into the DNN's compiled graph.  The entropy-decode stage is pinned to
+the host (the paper: entropy decoders "are not efficient on accelerators
+... substantial branching"); everything downstream is dense math and may go
+either way.
+
+Pipelined end-to-end throughput for split k is
+
+    T(k) = min( T_host(ops[:k]),  1 / (t_dev(ops[k:]) + t_dnn) )
+
+— host and device run concurrently (§6.1), but device-side preprocessing
+shares the accelerator with DNN execution, so those times add.  SMOL
+evaluates every split (there are only ~5, as the paper notes) and takes the
+argmax.  When DNN execution dominates, this pushes ops to the host; when
+preprocessing dominates, it pushes them to the device — the paper's §6.3
+policy, derived rather than hard-coded.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+from repro.preprocessing.ops import PreprocOp, TensorMeta, chain_out_meta
+
+# Throughput ratio of the accelerator over one host worker for the same
+# weighted arithmetic op count.  Used only when measured timings are not
+# supplied; calibration (core/engine.py) overrides it with measurements.
+DEFAULT_DEVICE_SPEEDUP = 20.0
+
+
+@dataclasses.dataclass(frozen=True)
+class Placement:
+    split: int  # ops[:split] -> host, ops[split:] -> device
+    host_ops: tuple[PreprocOp, ...]
+    device_ops: tuple[PreprocOp, ...]
+    est_throughput: float
+    est_host_throughput: float
+    est_device_throughput: float
+
+
+def _stage_time(
+    ops: Sequence[PreprocOp],
+    in_meta: TensorMeta,
+    ops_per_sec: float,
+) -> tuple[float, TensorMeta]:
+    """Time (seconds/item) to run ``ops`` at ``ops_per_sec`` weighted-op/s."""
+    t, m = 0.0, in_meta
+    for op in ops:
+        t += op.flops(m) / ops_per_sec
+        m = op.out_meta(m)
+    return t, m
+
+
+def choose_split(
+    chain: Sequence[PreprocOp],
+    in_meta: TensorMeta,
+    host_decode_time: float,
+    dnn_device_time: float,
+    host_ops_per_sec: float = 2.0e9,
+    device_ops_per_sec: float | None = None,
+    measured_host_times: Sequence[float] | None = None,
+    measured_device_times: Sequence[float] | None = None,
+) -> Placement:
+    """Pick the throughput-maximizing split point.
+
+    ``host_decode_time`` — seconds/item of the (host-pinned) decode stage.
+    ``dnn_device_time`` — seconds/item of DNN execution on the accelerator.
+    Per-op times may be *measured* (preferred; what the engine calibrates)
+    or estimated from weighted op counts.
+    """
+    if device_ops_per_sec is None:
+        device_ops_per_sec = host_ops_per_sec * DEFAULT_DEVICE_SPEEDUP
+    n = len(chain)
+
+    host_times, device_times = [], []
+    m = in_meta
+    for i, op in enumerate(chain):
+        if measured_host_times is not None:
+            host_times.append(measured_host_times[i])
+        else:
+            host_times.append(op.flops(m) / host_ops_per_sec)
+        if measured_device_times is not None:
+            device_times.append(measured_device_times[i])
+        else:
+            device_times.append(op.flops(m) / device_ops_per_sec)
+        m = op.out_meta(m)
+
+    best: Placement | None = None
+    for split in range(n + 1):
+        t_host = host_decode_time + sum(host_times[:split])
+        t_dev = sum(device_times[split:]) + dnn_device_time
+        tput_host = 1.0 / t_host if t_host > 0 else float("inf")
+        tput_dev = 1.0 / t_dev if t_dev > 0 else float("inf")
+        tput = min(tput_host, tput_dev)
+        cand = Placement(
+            split=split,
+            host_ops=tuple(chain[:split]),
+            device_ops=tuple(chain[split:]),
+            est_throughput=tput,
+            est_host_throughput=tput_host,
+            est_device_throughput=tput_dev,
+        )
+        if best is None or cand.est_throughput > best.est_throughput:
+            best = cand
+    assert best is not None
+    return best
+
+
+def placement_out_meta(placement: Placement, in_meta: TensorMeta) -> TensorMeta:
+    m = chain_out_meta(list(placement.host_ops), in_meta)
+    return chain_out_meta(list(placement.device_ops), m)

@@ -1,0 +1,194 @@
+"""SMOL's plan generator + selector (paper §3, Figure 2).
+
+Inputs: a set of DNNs 𝒟, a set of natively available input formats ℱ, a
+calibration set, optional accuracy/throughput constraints.  The planner
+
+1. generates query plans over 𝒟 × ℱ,
+2. optimizes each plan's preprocessing DAG (core/dag.py) and operator
+   placement (core/placement.py),
+3. estimates accuracy (validation set) and throughput (the min cost
+   model, core/cost_model.py) per plan,
+4. returns the Pareto-optimal set — or the best plan under a constraint.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Sequence
+
+import numpy as np
+
+from repro.core import dag as dag_mod
+from repro.core import placement as placement_mod
+from repro.core.cost_model import PlanEstimate, StageThroughputs, pareto_frontier
+from repro.preprocessing import ops as P
+from repro.preprocessing.formats import ImageFormat, StoredImage
+from repro.preprocessing.ops import TensorMeta
+
+
+@dataclasses.dataclass
+class ModelSpec:
+    """One member of 𝒟."""
+
+    name: str
+    input_size: int  # square DNN input resolution
+    exec_throughput: float  # measured items/sec on synthetic batches
+    accuracy_by_format: dict[str, float]  # format.key -> validation accuracy
+    pass_fraction: float = 1.0  # for cascade members: fraction reaching it
+
+
+@dataclasses.dataclass
+class QueryPlan:
+    model: ModelSpec
+    fmt: ImageFormat
+    dag_plan: dag_mod.DagPlan
+    placement: placement_mod.Placement
+    estimate: PlanEstimate
+
+    @property
+    def key(self) -> str:
+        return f"{self.model.name}@{self.fmt.key}"
+
+    def __repr__(self) -> str:
+        e = self.estimate
+        return f"QueryPlan({self.key}: {e.throughput:.0f} im/s, acc={e.accuracy:.4f})"
+
+
+def standard_chain(input_size: int) -> list[P.PreprocOp]:
+    """The ResNet-style preprocessing chain (paper §2) for a target input."""
+    resize_short = round(input_size * 256 / 224)
+    return [
+        P.ResizeShortSide(resize_short),
+        P.CenterCrop(input_size),
+        P.ToFloat(),
+        P.Normalize(),
+        P.ChannelsFirst(),
+    ]
+
+
+def measure_decode_time(
+    samples: Sequence[StoredImage],
+    fmt: ImageFormat,
+    roi_for: Callable[[tuple[int, int, int, int]], tuple[int, int, int, int]] | None = None,
+    repeats: int = 1,
+) -> float:
+    """Measured seconds/item to decode ``fmt`` on one host worker."""
+    t0 = time.perf_counter()
+    n = 0
+    for _ in range(repeats):
+        for s in samples:
+            roi = None
+            if roi_for is not None:
+                h, w = s.native_shape[:2]
+                roi = roi_for((0, 0, h, w))
+            s.decode(fmt, roi=roi)
+            n += 1
+    return (time.perf_counter() - t0) / n
+
+
+def central_roi(input_size: int, resize_short: int):
+    """ROI covering the central crop in original coordinates (Algorithm 1)."""
+
+    def fn(full: tuple[int, int, int, int]):
+        _, _, h, w = full
+        scale = min(h, w) / resize_short
+        crop = input_size * scale
+        t = (h - crop) / 2
+        l = (w - crop) / 2
+        return (int(t), int(l), int(np.ceil(t + crop)), int(np.ceil(l + crop)))
+
+    return fn
+
+
+class Planner:
+    """Generates, optimizes and ranks plans over 𝒟 × ℱ."""
+
+    def __init__(
+        self,
+        models: Sequence[ModelSpec],
+        formats: Sequence[ImageFormat],
+        decode_time: Callable[[ImageFormat], float],
+        decoded_meta: Callable[[ImageFormat], TensorMeta],
+        host_ops_per_sec: float = 2.0e9,
+        device_ops_per_sec: float | None = None,
+        use_roi_decode: bool = False,
+        estimator: str = "smol",
+    ):
+        self.models = list(models)
+        self.formats = list(formats)
+        self.decode_time = decode_time
+        self.decoded_meta = decoded_meta
+        self.host_ops_per_sec = host_ops_per_sec
+        self.device_ops_per_sec = device_ops_per_sec
+        self.use_roi_decode = use_roi_decode
+        self.estimator = estimator
+
+    def _plan_one(self, model: ModelSpec, fmt: ImageFormat) -> QueryPlan | None:
+        acc = model.accuracy_by_format.get(fmt.key)
+        if acc is None:
+            return None  # model was not trained/evaluated for this format
+        in_meta = self.decoded_meta(fmt)
+        chain = standard_chain(model.input_size)
+        plan = dag_mod.optimize(chain, in_meta)
+        t_decode = self.decode_time(fmt)
+        t_dnn = 1.0 / model.exec_throughput
+        placement = placement_mod.choose_split(
+            plan.ops,
+            in_meta,
+            host_decode_time=t_decode,
+            dnn_device_time=t_dnn,
+            host_ops_per_sec=self.host_ops_per_sec,
+            device_ops_per_sec=self.device_ops_per_sec,
+        )
+        stages = StageThroughputs(
+            preproc=placement.est_host_throughput,
+            exec_stages=(placement.est_device_throughput,),
+            pass_fractions=(model.pass_fraction,),
+        )
+        est = PlanEstimate(
+            throughput=stages.estimate(self.estimator),
+            accuracy=acc,
+            stages=stages,
+        )
+        return QueryPlan(model, fmt, plan, placement, est)
+
+    def generate(self) -> list[QueryPlan]:
+        plans = []
+        for m in self.models:
+            for f in self.formats:
+                p = self._plan_one(m, f)
+                if p is not None:
+                    plans.append(p)
+        return plans
+
+    def pareto(self) -> list[QueryPlan]:
+        return pareto_frontier(
+            self.generate(), key=lambda p: (p.estimate.throughput, p.estimate.accuracy)
+        )
+
+    def select(
+        self,
+        min_accuracy: float | None = None,
+        min_throughput: float | None = None,
+    ) -> QueryPlan:
+        """Constraint-aware selection (paper §3.1):
+
+        * accuracy floor -> max throughput subject to accuracy,
+        * throughput floor -> max accuracy subject to throughput,
+        * no constraint -> highest-throughput plan.
+        """
+        plans = self.generate()
+        if not plans:
+            raise ValueError("no feasible plans")
+        if min_accuracy is not None:
+            ok = [p for p in plans if p.estimate.accuracy >= min_accuracy]
+            if not ok:
+                raise ValueError(f"no plan reaches accuracy {min_accuracy}")
+            return max(ok, key=lambda p: p.estimate.throughput)
+        if min_throughput is not None:
+            ok = [p for p in plans if p.estimate.throughput >= min_throughput]
+            if not ok:
+                raise ValueError(f"no plan reaches throughput {min_throughput}")
+            return max(ok, key=lambda p: p.estimate.accuracy)
+        return max(plans, key=lambda p: p.estimate.throughput)

@@ -1,0 +1,2 @@
+"""Data substrate: sharded resumable pipeline + synthetic dataset
+generators standing in for the paper's eight evaluation datasets."""

@@ -1,0 +1,2 @@
+"""Pod-scale distributed runtime: sharding rules, ZeRO, checkpointing,
+fault tolerance, gradient compression."""

@@ -1,0 +1,84 @@
+"""Gradient compression with error feedback for the cross-pod hop.
+
+The (2, 16, 16) production mesh reduces gradients over "data" (in-pod ICI,
+fast) and "pod" (inter-pod links, the scarce resource).  int8 + per-tensor
+scale cuts the pod-axis all-reduce bytes 4x vs f32 (2x vs bf16); error
+feedback keeps the quantization noise from biasing the trajectory
+(the residual is replayed into the next step's gradient).
+
+``compressed_psum_pod`` is built for use inside shard_map over the pod
+axis; the pure quantization pieces are jit-safe and unit-tested on their
+own.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-tensor symmetric int8 quantization.  Returns (q, scale)."""
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def ef_quantize(x: jnp.ndarray, error: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Error-feedback quantization: quantize (x + carried error), carry the
+    new residual.  Returns (q, scale, new_error)."""
+    corrected = x + error
+    q, scale = quantize_int8(corrected)
+    new_error = corrected - dequantize_int8(q, scale)
+    return q, scale, new_error
+
+
+def init_error_state(grads):
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+
+def compress_gradients(grads, error_state):
+    """Tree-wise EF-int8 compression.  Returns ((q_tree, scale_tree),
+    new_error_state)."""
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(error_state)
+    qs, scales, errs = [], [], []
+    for g, e in zip(flat_g, flat_e):
+        q, s, ne = ef_quantize(g.astype(jnp.float32), e)
+        qs.append(q)
+        scales.append(s)
+        errs.append(ne)
+    return (
+        (jax.tree.unflatten(treedef, qs), jax.tree.unflatten(treedef, scales)),
+        jax.tree.unflatten(treedef, errs),
+    )
+
+
+def decompress_gradients(compressed):
+    q_tree, scale_tree = compressed
+    return jax.tree.map(dequantize_int8, q_tree, scale_tree)
+
+
+def compressed_psum_pod(x: jnp.ndarray, error: jnp.ndarray, axis_name: str = "pod"):
+    """All-reduce ``x`` over ``axis_name`` moving int8 instead of f32.
+
+    Inside shard_map: quantize locally (with error feedback), all_gather
+    the int8 payload + scales (bytes = n/4 vs f32 psum), dequantize-sum
+    locally.  Returns (reduced, new_error)."""
+    q, scale, new_error = ef_quantize(x.astype(jnp.float32), error)
+    all_q = jax.lax.all_gather(q, axis_name)  # (P, ...) int8 on the wire
+    all_s = jax.lax.all_gather(scale, axis_name)  # (P,) f32
+    scales = all_s.reshape((-1,) + (1,) * (all_q.ndim - 1))
+    total = (all_q.astype(jnp.float32) * scales).sum(axis=0)
+    return total, new_error
+
+
+def compression_ratio(grads) -> float:
+    """Wire-bytes ratio of EF-int8 vs f32 for a gradient tree."""
+    f32 = sum(g.size * 4 for g in jax.tree.leaves(grads))
+    int8 = sum(g.size * 1 + 4 for g in jax.tree.leaves(grads))
+    return f32 / int8

@@ -1,0 +1,139 @@
+"""Logical-axis sharding rules.
+
+Model code annotates activations with *logical* axis names ("batch",
+"seq", "model_heads", ...); the launcher installs a mapping from logical
+names to mesh axes before tracing.  Outside a mesh context every
+annotation is a no-op, so the same model code runs single-device tests and
+512-chip dry-runs unchanged.
+
+Parameter shardings are derived from leaf *paths* by rule
+(``param_pspecs``): attention/MLP column weights shard their output dim on
+"model", row weights their input dim, experts shard on "model" (EP),
+embeddings shard the vocab dim, norms replicate.
+"""
+
+from __future__ import annotations
+
+import re
+import threading
+from typing import Any
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_ctx = threading.local()
+
+# Logical-axis defaults for the production meshes.
+SINGLE_POD_RULES: dict[str, Any] = {
+    "batch": "data",
+    "seq": None,
+    "seq_shard": "data",  # sequence sharding for small-batch decode (SP)
+    "embed": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "mlp": "model",
+    "vocab": "model",
+    "experts": "model",
+    "expert_cap": None,
+}
+MULTI_POD_RULES = dict(SINGLE_POD_RULES)
+MULTI_POD_RULES["batch"] = ("pod", "data")
+MULTI_POD_RULES["seq_shard"] = ("pod", "data")
+
+
+def set_rules(rules: dict[str, Any] | None) -> None:
+    _ctx.rules = rules
+
+
+def get_rules() -> dict[str, Any] | None:
+    return getattr(_ctx, "rules", None)
+
+
+class use_rules:
+    """Context manager installing logical->mesh axis rules for tracing."""
+
+    def __init__(self, rules: dict[str, Any] | None):
+        self.rules = rules
+
+    def __enter__(self):
+        self.prev = get_rules()
+        set_rules(self.rules)
+        return self
+
+    def __exit__(self, *exc):
+        set_rules(self.prev)
+
+
+def logical_to_pspec(names: tuple[str | None, ...]) -> P:
+    rules = get_rules()
+    if rules is None:
+        return P()
+    return P(*[rules.get(n) if n is not None else None for n in names])
+
+
+def shard(x, *names: str | None):
+    """Annotate ``x`` with logical axis names (no-op without rules)."""
+    if get_rules() is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, logical_to_pspec(names))
+
+
+# ------------------------------------------------------------------ params
+
+# Path-pattern -> logical names per dimension.  First match wins.  Patterns
+# are matched against "/".join(path keys).
+_PARAM_RULES: list[tuple[str, tuple[str | None, ...]]] = [
+    (r"embed", ("vocab", None)),
+    (r"lm_head", (None, "vocab")),
+    (r"(wq_b|wq)$", (None, "heads")),
+    (r"(wk|wv)$", (None, "kv_heads")),
+    (r"wo$", ("heads", None)),
+    (r"wkv_b$", (None, "heads")),
+    (r"(wq_a|wkv_a)$", (None, None)),
+    # EP and TP share the "model" mesh axis: experts shard on it, so the
+    # per-expert FFN dims must stay unsharded (pure expert parallelism).
+    (r"experts/.*(w_gate|w_up)$", ("experts", None, None)),
+    (r"experts/.*w_down$", ("experts", None, None)),
+    (r"(w_gate|w_up)$", (None, "mlp")),
+    (r"w_down$", ("mlp", None)),
+    (r"router$", (None, "experts")),
+    (r"(conv_w|conv_kernel)", (None, None, None)),
+    # SSM / xLSTM projections
+    (r"(in_proj|up_proj|o_gate|w_in|w_rec)$", (None, "mlp")),
+    (r"(out_proj|down_proj)$", ("mlp", None)),
+]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def spec_for_leaf(path, leaf) -> P:
+    """PartitionSpec for one parameter leaf, by path rules.
+
+    Scanned stacks have a leading layer dim: detect via ndim vs rule arity
+    and left-pad the spec with None.
+    """
+    rules = get_rules() or SINGLE_POD_RULES
+    ps = _path_str(path)
+    for pat, names in _PARAM_RULES:
+        if re.search(pat, ps):
+            axes = [rules.get(n) if n is not None else None for n in names]
+            pad = leaf.ndim - len(axes)
+            if pad < 0:  # rule arity exceeds leaf ndim: replicate
+                return P()
+            return P(*([None] * pad + axes))
+    return P()  # norms, biases, scalars: replicated
+
+
+def param_pspecs(params) -> Any:
+    """Pytree of PartitionSpec matching ``params``."""
+    return jax.tree_util.tree_map_with_path(spec_for_leaf, params)

@@ -1,0 +1,51 @@
+"""ZeRO-1 optimizer-state sharding.
+
+Adam moments double the f32 parameter footprint; at 236B params that is
+~1.9 TB of optimizer state.  ZeRO-1 shards the moments over the DATA axis
+(they are only read/written around the parameter update, so no extra
+communication inside the step beyond what XLA already schedules for the
+sharded update).
+
+We express it entirely through GSPMD: moment pspecs = parameter pspecs
+with the first still-unsharded, data-divisible dimension assigned to the
+data axis.  XLA then keeps the update fully sharded and re-gathers params.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.sharding import get_rules
+
+
+def _data_axis_size(mesh) -> int:
+    return mesh.shape.get("data", 1)
+
+
+def zero_spec_for(spec: P, shape: tuple[int, ...], data_axes, data_size: int) -> P:
+    """Extend a param spec with data-axis sharding on one free dim."""
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    for i, (axis, dim) in enumerate(zip(parts, shape)):
+        if axis is None and dim % data_size == 0 and dim >= data_size:
+            parts[i] = data_axes
+            return P(*parts)
+    return P(*parts)  # nothing divisible: stay replicated
+
+
+def zero_pspecs(params, param_specs, mesh) -> object:
+    """Pytree of optimizer-moment PartitionSpecs for ``params``."""
+    rules = get_rules() or {}
+    data_axes = rules.get("batch", "data")
+    if isinstance(data_axes, (tuple, list)):
+        size = 1
+        for a in data_axes:
+            size *= mesh.shape.get(a, 1)
+        data_axes = tuple(data_axes)
+    else:
+        size = mesh.shape.get(data_axes, 1)
+
+    def one(leaf, spec):
+        return zero_spec_for(spec, leaf.shape, data_axes, size)
+
+    return jax.tree.map(one, params, param_specs)

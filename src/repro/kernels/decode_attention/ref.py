@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for single-token decode attention."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def decode_attention_ref(
+    q: jnp.ndarray,  # (B, H, D) — one new token per sequence
+    k: jnp.ndarray,  # (B, KVH, S, D) — KV cache (possibly padded)
+    v: jnp.ndarray,  # (B, KVH, S, D)
+    lengths: jnp.ndarray,  # (B,) int32 — valid cache length per sequence
+    window: int | None = None,
+    scale: float | None = None,
+) -> jnp.ndarray:
+    b, h, d = q.shape
+    kvh, s = k.shape[1], k.shape[2]
+    group = h // kvh
+    if scale is None:
+        scale = d**-0.5
+    kx = jnp.repeat(k, group, axis=1)
+    vx = jnp.repeat(v, group, axis=1)
+    logits = jnp.einsum("bhd,bhsd->bhs", q.astype(jnp.float32), kx.astype(jnp.float32)) * scale
+    pos = jnp.arange(s)[None, None, :]
+    mask = pos < lengths[:, None, None]
+    if window is not None:
+        mask &= pos >= (lengths[:, None, None] - window)
+    logits = jnp.where(mask, logits, -1e30)
+    probs = jnp.exp(logits - logits.max(axis=-1, keepdims=True))
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bhs,bhsd->bhd", probs, vx.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,144 @@
+"""Blockwise streaming (flash) attention, Pallas TPU.
+
+Online-softmax attention with O(S) memory: the (bq, S) score row never
+materializes.  Supports causal and sliding-window (local) masking — the
+latter is what makes gemma3-style 5:1 local:global stacks and hymba's
+attention half sub-quadratic.
+
+Grid: (B*H, num_q_blocks, num_kv_blocks), kv innermost so the f32
+accumulators live in VMEM scratch across kv steps.  GQA is handled
+structurally: K/V are laid out (B*KVH, S, D) and the BlockSpec index map
+divides the q-head coordinate by the group size — no jnp.repeat
+materialization of K/V (a memory-roofline win over the naive path).
+
+Block shapes: q (1, bq, D), k/v (1, bk, D), out (1, bq, D); scratch
+m/l (bq, 128) f32 (lane-replicated running max / normalizer), acc (bq, D)
+f32.  bq = bk = 128 and D in {64, 128, 256} keep every matmul
+MXU-shaped: (bq, D) @ (D, bk) and (bq, bk) @ (bk, D).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BQ = 128
+DEFAULT_BK = 128
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref,
+    k_ref,
+    v_ref,
+    o_ref,
+    m_scr,
+    l_scr,
+    acc_scr,
+    *,
+    scale: float,
+    causal: bool,
+    window: int | None,
+    seq_len: int,
+    bq: int,
+    bk: int,
+    kv_steps: int,
+):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)  # (bq, D)
+    k = k_ref[0].astype(jnp.float32)  # (bk, D)
+    v = v_ref[0].astype(jnp.float32)  # (bk, D)
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (bq, bk)
+    s *= scale
+
+    qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    kpos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = kpos < seq_len  # padded kv tail is never attended
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[:, :1]  # (bq, 1)
+    m_cur = jnp.max(s, axis=1, keepdims=True)  # (bq, 1)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)  # rows that are fully masked give exp(NEG_INF-m)=0
+    corr = jnp.exp(m_prev - m_new)  # (bq, 1)
+    l_new = corr * l_scr[:, :1] + jnp.sum(p, axis=1, keepdims=True)
+    acc_scr[...] = corr * acc_scr[...] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_scr[...] = jnp.broadcast_to(m_new, m_scr.shape)
+    l_scr[...] = jnp.broadcast_to(l_new, l_scr.shape)
+
+    @pl.when(ki == kv_steps - 1)
+    def _finalize():
+        l = l_scr[:, :1]
+        l = jnp.where(l == 0.0, 1.0, l)  # fully-masked rows -> zeros, not NaN
+        o_ref[0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("group", "causal", "window", "scale", "seq_len", "bq", "bk", "interpret"),
+)
+def flash_attention_bhsd(
+    q: jnp.ndarray,  # (BH, S, D)
+    k: jnp.ndarray,  # (BKVH, S, D)
+    v: jnp.ndarray,  # (BKVH, S, D)
+    group: int,  # q heads per kv head (BH == BKVH * group)
+    scale: float,
+    causal: bool = True,
+    window: int | None = None,
+    seq_len: int | None = None,  # true (unpadded) length; default = S
+    bq: int = DEFAULT_BQ,
+    bk: int = DEFAULT_BK,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    from jax.experimental.pallas import tpu as pltpu
+
+    bh, s, d = q.shape
+    assert s % bq == 0 and s % bk == 0, (s, bq, bk)
+    kv_steps = s // bk
+    grid = (bh, s // bq, kv_steps)
+    kernel = functools.partial(
+        _flash_kernel,
+        scale=scale,
+        causal=causal,
+        window=window,
+        seq_len=s if seq_len is None else seq_len,
+        bq=bq,
+        bk=bk,
+        kv_steps=kv_steps,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda h, qi, ki: (h, qi, 0)),
+            pl.BlockSpec((1, bk, d), lambda h, qi, ki, grp=group: (h // grp, ki, 0)),
+            pl.BlockSpec((1, bk, d), lambda h, qi, ki, grp=group: (h // grp, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda h, qi, ki: (h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 128), jnp.float32),
+            pltpu.VMEM((bq, 128), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for blockwise flash attention."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def attention_ref(
+    q: jnp.ndarray,  # (B, H, S, D)
+    k: jnp.ndarray,  # (B, KVH, S, D)
+    v: jnp.ndarray,  # (B, KVH, S, D)
+    causal: bool = True,
+    window: int | None = None,  # sliding-window size (None = full)
+    scale: float | None = None,
+) -> jnp.ndarray:
+    b, h, s, d = q.shape
+    kvh = k.shape[1]
+    group = h // kvh
+    if scale is None:
+        scale = d**-0.5
+    kx = jnp.repeat(k, group, axis=1)
+    vx = jnp.repeat(v, group, axis=1)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), kx.astype(jnp.float32)) * scale
+    qpos = jnp.arange(s)[:, None]
+    kpos = jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), dtype=bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask, logits, -1e30)
+    probs = jnp.exp(logits - logits.max(axis=-1, keepdims=True))
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, vx.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,1 @@
+from repro.kernels.fused_preproc.ops import fused_resize_normalize  # noqa: F401

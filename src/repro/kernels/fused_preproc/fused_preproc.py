@@ -1,0 +1,67 @@
+"""Fused resize + normalize + layout Pallas TPU kernel.
+
+TPU adaptation of SMOL's §6.2 fusion product.  Bilinear resize is expressed
+as two *matmuls* against precomputed interpolation matrices:
+
+    out_c = (R_y @ X_c @ R_x^T) * scale_c + bias_c
+
+R_y is (OH, H) with exactly two nonzeros per row (the bilinear weights),
+R_x likewise (OW, W).  On TPU this turns a gather-heavy resample into MXU
+work, and the per-channel affine (the folded ToFloat+Normalize from the DAG
+optimizer, ops.FusedElementwise._folded) rides along in the same VMEM pass.
+The kernel consumes *planar* (C, H, W) input — exactly what the split JPEG
+decode path (kernels/idct) produces — so the ChannelsFirst layout change is
+absorbed structurally rather than as a transpose.
+
+Grid: (C, OH/TILE_OH).  Blocks: X one full plane (1, H, W); R_y a
+(TILE_OH, H) row stripe; R_x^T shared (W, OW); per-channel scale/bias as
+(1, 1) scalar blocks indexed by the channel grid coordinate.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_TILE_OH = 128
+
+
+def _kernel(x_ref, ry_ref, rxt_ref, scale_ref, bias_ref, o_ref):
+    xc = x_ref[0]  # (H, W)
+    y = jnp.dot(ry_ref[...], xc, preferred_element_type=jnp.float32)  # (TILE_OH, W)
+    z = jnp.dot(y, rxt_ref[...], preferred_element_type=jnp.float32)  # (TILE_OH, OW)
+    o_ref[0] = z * scale_ref[0, 0] + bias_ref[0, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("tile_oh", "interpret"))
+def fused_resize_normalize_planar(
+    x: jnp.ndarray,  # (C, H, W) float32
+    ry: jnp.ndarray,  # (OH_padded, H) float32
+    rxt: jnp.ndarray,  # (W, OW) float32
+    scale: jnp.ndarray,  # (1, C) float32
+    bias: jnp.ndarray,  # (1, C) float32
+    tile_oh: int = DEFAULT_TILE_OH,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    c, h, w = x.shape
+    oh_pad = ry.shape[0]
+    ow = rxt.shape[1]
+    assert oh_pad % tile_oh == 0, (oh_pad, tile_oh)
+    grid = (c, oh_pad // tile_oh)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, h, w), lambda ci, oi: (ci, 0, 0)),
+            pl.BlockSpec((tile_oh, h), lambda ci, oi: (oi, 0)),
+            pl.BlockSpec((w, ow), lambda ci, oi: (0, 0)),
+            pl.BlockSpec((1, 1), lambda ci, oi: (0, ci)),
+            pl.BlockSpec((1, 1), lambda ci, oi: (0, ci)),
+        ],
+        out_specs=pl.BlockSpec((1, tile_oh, ow), lambda ci, oi: (ci, oi, 0)),
+        out_shape=jax.ShapeDtypeStruct((c, oh_pad, ow), jnp.float32),
+        interpret=interpret,
+    )(x, ry, rxt, scale, bias)

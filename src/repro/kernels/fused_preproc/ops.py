@@ -1,0 +1,60 @@
+"""Public wrapper for the fused resize+normalize kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.fused_preproc.fused_preproc import (
+    DEFAULT_TILE_OH,
+    fused_resize_normalize_planar,
+)
+
+
+@functools.lru_cache(maxsize=64)
+def _interp_matrix(in_dim: int, out_dim: int) -> np.ndarray:
+    """(out_dim, in_dim) bilinear interpolation matrix, half-pixel centers.
+
+    Exactly two nonzeros per row; matches ops._bilinear_resize."""
+    s = (np.arange(out_dim, dtype=np.float64) + 0.5) * (in_dim / out_dim) - 0.5
+    s = np.clip(s, 0.0, in_dim - 1.0)
+    i0 = np.floor(s).astype(np.int64)
+    i1 = np.minimum(i0 + 1, in_dim - 1)
+    w1 = s - i0
+    mat = np.zeros((out_dim, in_dim), dtype=np.float32)
+    rows = np.arange(out_dim)
+    mat[rows, i0] += (1.0 - w1).astype(np.float32)
+    mat[rows, i1] += w1.astype(np.float32)
+    return mat
+
+
+def fused_resize_normalize(
+    x: np.ndarray | jnp.ndarray,  # (C, H, W) float input planes
+    out_h: int,
+    out_w: int,
+    scale: np.ndarray,  # (C,) folded multiplier (e.g. 1/255/std)
+    bias: np.ndarray,  # (C,) folded offset (e.g. -mean/std)
+    tile_oh: int = DEFAULT_TILE_OH,
+    interpret: bool = True,  # CPU container default; False on real TPU
+) -> jnp.ndarray:
+    """Resize (C,H,W) -> (C,out_h,out_w) bilinearly and apply per-channel
+    affine, all in one fused VMEM pass."""
+    x = jnp.asarray(x, dtype=jnp.float32)
+    c, h, w = x.shape
+    tile_oh = min(tile_oh, max(8, 1 << (out_h - 1).bit_length()))
+    oh_pad = -(-out_h // tile_oh) * tile_oh
+    ry = np.zeros((oh_pad, h), dtype=np.float32)
+    ry[:out_h] = _interp_matrix(h, out_h)
+    rxt = np.ascontiguousarray(_interp_matrix(w, out_w).T)
+    out = fused_resize_normalize_planar(
+        x,
+        jnp.asarray(ry),
+        jnp.asarray(rxt),
+        jnp.asarray(scale, dtype=jnp.float32).reshape(1, c),
+        jnp.asarray(bias, dtype=jnp.float32).reshape(1, c),
+        tile_oh=tile_oh,
+        interpret=interpret,
+    )
+    return out[:, :out_h, :]

@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for the fused resize+normalize kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def fused_resize_normalize_ref(
+    x: jnp.ndarray,  # (C, H, W) float32 planes
+    out_h: int,
+    out_w: int,
+    scale: jnp.ndarray,  # (C,)
+    bias: jnp.ndarray,  # (C,)
+) -> jnp.ndarray:
+    """Half-pixel-center bilinear resize each plane, then out*scale + bias.
+
+    Identical resampling math to preprocessing.ops._bilinear_resize.
+    """
+    c, h, w = x.shape
+    ys = (jnp.arange(out_h, dtype=jnp.float32) + 0.5) * (h / out_h) - 0.5
+    xs = (jnp.arange(out_w, dtype=jnp.float32) + 0.5) * (w / out_w) - 0.5
+    ys = jnp.clip(ys, 0.0, h - 1.0)
+    xs = jnp.clip(xs, 0.0, w - 1.0)
+    y0 = jnp.floor(ys).astype(jnp.int32)
+    x0 = jnp.floor(xs).astype(jnp.int32)
+    y1 = jnp.minimum(y0 + 1, h - 1)
+    x1 = jnp.minimum(x0 + 1, w - 1)
+    wy = (ys - y0)[None, :, None]
+    wx = (xs - x0)[None, None, :]
+    a = x[:, y0][:, :, x0]
+    b = x[:, y0][:, :, x1]
+    cc = x[:, y1][:, :, x0]
+    d = x[:, y1][:, :, x1]
+    top = a + (b - a) * wx
+    bot = cc + (d - cc) * wx
+    out = top + (bot - top) * wy
+    return out * scale[:, None, None] + bias[:, None, None]

@@ -1,0 +1,1 @@
+from repro.kernels.idct.ops import dequant_idct  # noqa: F401

@@ -1,0 +1,39 @@
+"""Public wrapper for the fused dequantize+IDCT kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.idct.idct import DEFAULT_TILE, dequant_idct_tiles
+from repro.preprocessing import dct as dct_np
+
+
+@functools.lru_cache(maxsize=16)
+def _m2q_t(qtable_bytes: bytes) -> np.ndarray:
+    """(kron(C^T, C^T) @ diag(q))^T for a given quant table (cached)."""
+    q = np.frombuffer(qtable_bytes, dtype=np.int32).reshape(8, 8)
+    ct = np.asarray(dct_np.DCT_MAT.T, dtype=np.float64)
+    m2 = np.kron(ct, ct)  # row-major vec: vec(C^T X C) = (C^T ⊗ C^T) vec(X)
+    m2q = m2 * q.reshape(-1)[None, :]  # fold dequantization into the transform
+    return np.ascontiguousarray(m2q.T).astype(np.float32)
+
+
+def dequant_idct(
+    coeffs: np.ndarray | jnp.ndarray,  # (N, 8, 8) quantized coefficients
+    qtable: np.ndarray,  # (8, 8) int quantization table
+    tile: int = DEFAULT_TILE,
+    interpret: bool = True,  # CPU container default; False on real TPU
+) -> jnp.ndarray:
+    """Dequantize + 2-D IDCT a stack of 8x8 blocks.  Returns (N, 8, 8) f32
+    (level-shifted pixels; caller adds 128)."""
+    n = coeffs.shape[0]
+    flat = jnp.asarray(coeffs, dtype=jnp.float32).reshape(n, 64)
+    pad = (-n) % tile
+    if pad:
+        flat = jnp.pad(flat, ((0, pad), (0, 0)))
+    m2q_t = jnp.asarray(_m2q_t(np.ascontiguousarray(qtable, dtype=np.int32).tobytes()))
+    out = dequant_idct_tiles(flat, m2q_t, tile=tile, interpret=interpret)
+    return out[:n].reshape(n, 8, 8)

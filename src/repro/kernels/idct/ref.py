@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the dequantize+IDCT kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.preprocessing import dct as dct_np
+
+DCT_MAT = jnp.asarray(np.asarray(dct_np.DCT_MAT, dtype=np.float32))
+
+
+def dequant_idct_ref(coeffs: jnp.ndarray, qtable: jnp.ndarray) -> jnp.ndarray:
+    """coeffs: (N, 8, 8) quantized DCT coefficients (any numeric dtype).
+    qtable: (8, 8).  Returns (N, 8, 8) float32 pixel blocks (level-shifted,
+    i.e. still centered on 0; +128 happens downstream)."""
+    deq = coeffs.astype(jnp.float32) * qtable.astype(jnp.float32)
+    return DCT_MAT.T @ deq @ DCT_MAT

@@ -1,0 +1,156 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape)
+on the production meshes, and extract the roofline inputs.
+
+The two lines above MUST run before any other import — jax locks the
+device count at first initialization.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch internlm2-1.8b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--mesh single|multi|both]
+    PYTHONPATH=src python -m repro.launch.dryrun --all --out experiments/dryrun
+"""
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro import configs  # noqa: E402
+from repro.configs.shapes import SHAPES  # noqa: E402
+from repro.distributed import sharding as shmod  # noqa: E402
+from repro.launch import hlo_analysis  # noqa: E402
+from repro.launch.mesh import make_production_mesh, rules_for  # noqa: E402
+from repro.launch.specs import build_cell  # noqa: E402
+
+# TPU v5e hardware constants (per chip) for the roofline terms.
+PEAK_FLOPS_BF16 = 197e12
+HBM_BW = 819e9
+ICI_BW_PER_LINK = 50e9
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str | None) -> dict:
+    cfg = configs.get_config(arch)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = 1
+    for _, v in dict(mesh.shape).items():
+        chips *= v
+    rec: dict = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": chips,
+    }
+    t0 = time.time()
+    with shmod.use_rules(rules_for(multi_pod)), jax.set_mesh(mesh):
+        spec = build_cell(cfg, shape_name, mesh)
+        jitted = jax.jit(
+            spec.fn,
+            in_shardings=spec.in_shardings,
+            donate_argnums=spec.donate_argnums,
+        )
+        lowered = jitted.lower(*spec.args)
+        rec["lower_seconds"] = round(time.time() - t0, 1)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_seconds"] = round(time.time() - t1, 1)
+
+    mem = compiled.memory_analysis()
+    rec["memory"] = {
+        "argument_bytes": int(mem.argument_size_in_bytes),
+        "output_bytes": int(mem.output_size_in_bytes),
+        "temp_bytes": int(mem.temp_size_in_bytes),
+        "alias_bytes": int(mem.alias_size_in_bytes),
+        "peak_estimate_bytes": int(
+            mem.argument_size_in_bytes + mem.output_size_in_bytes + mem.temp_size_in_bytes
+            - mem.alias_size_in_bytes
+        ),
+    }
+    ca = compiled.cost_analysis() or {}
+    rec["xla_cost_analysis"] = {
+        "flops_unrolled_once": float(ca.get("flops", 0.0)),
+        "bytes_accessed_unrolled_once": float(ca.get("bytes accessed", 0.0)),
+    }
+
+    # Hierarchical HLO analysis (per-device totals with loop trip counts).
+    summary = hlo_analysis.analyze(compiled.as_text())
+    rec["hlo"] = summary.to_json()
+
+    # Roofline terms (seconds).  The SPMD module is the per-device program,
+    # so per-device quantities divide by per-chip peaks directly — this
+    # equals the assignment's global/(chips x peak) form.
+    compute_s = summary.dot_flops / PEAK_FLOPS_BF16
+    memory_s = summary.traffic_bytes / HBM_BW
+    collective_s = summary.total_collective_bytes / ICI_BW_PER_LINK
+    dominant = max(
+        ("compute", compute_s), ("memory", memory_s), ("collective", collective_s),
+        key=lambda kv: kv[1],
+    )[0]
+    rec["roofline"] = {
+        "compute_seconds": compute_s,
+        "memory_seconds": memory_s,
+        "collective_seconds": collective_s,
+        "dominant": dominant,
+    }
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        fn = os.path.join(out_dir, f"{arch}__{shape_name}__{rec['mesh']}.json")
+        with open(fn, "w") as f:
+            json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=configs.ARCH_NAMES)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="both")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    cells: list[tuple[str, str]] = []
+    if args.all:
+        for arch in configs.ARCH_NAMES:
+            for shape in SHAPES:
+                cells.append((arch, shape))
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required unless --all")
+        cells = [(args.arch, args.shape)]
+
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    failures = 0
+    for arch, shape in cells:
+        skip = configs.cell_is_skipped(arch, shape)
+        if skip:
+            print(f"SKIP {arch} x {shape}: {skip}")
+            continue
+        for multi in meshes:
+            tag = f"{arch} x {shape} x {'2x16x16' if multi else '16x16'}"
+            try:
+                rec = run_cell(arch, shape, multi, args.out)
+                r = rec["roofline"]
+                print(
+                    f"OK {tag}: compile={rec['compile_seconds']}s "
+                    f"compute={r['compute_seconds']*1e3:.2f}ms "
+                    f"memory={r['memory_seconds']*1e3:.2f}ms "
+                    f"collective={r['collective_seconds']*1e3:.2f}ms "
+                    f"dominant={r['dominant']} "
+                    f"mem/dev={rec['memory']['peak_estimate_bytes']/2**30:.2f}GiB",
+                    flush=True,
+                )
+            except Exception as e:  # noqa: BLE001 — report and continue
+                failures += 1
+                print(f"FAIL {tag}: {type(e).__name__}: {e}", flush=True)
+                traceback.print_exc()
+    if failures:
+        raise SystemExit(f"{failures} cell(s) failed")
+
+
+if __name__ == "__main__":
+    main()

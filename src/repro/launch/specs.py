@@ -1,0 +1,295 @@
+"""ShapeDtypeStruct input specs + sharding assignments per (arch, shape).
+
+Everything here is allocation-free: parameters and caches come from
+``jax.eval_shape`` over the real init functions, so the dry-run lowers the
+exact program that training/serving executes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.shapes import SHAPES, InputShape
+from repro.distributed import sharding as shmod
+from repro.distributed.zero import zero_pspecs
+from repro.models import decode as D
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.serving.kv_cache import CachePolicy, choose_cache_policy
+from repro.training.optimizer import adamw_init
+from repro.training.train_loop import TrainConfig, make_train_step
+
+
+def _struct(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _cast_tree(tree, dtype):
+    def one(s):
+        if jnp.issubdtype(s.dtype, jnp.floating):
+            return jax.ShapeDtypeStruct(s.shape, dtype)
+        return s
+
+    return jax.tree.map(one, tree)
+
+
+def param_structs(cfg: ModelConfig, dtype=jnp.float32):
+    tree = jax.eval_shape(lambda: T.init_lm(cfg, jax.random.PRNGKey(0)))
+    return _cast_tree(tree, dtype)
+
+
+def named(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+# Per-device weight budget above which parameters get additional data-axis
+# (FSDP/ZeRO-3-style) sharding: XLA all-gathers them layer-by-layer.
+FSDP_THRESHOLD_BYTES = 4 << 30
+
+
+def maybe_fsdp_pspecs(cfg: ModelConfig, params, pspecs, mesh, bytes_per_param: int):
+    tp = dict(mesh.shape)["model"]
+    per_dev = cfg.param_count() * bytes_per_param / tp
+    if per_dev <= FSDP_THRESHOLD_BYTES:
+        return pspecs, False
+    return zero_pspecs(params, pspecs, mesh), True
+
+
+def batch_pspec() -> P:
+    rules = shmod.get_rules() or shmod.SINGLE_POD_RULES
+    return P(rules["batch"])
+
+
+@dataclasses.dataclass
+class LoweringSpec:
+    """Everything jax.jit().lower() needs for one dry-run cell."""
+
+    fn: Any
+    args: tuple  # ShapeDtypeStructs
+    in_shardings: tuple
+    donate_argnums: tuple = ()
+
+
+# ------------------------------------------------------------------ train
+MICRO_BATCH_PER_DEVICE = 4  # activation-memory budget knob
+
+
+def _data_axis_size(mesh) -> int:
+    rules = shmod.get_rules() or shmod.SINGLE_POD_RULES
+    b_axes = rules["batch"]
+    size = 1
+    for ax in (b_axes if isinstance(b_axes, tuple) else (b_axes,)):
+        if ax:
+            size *= dict(mesh.shape)[ax]
+    return size
+
+
+def train_cell(cfg: ModelConfig, shape: InputShape, mesh) -> LoweringSpec:
+    data_size = _data_axis_size(mesh)
+    accum = max(1, shape.global_batch // (data_size * MICRO_BATCH_PER_DEVICE))
+    micro = shape.global_batch // accum
+    tcfg = TrainConfig(grad_accum=accum)
+
+    params = param_structs(cfg, jnp.float32)
+    opt = jax.eval_shape(adamw_init, params)
+    state = {"params": params, "opt": opt, "step": _struct((), jnp.int32)}
+
+    pspecs = shmod.param_pspecs(params)
+    mspecs = zero_pspecs(params, pspecs, mesh)
+    pspecs, _ = maybe_fsdp_pspecs(cfg, params, pspecs, mesh, bytes_per_param=4)
+    step_fn = make_train_step(cfg, tcfg, grad_pspecs=mspecs)
+    state_specs = {
+        "params": pspecs,
+        "opt": {"m": mspecs, "v": mspecs, "count": P()},
+        "step": P(),
+    }
+
+    bp = batch_pspec()
+
+    def bshape(*tail):
+        return (accum, micro, *tail) if accum > 1 else (micro, *tail)
+
+    def bspec(*tail):
+        lead = (None,) if accum > 1 else ()
+        return P(*(lead + tuple(bp) + tail))
+
+    n_vis = cfg.num_vision_tokens if cfg.frontend == "vit_stub" else 0
+    batch: dict[str, Any] = {
+        "tokens": _struct(bshape(shape.seq_len + 1 - n_vis), jnp.int32)
+    }
+    batch_specs: dict[str, Any] = {"tokens": bspec()}
+    if n_vis:
+        batch["vision_embeds"] = _struct(bshape(n_vis, cfg.d_model), jnp.bfloat16)
+        batch_specs["vision_embeds"] = bspec(None, None)
+    if cfg.is_encdec:
+        batch["encoder_frames"] = _struct(
+            bshape(cfg.encoder_seq_len, cfg.d_model), jnp.bfloat16
+        )
+        batch_specs["encoder_frames"] = bspec(None, None)
+
+    return LoweringSpec(
+        fn=step_fn,
+        args=(state, batch),
+        in_shardings=(named(mesh, state_specs), named(mesh, batch_specs)),
+        donate_argnums=(0,),
+    )
+
+
+# ---------------------------------------------------------------- prefill
+def prefill_cell(cfg: ModelConfig, shape: InputShape, mesh) -> LoweringSpec:
+    rules = shmod.get_rules() or shmod.SINGLE_POD_RULES
+    data_size = 1
+    b_axes = rules["batch"]
+    for ax in (b_axes if isinstance(b_axes, tuple) else (b_axes,)):
+        if ax:
+            data_size *= dict(mesh.shape)[ax]
+    policy = choose_cache_policy(cfg, dict(mesh.shape)["model"], shape.global_batch, data_size)
+
+    params = param_structs(cfg, jnp.bfloat16)
+    pspecs = shmod.param_pspecs(params)
+    pspecs, _ = maybe_fsdp_pspecs(cfg, params, pspecs, mesh, bytes_per_param=2)
+
+    n_vis = cfg.num_vision_tokens if cfg.frontend == "vit_stub" else 0
+    tokens = _struct((shape.global_batch, shape.seq_len - n_vis), jnp.int32)
+    max_len = shape.seq_len
+
+    kw_structs: dict[str, Any] = {}
+    kw_specs: dict[str, Any] = {}
+    bp = batch_pspec()
+    if n_vis:
+        kw_structs["vision_embeds"] = _struct((shape.global_batch, n_vis, cfg.d_model), jnp.bfloat16)
+        kw_specs["vision_embeds"] = P(*(tuple(bp) + (None, None)))
+    if cfg.is_encdec:
+        kw_structs["encoder_frames"] = _struct(
+            (shape.global_batch, cfg.encoder_seq_len, cfg.d_model), jnp.bfloat16
+        )
+        kw_specs["encoder_frames"] = P(*(tuple(bp) + (None, None)))
+
+    def prefill_fn(params, tokens, **kw):
+        return D.prefill(
+            params, cfg, tokens, max_len=max_len, kv_repeat=policy.kv_repeat, **kw
+        )
+
+    args = (params, tokens)
+    in_sh = (named(mesh, pspecs), NamedSharding(mesh, bp))
+    if kw_structs:
+        return LoweringSpec(
+            fn=functools.partial(_prefill_kw, prefill_fn),
+            args=(params, tokens, kw_structs),
+            in_shardings=(named(mesh, pspecs), NamedSharding(mesh, bp), named(mesh, kw_specs)),
+        )
+    return LoweringSpec(fn=prefill_fn, args=args, in_shardings=in_sh)
+
+
+def _prefill_kw(prefill_fn, params, tokens, kw):
+    return prefill_fn(params, tokens, **kw)
+
+
+# ----------------------------------------------------------------- decode
+def cache_structs_and_specs(
+    cfg: ModelConfig, shape: InputShape, policy: CachePolicy, mesh
+):
+    cache = jax.eval_shape(
+        lambda: D.init_cache(
+            cfg, shape.global_batch, shape.seq_len, kv_repeat=policy.kv_repeat
+        )
+    )
+    rules = shmod.get_rules() or shmod.SINGLE_POD_RULES
+    data_axes = rules["batch"]
+    if not isinstance(data_axes, tuple):
+        data_axes = (data_axes,)
+
+    def seq_mesh_axes():
+        out = []
+        for logical in policy.seq_axes:
+            if logical == "data":
+                out.extend(a for a in data_axes if a)
+            else:
+                out.append("model")
+        return tuple(out)
+
+    semantic_to_axes = {
+        "layers": None,
+        "batch": (data_axes if len(data_axes) > 1 else data_axes[0])
+        if policy.shard_batch
+        else None,
+        "seq": (lambda sa: (sa if len(sa) > 1 else sa[0]) if sa else None)(seq_mesh_axes()),
+        "kv_heads": "model" if policy.shard_heads else None,
+        "head": None,
+        "rank": None,
+        "inner": "model",
+        "state": None,
+        "window": None,
+        "rec_heads": "model",
+        "hd": None,
+        "enc_seq": None,
+    }
+
+    specs = {}
+    for key, leaf in cache.items():
+        sem = D.CACHE_DIM_SEMANTICS.get(key, (None,) * leaf.ndim)
+        axes = []
+        for dim, s in zip(leaf.shape, sem):
+            ax = semantic_to_axes.get(s) if s else None
+            if ax is None:
+                axes.append(None)
+                continue
+            size = 1
+            for a in (ax if isinstance(ax, tuple) else (ax,)):
+                size *= dict(mesh.shape)[a]
+            axes.append(ax if dim % size == 0 and dim >= size else None)
+        specs[key] = P(*axes)
+    return cache, specs
+
+
+def decode_cell(cfg: ModelConfig, shape: InputShape, mesh) -> LoweringSpec:
+    rules = shmod.get_rules() or shmod.SINGLE_POD_RULES
+    b_axes = rules["batch"]
+    data_size = 1
+    for ax in (b_axes if isinstance(b_axes, tuple) else (b_axes,)):
+        if ax:
+            data_size *= dict(mesh.shape)[ax]
+    policy = choose_cache_policy(cfg, dict(mesh.shape)["model"], shape.global_batch, data_size)
+
+    params = param_structs(cfg, jnp.bfloat16)
+    pspecs = shmod.param_pspecs(params)
+    pspecs, _ = maybe_fsdp_pspecs(cfg, params, pspecs, mesh, bytes_per_param=2)
+    cache, cache_specs = cache_structs_and_specs(cfg, shape, policy, mesh)
+
+    token = _struct((shape.global_batch,), jnp.int32)
+    lengths = _struct((shape.global_batch,), jnp.int32)
+    bspec = batch_pspec() if shape.global_batch >= data_size else P()
+
+    def serve_step(params, token, cache, lengths):
+        return D.decode_step(params, cfg, token, cache, lengths, kv_repeat=policy.kv_repeat)
+
+    return LoweringSpec(
+        fn=serve_step,
+        args=(params, token, cache, lengths),
+        in_shardings=(
+            named(mesh, pspecs),
+            NamedSharding(mesh, bspec),
+            named(mesh, cache_specs),
+            NamedSharding(mesh, bspec),
+        ),
+        donate_argnums=(2,),
+    )
+
+
+def build_cell(cfg: ModelConfig, shape_name: str, mesh) -> LoweringSpec:
+    shape = SHAPES[shape_name]
+    if shape.kind == "train":
+        return train_cell(cfg, shape, mesh)
+    if shape.kind == "prefill":
+        return prefill_cell(cfg, shape, mesh)
+    return decode_cell(cfg, shape, mesh)

@@ -1,0 +1,62 @@
+"""Training driver.
+
+    PYTHONPATH=src python -m repro.launch.train --arch xlstm-125m --steps 50 \
+        --smoke --batch 8 --seq 128 --checkpoint-dir /tmp/ckpt
+
+Runs the real training loop (checkpoint/restart, preemption handling,
+straggler accounting) on whatever devices are present.  On the production
+pod the same step function lowers through launch/dryrun.py.
+"""
+
+from __future__ import annotations
+
+import argparse
+import logging
+
+import jax
+
+from repro import configs
+from repro.data.pipeline import PrefetchIterator, ShardedBatchSource, synthetic_lm_batch_fn
+from repro.distributed.fault_tolerance import PreemptionHandler
+from repro.training.optimizer import AdamWConfig
+from repro.training.train_loop import TrainConfig, train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=configs.ARCH_NAMES, required=True)
+    ap.add_argument("--smoke", action="store_true", help="use the reduced config")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--checkpoint-dir", default=None)
+    ap.add_argument("--checkpoint-every", type=int, default=50)
+    args = ap.parse_args()
+
+    logging.basicConfig(level=logging.INFO, format="%(asctime)s %(name)s %(message)s")
+    cfg = configs.get_smoke_config(args.arch) if args.smoke else configs.get_config(args.arch)
+    tcfg = TrainConfig(
+        optimizer=AdamWConfig(lr=args.lr),
+        warmup_steps=max(1, args.steps // 10),
+        total_steps=args.steps,
+        checkpoint_dir=args.checkpoint_dir,
+        checkpoint_every=args.checkpoint_every,
+    )
+    src = ShardedBatchSource(
+        synthetic_lm_batch_fn(cfg.vocab_size, args.batch, args.seq),
+        seed=0,
+        host_index=jax.process_index(),
+        host_count=jax.process_count(),
+    )
+    it = PrefetchIterator(src)
+    ph = PreemptionHandler(install=True)
+    try:
+        state, history = train(cfg, tcfg, it, num_steps=args.steps, preemption=ph)
+    finally:
+        it.close()
+    print(f"final loss: {history[-1]['loss']:.4f} after {len(history)} steps")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,505 @@
+"""Serving paths: cache init, prefill, and single-token decode.
+
+Caches are dict pytrees with layer-stacked leaves (leading dim L) so the
+decode step scans over (params, cache) jointly and emits the updated cache
+as scan outputs.  Families:
+
+  gqa    : k/v (L, B, S, KVHe, hd)        — KVHe = kv heads after TP
+                                            replication (serving/kv_cache)
+  mla    : c_kv (L, B, S, R), k_rope (L, B, S, rd)  — compressed cache;
+                                            decode uses the ABSORBED form
+  hybrid : gqa cache + ssm/conv states
+  xlstm  : mLSTM (C, n) + sLSTM (h, c, n, m) states — O(1) in context
+  encdec : gqa self-attn cache + precomputed cross K/V (read-only)
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from repro.models import layers as L
+from repro.models import ssm as ssm_mod
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+
+
+def kv_cache_heads(cfg: ModelConfig, kv_repeat: int = 1) -> int:
+    return cfg.num_kv_heads * kv_repeat
+
+
+def init_cache(
+    cfg: ModelConfig, batch: int, max_len: int, kv_repeat: int = 1, dtype=jnp.bfloat16
+) -> dict:
+    """Zero-filled cache pytree for ``batch`` sequences of up to ``max_len``."""
+    n_main = cfg.num_layers - (cfg.first_dense_layers if cfg.is_moe else 0)
+    n_all = cfg.num_layers
+    hd = cfg.resolved_head_dim
+    kvh = kv_cache_heads(cfg, kv_repeat)
+    cache: dict[str, Any] = {}
+    fam = T.main_block_kind(cfg)
+    if fam == "xlstm":
+        d = cfg.d_model
+        mh = cfg.num_heads
+        mhd = 2 * d // mh
+        cache["mlstm_c"] = jnp.zeros((n_all, batch, mh, mhd, mhd), jnp.float32)
+        cache["mlstm_n"] = jnp.zeros((n_all, batch, mh, mhd), jnp.float32)
+        for k in ("slstm_h", "slstm_c", "slstm_n", "slstm_m"):
+            cache[k] = jnp.zeros((n_all, batch, d), jnp.float32)
+        return cache
+    if cfg.attn_type == "mla":
+        cache["c_kv"] = jnp.zeros((n_main, batch, max_len, cfg.kv_lora_rank), dtype)
+        cache["k_rope"] = jnp.zeros((n_main, batch, max_len, cfg.rope_head_dim), dtype)
+    else:
+        cache["k"] = jnp.zeros((n_all, batch, max_len, kvh, hd), dtype)
+        cache["v"] = jnp.zeros((n_all, batch, max_len, kvh, hd), dtype)
+    if cfg.is_moe and cfg.first_dense_layers and cfg.attn_type == "mla":
+        # dense-prefix layers still use MLA attention -> own compressed cache
+        cache["prefix_c_kv"] = jnp.zeros(
+            (cfg.first_dense_layers, batch, max_len, cfg.kv_lora_rank), dtype
+        )
+        cache["prefix_k_rope"] = jnp.zeros(
+            (cfg.first_dense_layers, batch, max_len, cfg.rope_head_dim), dtype
+        )
+    if fam == "hybrid":
+        d_in = 2 * cfg.d_model
+        cache["ssm"] = jnp.zeros((n_all, batch, d_in, cfg.ssm_state), jnp.float32)
+        cache["conv"] = jnp.zeros((n_all, batch, cfg.ssm_conv - 1, d_in), dtype)
+    if cfg.is_encdec:
+        cache["cross_k"] = jnp.zeros(
+            (n_all, batch, cfg.encoder_seq_len, cfg.num_kv_heads, hd), dtype
+        )
+        cache["cross_v"] = jnp.zeros(
+            (n_all, batch, cfg.encoder_seq_len, cfg.num_kv_heads, hd), dtype
+        )
+    return cache
+
+
+# Semantic dimension labels per cache leaf; the launch layer maps these to
+# mesh axes given the per-cell CachePolicy (serving/kv_cache.py).
+CACHE_DIM_SEMANTICS: dict[str, tuple[str, ...]] = {
+    "k": ("layers", "batch", "seq", "kv_heads", "head"),
+    "v": ("layers", "batch", "seq", "kv_heads", "head"),
+    "c_kv": ("layers", "batch", "seq", "rank"),
+    "k_rope": ("layers", "batch", "seq", "rank"),
+    "prefix_c_kv": ("layers", "batch", "seq", "rank"),
+    "prefix_k_rope": ("layers", "batch", "seq", "rank"),
+    "ssm": ("layers", "batch", "inner", "state"),
+    "conv": ("layers", "batch", "window", "inner"),
+    "mlstm_c": ("layers", "batch", "rec_heads", "hd", "hd"),
+    "mlstm_n": ("layers", "batch", "rec_heads", "hd"),
+    "slstm_h": ("layers", "batch", "inner"),
+    "slstm_c": ("layers", "batch", "inner"),
+    "slstm_n": ("layers", "batch", "inner"),
+    "slstm_m": ("layers", "batch", "inner"),
+    "cross_k": ("layers", "batch", "enc_seq", "kv_heads", "head"),
+    "cross_v": ("layers", "batch", "enc_seq", "kv_heads", "head"),
+}
+
+
+# ------------------------------------------------------------------ helpers
+def _scatter_rows(cache, rows, lengths):
+    """cache (B, S, ...) <- rows (B, ...) at per-sequence positions."""
+    b = cache.shape[0]
+    return cache.at[jnp.arange(b), lengths].set(rows.astype(cache.dtype))
+
+
+def _scatter_rows_stacked(cache, l_idx, rows, lengths):
+    """cache (L, B, S, ...) <- rows (B, ...) at [l_idx, :, lengths].
+
+    Writes ONLY the new token's rows into the layer-stacked cache (perf
+    iteration H8): the cache lives in the decode scan's CARRY, so no
+    per-layer full-slice rewrite happens — the per-step write is O(B·row)
+    instead of O(B·S·row)."""
+    b = rows.shape[0]
+    return cache.at[jnp.full((b,), l_idx), jnp.arange(b), lengths].set(
+        rows.astype(cache.dtype)
+    )
+
+
+def _layer_slice(cache, l_idx):
+    return jax.lax.dynamic_index_in_dim(cache, l_idx, 0, keepdims=False)
+
+
+def _gqa_decode(p_attn, cfg, x, k_cache, v_cache, lengths, window, kv_repeat):
+    """x: (B, D); k/v_cache are this LAYER's (B, S, KVHe, hd) slices (scan
+    xs), updated in place via row scatter and returned as scan ys — the
+    structure XLA's buffer assignment aliases end-to-end (H8 note: a
+    carry-held stacked cache with traced layer indices measured 8.7x WORSE;
+    the xs/ys per-layer slicing is the aliasing-friendly form)."""
+    bsz, _ = x.shape
+    hd = cfg.resolved_head_dim
+    dt = x.dtype
+    q = (x @ p_attn["wq"].astype(dt)).reshape(bsz, cfg.num_heads, hd)
+    k = (x @ p_attn["wk"].astype(dt)).reshape(bsz, cfg.num_kv_heads, hd)
+    v = (x @ p_attn["wv"].astype(dt)).reshape(bsz, cfg.num_kv_heads, hd)
+    if cfg.qk_norm:
+        q = L.rmsnorm(q, p_attn["q_norm"]["scale"])
+        k = L.rmsnorm(k, p_attn["k_norm"]["scale"])
+    cos, sin = L.rope_cos_sin(lengths, hd, cfg.rope_theta)  # (B, hd/2)
+    q = L.apply_rope(q[:, None], cos[:, None], sin[:, None])[:, 0]
+    k = L.apply_rope(k[:, None], cos[:, None], sin[:, None])[:, 0]
+    if kv_repeat > 1:
+        k = jnp.repeat(k, kv_repeat, axis=1)
+        v = jnp.repeat(v, kv_repeat, axis=1)
+    k_cache = _scatter_rows(k_cache, k, lengths)
+    v_cache = _scatter_rows(v_cache, v, lengths)
+    out = L.decode_attention_jnp(q, k_cache, v_cache, lengths + 1, window=window)
+    out = out.reshape(bsz, cfg.num_heads * hd)
+    return out @ p_attn["wo"].astype(dt), k_cache, v_cache
+
+
+def _mla_decode(p_attn, cfg, x, ckv_cache, krope_cache, lengths):
+    """Absorbed-form MLA decode (DeepSeek-V2 inference scheme).
+
+    Attention runs directly in the compressed space: scores combine
+    q_nope.W_uk against c_kv and q_rope against k_rope; values are
+    reconstructed as (probs @ c_kv).W_uv.  Per-step FLOPs scale with
+    R + rope_hd instead of H*(nope+v).
+    """
+    bsz, _ = x.shape
+    dt = x.dtype
+    pos = lengths
+    q_nope, q_rope = L.mla_queries(p_attn, cfg, x[:, None, :], pos[:, None])
+    q_nope, q_rope = q_nope[:, 0], q_rope[:, 0]  # (B, H, nope) / (B, H, rd)
+    c_kv_new, k_rope_new = L.mla_compress(p_attn, cfg, x[:, None, :], pos[:, None])
+    ckv_cache = _scatter_rows(ckv_cache, c_kv_new[:, 0], lengths)
+    krope_cache = _scatter_rows(krope_cache, k_rope_new[:, 0], lengths)
+
+    w_b = p_attn["wkv_b"].astype(dt).reshape(
+        cfg.kv_lora_rank, cfg.num_heads, cfg.nope_head_dim + cfg.v_head_dim
+    )
+    w_uk = w_b[..., : cfg.nope_head_dim]  # (R, H, nope)
+    w_uv = w_b[..., cfg.nope_head_dim :]  # (R, H, v)
+
+    q_c = jnp.einsum("bhn,rhn->bhr", q_nope.astype(jnp.float32), w_uk.astype(jnp.float32))
+    with jax.named_scope("vmem_flash"):
+        scores = jnp.einsum("bhr,bsr->bhs", q_c, ckv_cache.astype(jnp.float32))
+        scores += jnp.einsum(
+            "bhr,bsr->bhs", q_rope.astype(jnp.float32), krope_cache.astype(jnp.float32)
+        )
+        scores *= (cfg.nope_head_dim + cfg.rope_head_dim) ** -0.5
+        mask = jnp.arange(ckv_cache.shape[1])[None, None, :] < (lengths + 1)[:, None, None]
+        scores = jnp.where(mask, scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1)
+        o_c = jnp.einsum("bhs,bsr->bhr", probs, ckv_cache.astype(jnp.float32))
+    out = jnp.einsum("bhr,rhv->bhv", o_c, w_uv.astype(jnp.float32)).astype(dt)
+    out = out.reshape(bsz, cfg.num_heads * cfg.v_head_dim)
+    return out @ p_attn["wo"].astype(dt), ckv_cache, krope_cache
+
+
+def _block_decode(p, cfg, kind, x, cache_l, flags, lengths, kv_repeat):
+    """One block, one token.  x: (B, D); ``cache_l`` is this layer's cache
+    slice (scan xs); the updated slice returns as scan ys."""
+    new_cache = dict(cache_l)
+    if kind == "xlstm":
+        h = L.apply_norm(p["pre_norm"], x, cfg.norm_type)
+
+        def do_slstm(h):
+            y, (sh, sc, sn, sm) = ssm_mod.slstm_step(
+                p["slstm"], h, (cache_l["slstm_h"], cache_l["slstm_c"], cache_l["slstm_n"], cache_l["slstm_m"])
+            )
+            return y, (sh, sc, sn, sm), (cache_l["mlstm_c"], cache_l["mlstm_n"])
+
+        def do_mlstm(h):
+            y, (c, n) = ssm_mod.mlstm_step(
+                p["mlstm"], h, cache_l["mlstm_c"], cache_l["mlstm_n"], cfg.num_heads
+            )
+            return y, (cache_l["slstm_h"], cache_l["slstm_c"], cache_l["slstm_n"], cache_l["slstm_m"]), (c, n)
+
+        if "is_slstm" in flags:
+            y, sl, ml = jax.lax.cond(flags["is_slstm"], do_slstm, do_mlstm, h)
+        else:
+            y, sl, ml = do_mlstm(h)
+        new_cache["slstm_h"], new_cache["slstm_c"], new_cache["slstm_n"], new_cache["slstm_m"] = sl
+        new_cache["mlstm_c"], new_cache["mlstm_n"] = ml
+        return x + y, new_cache
+
+    h = L.apply_norm(p["attn_norm"], x, cfg.norm_type)
+    is_local = flags.get("is_local")
+
+    if cfg.attn_type == "mla":
+        attn_out, new_cache["c_kv"], new_cache["k_rope"] = _mla_decode(
+            p["attn"], cfg, h, cache_l["c_kv"], cache_l["k_rope"], lengths
+        )
+    else:
+        if cfg.sliding_window is not None and is_local is not None:
+            def loc(args):
+                return _gqa_decode(p["attn"], cfg, args, cache_l["k"], cache_l["v"], lengths, cfg.sliding_window, kv_repeat)
+
+            def glob(args):
+                return _gqa_decode(p["attn"], cfg, args, cache_l["k"], cache_l["v"], lengths, None, kv_repeat)
+
+            attn_out, new_cache["k"], new_cache["v"] = jax.lax.cond(is_local, loc, glob, h)
+        else:
+            attn_out, new_cache["k"], new_cache["v"] = _gqa_decode(
+                p["attn"], cfg, h, cache_l["k"], cache_l["v"], lengths, cfg.sliding_window, kv_repeat
+            )
+
+    if kind == "hybrid":
+        m_out, (new_cache["ssm"], new_cache["conv"]) = ssm_mod.mamba_step(
+            p["mamba"], h, cache_l["ssm"], cache_l["conv"].astype(h.dtype), cfg.ssm_state
+        )
+        y = 0.5 * (
+            L.apply_norm(p["attn_out_norm"], attn_out, cfg.norm_type)
+            + L.apply_norm(p["mamba_out_norm"], m_out, cfg.norm_type)
+        )
+    else:
+        y = attn_out
+    x = x + y
+
+    h2 = L.apply_norm(p["mlp_norm"], x, cfg.norm_type)
+    if kind == "moe":
+        x = x + L.moe_apply(p["moe"], cfg, h2[:, None, :], cfg.mlp_act)[:, 0]
+    else:
+        x = x + L.mlp_apply(p["mlp"], h2, cfg.mlp_act)
+    return x, new_cache
+
+
+def _cross_decode(p_cross_l, cfg, x, cross_k, cross_v):
+    h = L.apply_norm(p_cross_l["norm"], x, cfg.norm_type)
+    bsz, _ = h.shape
+    hd = cfg.resolved_head_dim
+    dt = h.dtype
+    q = (h @ p_cross_l["attn"]["wq"].astype(dt)).reshape(bsz, cfg.num_heads, hd)
+    se = cross_k.shape[1]
+    lens = jnp.full((bsz,), se, jnp.int32)
+    out = L.decode_attention_jnp(q, cross_k, cross_v, lens)
+    out = out.reshape(bsz, cfg.num_heads * hd)
+    return x + out @ p_cross_l["attn"]["wo"].astype(dt)
+
+
+def decode_step(
+    params,
+    cfg: ModelConfig,
+    token: jnp.ndarray,  # (B,) int32
+    cache: dict,
+    lengths: jnp.ndarray,  # (B,) int32 — cache fill before this token
+    kv_repeat: int = 1,
+) -> tuple[jnp.ndarray, dict, jnp.ndarray]:
+    """One decode step.  Returns (logits (B, V), new cache, new lengths)."""
+    x = T.embed_tokens(params, cfg, token[:, None])[:, 0]  # (B, D)
+    x = shard(x, "batch", None)
+    flags_np = T.layer_flags(cfg)
+    flags = {k: jnp.asarray(v) for k, v in flags_np.items()}
+    kind = T.main_block_kind(cfg)
+
+    new_cache = dict(cache)
+
+    if cfg.is_moe and cfg.first_dense_layers and cfg.attn_type == "mla":
+        prefix_cache = {"c_kv": cache["prefix_c_kv"], "k_rope": cache["prefix_k_rope"]}
+
+        def pbody(carry, xs):
+            p_l, c_l = xs
+            out, nc = _block_decode(p_l, cfg, "dense_ffn", carry, c_l, {}, lengths, kv_repeat)
+            return out, nc
+
+        x, pc = jax.lax.scan(pbody, x, (params["dense_prefix"], prefix_cache))
+        new_cache["prefix_c_kv"], new_cache["prefix_k_rope"] = pc["c_kv"], pc["k_rope"]
+
+    main_keys = [
+        k
+        for k in cache
+        if not k.startswith("prefix_") and not k.startswith("cross_")
+    ]
+    main_cache = {k: cache[k] for k in main_keys}
+
+    if cfg.is_encdec:
+        def body(carry, xs):
+            p_l, cross_l, c_l, ck, cv = xs
+            out, nc = _block_decode(p_l, cfg, kind, carry, c_l, {}, lengths, kv_repeat)
+            out = _cross_decode(cross_l, cfg, out, ck, cv)
+            return out, nc
+
+        x, nc = jax.lax.scan(
+            body,
+            x,
+            (params["layers"], params["cross"], main_cache, cache["cross_k"], cache["cross_v"]),
+        )
+    else:
+        def body(carry, xs):
+            p_l, c_l, f_l = xs
+            out, nc = _block_decode(p_l, cfg, kind, carry, c_l, f_l, lengths, kv_repeat)
+            return out, nc
+
+        x, nc = jax.lax.scan(body, x, (params["layers"], main_cache, flags))
+    new_cache.update(nc)
+
+    logits = T.logits_from(params, cfg, x[:, None, :])[:, 0]
+    return logits, new_cache, lengths + 1
+
+
+# ------------------------------------------------------------------ prefill
+def _pad_cache_seq(arr: jnp.ndarray, max_len: int, dtype) -> jnp.ndarray:
+    """(B, S, ...) -> (B, max_len, ...) zero-padded."""
+    b, s = arr.shape[:2]
+    pad = [(0, 0), (0, max_len - s)] + [(0, 0)] * (arr.ndim - 2)
+    return jnp.pad(arr.astype(dtype), pad)
+
+
+def _block_prefill(p, cfg, kind, x, positions, flags, max_len, kv_repeat, cache_dtype):
+    """One block over the full prompt; returns (x, cache_l)."""
+    cache_l: dict[str, jnp.ndarray] = {}
+    if kind == "xlstm":
+        h = L.apply_norm(p["pre_norm"], x, cfg.norm_type)
+        bsz, _, d = x.shape
+        mh = cfg.num_heads
+        mhd = 2 * d // mh
+
+        def do_slstm(h):
+            y, (sh, sc, sn, sm) = ssm_mod.slstm_apply(p["slstm"], h, mh)
+            return y, (sh, sc, sn, sm), (
+                jnp.zeros((bsz, mh, mhd, mhd), jnp.float32),
+                jnp.zeros((bsz, mh, mhd), jnp.float32),
+            )
+
+        def do_mlstm(h):
+            y, (c, n) = ssm_mod.mlstm_apply(p["mlstm"], h, mh)
+            zeros = jnp.zeros((bsz, d), jnp.float32)
+            return y, (zeros, zeros, zeros, zeros), (c, n)
+
+        if "is_slstm" in flags:
+            y, sl, ml = jax.lax.cond(flags["is_slstm"], do_slstm, do_mlstm, h)
+        else:
+            y, sl, ml = do_mlstm(h)
+        cache_l["slstm_h"], cache_l["slstm_c"], cache_l["slstm_n"], cache_l["slstm_m"] = sl
+        cache_l["mlstm_c"], cache_l["mlstm_n"] = ml
+        return x + y, cache_l
+
+    h = L.apply_norm(p["attn_norm"], x, cfg.norm_type)
+    is_local = flags.get("is_local")
+
+    if cfg.attn_type == "mla":
+        b, s, _ = h.shape
+        q_nope, q_rope = L.mla_queries(p["attn"], cfg, h, positions)
+        c_kv, k_rope = L.mla_compress(p["attn"], cfg, h, positions)
+        k_nope, v = L.mla_expand_kv(p["attn"], cfg, c_kv)
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (b, s, cfg.num_heads, cfg.rope_head_dim))],
+            axis=-1,
+        )
+        scale = (cfg.nope_head_dim + cfg.rope_head_dim) ** -0.5
+        out = L.attention_scores_blockwise(q, k, v, causal=True, scale=scale)
+        out = out.reshape(b, s, cfg.num_heads * cfg.v_head_dim)
+        attn_out = out @ p["attn"]["wo"].astype(h.dtype)
+        cache_l["c_kv"] = _pad_cache_seq(c_kv, max_len, cache_dtype)
+        cache_l["k_rope"] = _pad_cache_seq(k_rope, max_len, cache_dtype)
+    else:
+        b, s, _ = h.shape
+        q, k, v = L.gqa_project_qkv(p["attn"], cfg, h, positions)
+
+        def attend(window):
+            return L.attention_scores_blockwise(q, k, v, causal=True, window=window)
+
+        if cfg.sliding_window is not None and is_local is not None:
+            out = jax.lax.cond(
+                is_local,
+                lambda _: attend(cfg.sliding_window),
+                lambda _: attend(None),
+                None,
+            )
+        else:
+            out = attend(cfg.sliding_window)
+        out = out.reshape(b, s, cfg.num_heads * cfg.resolved_head_dim)
+        attn_out = out @ p["attn"]["wo"].astype(h.dtype)
+        kc, vc = k, v
+        if kv_repeat > 1:
+            kc = jnp.repeat(kc, kv_repeat, axis=2)
+            vc = jnp.repeat(vc, kv_repeat, axis=2)
+        cache_l["k"] = _pad_cache_seq(kc, max_len, cache_dtype)
+        cache_l["v"] = _pad_cache_seq(vc, max_len, cache_dtype)
+
+    if kind == "hybrid":
+        m_out, (ssm_state, conv_state) = ssm_mod.mamba_apply(p["mamba"], h, cfg.ssm_state)
+        cache_l["ssm"] = ssm_state
+        cache_l["conv"] = conv_state.astype(cache_dtype)
+        y = 0.5 * (
+            L.apply_norm(p["attn_out_norm"], attn_out, cfg.norm_type)
+            + L.apply_norm(p["mamba_out_norm"], m_out, cfg.norm_type)
+        )
+    else:
+        y = attn_out
+    x = x + y
+    h2 = L.apply_norm(p["mlp_norm"], x, cfg.norm_type)
+    if kind == "moe":
+        x = x + L.moe_apply(p["moe"], cfg, h2, cfg.mlp_act)
+    elif kind == "dense_ffn":
+        x = x + L.mlp_apply(p["mlp"], h2, cfg.mlp_act)
+    else:
+        x = x + L.mlp_apply(p["mlp"], h2, cfg.mlp_act)
+    return x, cache_l
+
+
+def prefill(
+    params,
+    cfg: ModelConfig,
+    tokens: jnp.ndarray,  # (B, S)
+    max_len: int,
+    kv_repeat: int = 1,
+    cache_dtype=jnp.bfloat16,
+    encoder_frames: jnp.ndarray | None = None,
+    vision_embeds: jnp.ndarray | None = None,
+) -> tuple[jnp.ndarray, dict, jnp.ndarray]:
+    """Run the prompt, build the cache.  Returns (last-token logits, cache,
+    lengths)."""
+    x = T.embed_tokens(params, cfg, tokens)
+    if vision_embeds is not None:
+        vis = vision_embeds.astype(cfg.dtype) @ params["vis_proj"].astype(cfg.dtype)
+        x = jnp.concatenate([vis, x], axis=1)
+    x = shard(x, "batch", None, None)
+    bsz, s, _ = x.shape
+    positions = jnp.arange(s)
+    flags_np = T.layer_flags(cfg)
+    flags = {k: jnp.asarray(v) for k, v in flags_np.items()}
+    kind = T.main_block_kind(cfg)
+    cache: dict[str, jnp.ndarray] = {}
+
+    if cfg.is_moe and cfg.first_dense_layers:
+        def pbody(carry, p_l):
+            out, c_l = _block_prefill(
+                p_l, cfg, "dense_ffn", carry, positions, {}, max_len, kv_repeat, cache_dtype
+            )
+            return out, c_l
+
+        x, pc = jax.lax.scan(jax.checkpoint(pbody), x, params["dense_prefix"])
+        if cfg.attn_type == "mla":
+            cache["prefix_c_kv"], cache["prefix_k_rope"] = pc["c_kv"], pc["k_rope"]
+        else:
+            cache["prefix_k"], cache["prefix_v"] = pc["k"], pc["v"]
+
+    if cfg.is_encdec:
+        if encoder_frames is None:
+            raise ValueError("encoder-decoder prefill needs encoder_frames")
+        enc_out = T.encode(params, cfg, encoder_frames)
+        enc_kv = T._encoder_kv(params, cfg, enc_out)
+        cache["cross_k"], cache["cross_v"] = enc_kv
+
+        def body(carry, xs):
+            p_l, cross_l, kvs = xs
+            out, c_l = _block_prefill(
+                p_l, cfg, "dense", carry, positions, {}, max_len, kv_repeat, cache_dtype
+            )
+            out = T._cross_attend(cross_l, cfg, out, kvs)
+            return out, c_l
+
+        x, mc = jax.lax.scan(
+            jax.checkpoint(body), x, (params["layers"], params["cross"], enc_kv)
+        )
+    else:
+        def body(carry, xs):
+            p_l, f_l = xs
+            out, c_l = _block_prefill(
+                p_l, cfg, kind, carry, positions, f_l, max_len, kv_repeat, cache_dtype
+            )
+            return out, c_l
+
+        x, mc = jax.lax.scan(jax.checkpoint(body), x, (params["layers"], flags))
+    cache.update(mc)
+
+    logits = T.logits_from(params, cfg, x[:, -1:, :])[:, 0]
+    lengths = jnp.full((bsz,), s, jnp.int32)
+    return logits, cache, lengths

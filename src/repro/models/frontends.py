@@ -1,0 +1,39 @@
+"""Modality frontend STUBS (per assignment: [vlm]/[audio] entries specify
+the transformer backbone only; input_specs() provides precomputed
+frame/patch embeddings).
+
+The stubs define the *shape contract* between the frontend and the
+backbone, plus a deterministic synthetic embedding generator so smoke
+tests and examples can run end-to-end without real image/audio encoders.
+The SMOL connection: for the VLM, the number of patch embeddings is a
+function of the chosen input resolution — the planner's ℱ dimension
+reaches the backbone through ``num_patches_for_resolution``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def num_patches_for_resolution(image_size: int, patch_size: int = 14, downsample: float = 0.5) -> int:
+    """InternVL-style pixel-shuffle: (size/patch)^2 * downsample^2."""
+    side = image_size // patch_size
+    return max(1, int(side * side * downsample * downsample))
+
+
+def vit_stub_embeddings(key, batch: int, num_patches: int, d_model: int, dtype=jnp.bfloat16):
+    """Precomputed ViT patch embeddings (stand-in for InternViT-6B)."""
+    return jax.random.normal(key, (batch, num_patches, d_model), jnp.float32).astype(dtype)
+
+
+def audio_frames_for_seconds(seconds: float, frames_per_second: int = 50) -> int:
+    """Whisper: 30 s -> 1500 frames after the conv frontend (2x downsample
+    of 100 Hz mel frames)."""
+    return int(seconds * frames_per_second)
+
+
+def conv_stub_frames(key, batch: int, num_frames: int, d_model: int, dtype=jnp.bfloat16):
+    """Precomputed conv-frontend frame embeddings (stand-in for Whisper's
+    two Conv1d + GELU layers over 128-mel spectrograms)."""
+    return jax.random.normal(key, (batch, num_frames, d_model), jnp.float32).astype(dtype)

@@ -1,0 +1,163 @@
+"""ResNets — the paper's 𝒟 (specialized + target DNNs), in pure JAX.
+
+Standard configurations 18/34/50 (paper Table 2) plus the BlazeIt-style
+"tiny ResNet" specialized NN.  Inference-mode batch norm (running stats
+folded) with a training path that updates running statistics.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ResNetConfig:
+    name: str
+    block: str  # "basic" | "bottleneck"
+    stage_sizes: tuple[int, ...]
+    num_classes: int = 1000
+    width: int = 64
+
+
+RESNET18 = ResNetConfig("resnet18", "basic", (2, 2, 2, 2))
+RESNET34 = ResNetConfig("resnet34", "basic", (3, 4, 6, 3))
+RESNET50 = ResNetConfig("resnet50", "bottleneck", (3, 4, 6, 3))
+TINY_RESNET = ResNetConfig("tiny_resnet", "basic", (1, 1), width=16)  # BlazeIt-style
+
+
+def conv_init(key, kh, kw, cin, cout):
+    fan_in = kh * kw * cin
+    return jax.random.normal(key, (kh, kw, cin, cout), jnp.float32) * (2.0 / fan_in) ** 0.5
+
+
+def conv(x, w, stride=1):
+    return jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NCHW", "HWIO", "NCHW"),
+    )
+
+
+def bn_init(c):
+    return {
+        "scale": jnp.ones((c,), jnp.float32),
+        "bias": jnp.zeros((c,), jnp.float32),
+        "mean": jnp.zeros((c,), jnp.float32),
+        "var": jnp.ones((c,), jnp.float32),
+    }
+
+
+def bn_apply(p, x, train=False):
+    if train:
+        mu = x.mean(axis=(0, 2, 3))
+        var = x.var(axis=(0, 2, 3))
+    else:
+        mu, var = p["mean"], p["var"]
+    inv = jax.lax.rsqrt(var + 1e-5)
+    return (x - mu[:, None, None]) * inv[:, None, None] * p["scale"][:, None, None] + p["bias"][
+        :, None, None
+    ]
+
+
+def _basic_block_init(key, cin, cout, stride):
+    ks = jax.random.split(key, 3)
+    p = {
+        "conv1": conv_init(ks[0], 3, 3, cin, cout),
+        "bn1": bn_init(cout),
+        "conv2": conv_init(ks[1], 3, 3, cout, cout),
+        "bn2": bn_init(cout),
+    }
+    if stride != 1 or cin != cout:
+        p["proj"] = conv_init(ks[2], 1, 1, cin, cout)
+        p["proj_bn"] = bn_init(cout)
+    return p
+
+
+def _basic_block_apply(p, x, stride, train=False):
+    y = jax.nn.relu(bn_apply(p["bn1"], conv(x, p["conv1"], stride), train))
+    y = bn_apply(p["bn2"], conv(y, p["conv2"]), train)
+    sc = x
+    if "proj" in p:
+        sc = bn_apply(p["proj_bn"], conv(x, p["proj"], stride), train)
+    return jax.nn.relu(y + sc)
+
+
+def _bottleneck_init(key, cin, cmid, stride):
+    ks = jax.random.split(key, 4)
+    cout = cmid * 4
+    p = {
+        "conv1": conv_init(ks[0], 1, 1, cin, cmid),
+        "bn1": bn_init(cmid),
+        "conv2": conv_init(ks[1], 3, 3, cmid, cmid),
+        "bn2": bn_init(cmid),
+        "conv3": conv_init(ks[2], 1, 1, cmid, cout),
+        "bn3": bn_init(cout),
+    }
+    if stride != 1 or cin != cout:
+        p["proj"] = conv_init(ks[3], 1, 1, cin, cout)
+        p["proj_bn"] = bn_init(cout)
+    return p
+
+
+def _bottleneck_apply(p, x, stride, train=False):
+    y = jax.nn.relu(bn_apply(p["bn1"], conv(x, p["conv1"]), train))
+    y = jax.nn.relu(bn_apply(p["bn2"], conv(y, p["conv2"], stride), train))
+    y = bn_apply(p["bn3"], conv(y, p["conv3"]), train)
+    sc = x
+    if "proj" in p:
+        sc = bn_apply(p["proj_bn"], conv(x, p["proj"], stride), train)
+    return jax.nn.relu(y + sc)
+
+
+def init_resnet(cfg: ResNetConfig, key, num_classes: int | None = None) -> dict:
+    num_classes = num_classes or cfg.num_classes
+    ks = jax.random.split(key, 2 + len(cfg.stage_sizes) * 16)
+    params: dict = {
+        "stem": conv_init(ks[0], 7, 7, 3, cfg.width),
+        "stem_bn": bn_init(cfg.width),
+        "stages": [],
+    }
+    cin = cfg.width
+    ki = 2
+    for si, n_blocks in enumerate(cfg.stage_sizes):
+        cmid = cfg.width * (2**si)
+        stage = []
+        for bi in range(n_blocks):
+            stride = 2 if (bi == 0 and si > 0) else 1
+            if cfg.block == "basic":
+                stage.append(_basic_block_init(ks[ki], cin, cmid, stride))
+                cin = cmid
+            else:
+                stage.append(_bottleneck_init(ks[ki], cin, cmid, stride))
+                cin = cmid * 4
+            ki += 1
+        params["stages"].append(stage)
+    params["head"] = jax.random.normal(ks[1], (cin, num_classes), jnp.float32) * cin**-0.5
+    return params
+
+
+def resnet_forward(params, cfg: ResNetConfig, x: jnp.ndarray, train: bool = False) -> jnp.ndarray:
+    """x: (B, 3, H, W) float -> logits (B, num_classes)."""
+    y = jax.nn.relu(bn_apply(params["stem_bn"], conv(x, params["stem"], stride=2), train))
+    y = jax.lax.reduce_window(
+        y, -jnp.inf, jax.lax.max, (1, 1, 3, 3), (1, 1, 2, 2), "SAME"
+    )
+    for si, stage in enumerate(params["stages"]):
+        for bi, bp in enumerate(stage):
+            stride = 2 if (bi == 0 and si > 0) else 1
+            if cfg.block == "basic":
+                y = _basic_block_apply(bp, y, stride, train)
+            else:
+                y = _bottleneck_apply(bp, y, stride, train)
+    y = y.mean(axis=(2, 3))
+    return y @ params["head"]
+
+
+def count_params(params) -> int:
+    return sum(int(p.size) for p in jax.tree.leaves(params))

@@ -1,0 +1,314 @@
+"""State-space and recurrent blocks: Mamba-style selective SSM (hymba),
+mLSTM and sLSTM (xlstm).
+
+All recurrences expose two call modes:
+  * full-sequence (train / prefill): chunked scans — O(S) memory, parallel
+    within chunks, sequential carry across chunks;
+  * single-step (decode): explicit state in, state out.
+
+Simplifications vs. the source papers (recorded in DESIGN.md): mLSTM uses
+sigmoid-stabilized scalar per-head gates (chunked GLA form) rather than
+fully element-wise exponential gating; Mamba's dt/B/C projections follow
+the S6 structure but without the low-rank dt factorization.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, norm_init, rmsnorm
+
+
+# ------------------------------------------------------------ selective SSM
+def mamba_init(key, d_model: int, d_inner: int, state: int, conv: int) -> dict:
+    ks = jax.random.split(key, 6)
+    return {
+        "in_proj": dense_init(ks[0], d_model, 2 * d_inner),
+        "conv_w": jax.random.normal(ks[1], (conv, 1, d_inner), jnp.float32) * 0.2,
+        "x_proj": dense_init(ks[2], d_inner, 2 * state + 1),
+        "dt_bias": jnp.zeros((d_inner,), jnp.float32),
+        "a_log": jnp.log(
+            jnp.broadcast_to(jnp.arange(1, state + 1, dtype=jnp.float32), (d_inner, state))
+        ),
+        "d_skip": jnp.ones((d_inner,), jnp.float32),
+        "out_proj": dense_init(ks[3], d_inner, d_model),
+    }
+
+
+def _ssm_scan_chunked(a, b, h0, chunk: int):
+    """h_t = a_t * h_{t-1} + b_t over time axis 1.
+
+    a, b: (B, S, D, N).  Outer lax.scan over chunks (sequential carry),
+    inner associative_scan (parallel).  Returns (h (B,S,D,N), h_last).
+    """
+    bsz, s, d, n = a.shape
+    nc = s // chunk
+
+    a_c = a.reshape(bsz, nc, chunk, d, n).transpose(1, 0, 2, 3, 4)
+    b_c = b.reshape(bsz, nc, chunk, d, n).transpose(1, 0, 2, 3, 4)
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    @jax.checkpoint
+    def chunk_step(h_in, inputs):
+        ac, bc = inputs  # (B, chunk, D, N)
+        aa, bb = jax.lax.associative_scan(combine, (ac, bc), axis=1)
+        h = aa * h_in[:, None] + bb  # prefix products fold in the carry
+        return h[:, -1], h
+
+    h_last, hs = jax.lax.scan(chunk_step, h0, (a_c, b_c))
+    hs = hs.transpose(1, 0, 2, 3, 4).reshape(bsz, s, d, n)
+    return hs, h_last
+
+
+def mamba_apply(params, x, state: int, chunk: int = 256, init_state=None, conv_init=None):
+    """Full-sequence selective SSM.  x: (B, S, D_model) -> (B, S, D_model).
+
+    Returns (y, (ssm_state, conv_state)) so prefill can seed decoding.
+    """
+    bsz, s, _ = x.shape
+    dt_ = x.dtype
+    xz = x @ params["in_proj"].astype(dt_)
+    xi, z = jnp.split(xz, 2, axis=-1)  # (B, S, D_in)
+    d_in = xi.shape[-1]
+    conv = params["conv_w"].shape[0]
+
+    pad = jnp.zeros((bsz, conv - 1, d_in), dt_) if conv_init is None else conv_init.astype(dt_)
+    xi_pad = jnp.concatenate([pad, xi], axis=1)
+    xc = jax.lax.conv_general_dilated(
+        xi_pad.astype(jnp.float32),
+        params["conv_w"].astype(jnp.float32),
+        window_strides=(1,),
+        padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=d_in,
+    ).astype(dt_)
+    xc = jax.nn.silu(xc)
+    conv_state = xi_pad[:, -(conv - 1) :, :] if conv > 1 else jnp.zeros((bsz, 0, d_in), dt_)
+
+    proj = xc @ params["x_proj"].astype(dt_)  # (B, S, 2N+1)
+    bmat, cmat, dt_raw = jnp.split(proj.astype(jnp.float32), [state, 2 * state], axis=-1)
+    dt = jax.nn.softplus(dt_raw + params["dt_bias"].mean())  # (B, S, 1)
+    a = -jnp.exp(params["a_log"])  # (D_in, N)
+    da = jnp.exp(dt[..., None] * a)  # (B, S, D_in, N) via broadcast (dt scalar/ch)
+    db = dt[..., None] * bmat[:, :, None, :] * xc.astype(jnp.float32)[..., None]
+
+    h0 = (
+        jnp.zeros((bsz, d_in, state), jnp.float32)
+        if init_state is None
+        else init_state.astype(jnp.float32)
+    )
+    pad_s = (-s) % chunk
+    if pad_s:
+        da = jnp.pad(da, ((0, 0), (0, pad_s), (0, 0), (0, 0)), constant_values=1.0)
+        db = jnp.pad(db, ((0, 0), (0, pad_s), (0, 0), (0, 0)))
+    hs, h_last = _ssm_scan_chunked(da, db, h0, chunk)
+    hs = hs[:, :s]
+    y = jnp.einsum("bsdn,bsn->bsd", hs, cmat) + params["d_skip"] * xc.astype(jnp.float32)
+    y = (y.astype(dt_) * jax.nn.silu(z)) @ params["out_proj"].astype(dt_)
+    return y, (h_last, conv_state)
+
+
+def mamba_step(params, x, ssm_state, conv_state, state: int):
+    """Single decode step.  x: (B, D_model); states from prefill/previous."""
+    bsz, _ = x.shape
+    dt_ = x.dtype
+    xz = x @ params["in_proj"].astype(dt_)
+    xi, z = jnp.split(xz, 2, axis=-1)
+    d_in = xi.shape[-1]
+    conv = params["conv_w"].shape[0]
+
+    window = jnp.concatenate([conv_state.astype(dt_), xi[:, None]], axis=1)  # (B, conv, D)
+    w = params["conv_w"][:, 0, :].astype(jnp.float32)  # (conv, D)
+    xc = jnp.einsum("bcd,cd->bd", window.astype(jnp.float32), w).astype(dt_)
+    xc = jax.nn.silu(xc)
+    new_conv_state = window[:, 1:]
+
+    proj = xc @ params["x_proj"].astype(dt_)
+    bmat, cmat, dt_raw = jnp.split(proj.astype(jnp.float32), [state, 2 * state], axis=-1)
+    dt = jax.nn.softplus(dt_raw + params["dt_bias"].mean())  # (B, 1)
+    a = -jnp.exp(params["a_log"])
+    da = jnp.exp(dt[..., None] * a)  # (B, D_in, N)
+    db = dt[..., None] * bmat[:, None, :] * xc.astype(jnp.float32)[..., None]
+    h = da * ssm_state + db
+    y = jnp.einsum("bdn,bn->bd", h, cmat) + params["d_skip"] * xc.astype(jnp.float32)
+    y = (y.astype(dt_) * jax.nn.silu(z)) @ params["out_proj"].astype(dt_)
+    return y, (h, new_conv_state)
+
+
+# ------------------------------------------------------------------- mLSTM
+def mlstm_init(key, d_model: int, num_heads: int, proj_factor: float = 2.0) -> dict:
+    d_in = int(d_model * proj_factor)
+    ks = jax.random.split(key, 7)
+    return {
+        "up_proj": dense_init(ks[0], d_model, d_in),
+        "wq": dense_init(ks[1], d_in, d_in),
+        "wk": dense_init(ks[2], d_in, d_in),
+        "wv": dense_init(ks[3], d_in, d_in),
+        "w_gates": dense_init(ks[4], d_in, 2 * num_heads),  # i, f per head
+        "o_gate": dense_init(ks[5], d_model, d_in),
+        "down_proj": dense_init(ks[6], d_in, d_model),
+        "out_norm": norm_init(d_in),
+    }
+
+
+def mlstm_apply(params, x, num_heads: int, chunk: int = 128, init_c=None, init_n=None):
+    """Chunked gated-linear-attention form of the mLSTM.
+
+    x: (B, S, D_model) -> (y, (C (B,H,dk,dv), n (B,H,dk))).
+    """
+    bsz, s, d_model = x.shape
+    dt_ = x.dtype
+    xin = x @ params["up_proj"].astype(dt_)  # (B, S, D_in)
+    d_in = xin.shape[-1]
+    hd = d_in // num_heads
+
+    q = (xin @ params["wq"].astype(dt_)).reshape(bsz, s, num_heads, hd)
+    k = (xin @ params["wk"].astype(dt_)).reshape(bsz, s, num_heads, hd) * hd**-0.5
+    v = (xin @ params["wv"].astype(dt_)).reshape(bsz, s, num_heads, hd)
+    gates = xin @ params["w_gates"].astype(dt_)  # (B, S, 2H)
+    ig = jax.nn.sigmoid(gates[..., :num_heads].astype(jnp.float32))  # input gate
+    fg = jax.nn.sigmoid(gates[..., num_heads:].astype(jnp.float32) + 4.0)  # forget ~1
+
+    pad = (-s) % chunk
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        ig = jnp.pad(ig, ((0, 0), (0, pad), (0, 0)))
+        fg = jnp.pad(fg, ((0, 0), (0, pad), (0, 0)), constant_values=1.0)
+    sp = s + pad
+    nc = sp // chunk
+
+    def resh(t, feat):
+        return t.reshape(bsz, nc, chunk, num_heads, *feat).transpose(1, 0, 2, 3, *range(4, 4 + len(feat)))
+
+    qc = resh(q.astype(jnp.float32), (hd,))
+    kc = resh(k.astype(jnp.float32), (hd,))
+    vc = resh(v.astype(jnp.float32), (hd,))
+    ic = ig.reshape(bsz, nc, chunk, num_heads).transpose(1, 0, 2, 3)
+    fc = fg.reshape(bsz, nc, chunk, num_heads).transpose(1, 0, 2, 3)
+
+    c0 = jnp.zeros((bsz, num_heads, hd, hd), jnp.float32) if init_c is None else init_c
+    n0 = jnp.zeros((bsz, num_heads, hd), jnp.float32) if init_n is None else init_n
+
+    @jax.checkpoint
+    def chunk_step(carry, inputs):
+        c_in, n_in = carry
+        qq, kk, vv, ii, ff = inputs  # (B, L, H, ...)
+        logf = jnp.log(jnp.maximum(ff, 1e-6))  # (B, L, H)
+        g = jnp.cumsum(logf, axis=1)  # within-chunk cumulative log decay
+        g_tot = g[:, -1]  # (B, H)
+        # inter-chunk: h_t += exp(g_t) * q_t @ C_in
+        decay_q = jnp.exp(g)  # (B, L, H)
+        h_inter = jnp.einsum("blhd,bhde->blhe", qq * decay_q[..., None], c_in)
+        n_inter = jnp.einsum("blhd,bhd->blh", qq * decay_q[..., None], n_in)
+        # intra-chunk: A[t,tau] = exp(g_t - g_tau) * i_tau * (q_t . k_tau)
+        att = jnp.einsum("blhd,bmhd->bhlm", qq, kk)
+        rel = g[:, :, None, :] - g[:, None, :, :]  # (B, L, M, H): log decay t<-tau
+        decay = jnp.exp(jnp.minimum(rel, 0.0)).transpose(0, 3, 1, 2)  # (B, H, L, M)
+        i_tau = ii.transpose(0, 2, 1)[:, :, None, :]  # (B, H, 1, M)
+        causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+        a = jnp.where(causal[None, None], att * decay * i_tau, 0.0)
+        h_intra = jnp.einsum("bhlm,bmhd->blhd", a, vv)
+        n_intra = a.sum(axis=-1).transpose(0, 2, 1)  # (B, L, H)
+        # carry update: C_out = exp(g_tot) C_in + sum_tau exp(g_tot - g_tau) i_tau k v^T
+        w_tau = jnp.exp(g_tot[:, None] - g) * ii  # (B, L, H)
+        c_out = jnp.exp(g_tot)[..., None, None] * c_in + jnp.einsum(
+            "blhd,blhe->bhde", kk * w_tau[..., None], vv
+        )
+        n_out = jnp.exp(g_tot)[..., None] * n_in + jnp.einsum("blh,blhd->bhd", w_tau, kk)
+        h = h_inter + h_intra
+        norm = jnp.maximum(jnp.abs(n_inter + n_intra), 1.0)
+        return (c_out, n_out), h / norm[..., None]
+
+    (c_last, n_last), hs = jax.lax.scan(chunk_step, (c0, n0), (qc, kc, vc, ic, fc))
+    hs = hs.transpose(1, 0, 2, 3, 4).reshape(bsz, sp, d_in)[:, :s]
+    hs = rmsnorm(hs.astype(dt_), params["out_norm"]["scale"])
+    o = jax.nn.sigmoid(x @ params["o_gate"].astype(dt_))
+    y = (hs * o) @ params["down_proj"].astype(dt_)
+    return y, (c_last, n_last)
+
+
+def mlstm_step(params, x, c_state, n_state, num_heads: int):
+    """Single decode step.  x: (B, D_model)."""
+    bsz, d_model = x.shape
+    dt_ = x.dtype
+    xin = x @ params["up_proj"].astype(dt_)
+    d_in = xin.shape[-1]
+    hd = d_in // num_heads
+    q = (xin @ params["wq"].astype(dt_)).reshape(bsz, num_heads, hd).astype(jnp.float32)
+    k = (xin @ params["wk"].astype(dt_)).reshape(bsz, num_heads, hd).astype(jnp.float32) * hd**-0.5
+    v = (xin @ params["wv"].astype(dt_)).reshape(bsz, num_heads, hd).astype(jnp.float32)
+    gates = (xin @ params["w_gates"].astype(dt_)).astype(jnp.float32)
+    ig = jax.nn.sigmoid(gates[..., :num_heads])
+    fg = jax.nn.sigmoid(gates[..., num_heads:] + 4.0)
+    c_new = fg[..., None, None] * c_state + ig[..., None, None] * jnp.einsum(
+        "bhd,bhe->bhde", k, v
+    )
+    n_new = fg[..., None] * n_state + ig[..., None] * k
+    h = jnp.einsum("bhd,bhde->bhe", q, c_new)
+    norm = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", q, n_new)), 1.0)
+    h = (h / norm[..., None]).reshape(bsz, d_in)
+    h = rmsnorm(h.astype(dt_), params["out_norm"]["scale"])
+    o = jax.nn.sigmoid(x @ params["o_gate"].astype(dt_))
+    y = (h * o) @ params["down_proj"].astype(dt_)
+    return y, (c_new, n_new)
+
+
+# ------------------------------------------------------------------- sLSTM
+def slstm_init(key, d_model: int, num_heads: int) -> dict:
+    ks = jax.random.split(key, 3)
+    return {
+        "w_in": dense_init(ks[0], d_model, 4 * d_model),  # i, f, z, o pre-acts
+        "w_rec": dense_init(ks[1], d_model, 4 * d_model, scale=d_model**-0.5 * 0.1),
+        "down_proj": dense_init(ks[2], d_model, d_model),
+        "out_norm": norm_init(d_model),
+    }
+
+
+def _slstm_cell(params, x_t, state, dt_):
+    h_prev, c_prev, n_prev, m_prev = state
+    pre = (x_t @ params["w_in"].astype(dt_)).astype(jnp.float32) + (
+        h_prev.astype(dt_) @ params["w_rec"].astype(dt_)
+    ).astype(jnp.float32)
+    i_t, f_t, z_t, o_t = jnp.split(pre, 4, axis=-1)
+    # exponential gating with stabilizer (xLSTM eqs. 15-19)
+    m_t = jnp.maximum(f_t + m_prev, i_t)
+    i_e = jnp.exp(i_t - m_t)
+    f_e = jnp.exp(f_t + m_prev - m_t)
+    c_t = f_e * c_prev + i_e * jnp.tanh(z_t)
+    n_t = f_e * n_prev + i_e
+    h_t = jax.nn.sigmoid(o_t) * c_t / jnp.maximum(n_t, 1.0)
+    return h_t, c_t, n_t, m_t
+
+
+def slstm_apply(params, x, num_heads: int, init_state=None):
+    """Sequential sLSTM over time (true recurrence).  x: (B, S, D)."""
+    bsz, s, d = x.shape
+    dt_ = x.dtype
+    if init_state is None:
+        zeros = jnp.zeros((bsz, d), jnp.float32)
+        init_state = (zeros, zeros, zeros, zeros)
+
+    def step(state, x_t):
+        new = _slstm_cell(params, x_t, state, dt_)
+        return new, new[0]
+
+    state, hs = jax.lax.scan(step, init_state, x.transpose(1, 0, 2))
+    hs = hs.transpose(1, 0, 2).astype(dt_)
+    hs = rmsnorm(hs, params["out_norm"]["scale"])
+    y = hs @ params["down_proj"].astype(dt_)
+    return y, state
+
+
+def slstm_step(params, x, state):
+    """Single decode step.  x: (B, D)."""
+    dt_ = x.dtype
+    new = _slstm_cell(params, x, state, dt_)
+    h = rmsnorm(new[0].astype(dt_), params["out_norm"]["scale"])
+    return h @ params["down_proj"].astype(dt_), new

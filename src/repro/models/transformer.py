@@ -1,0 +1,317 @@
+"""Composable transformer stacks for the architecture pool.
+
+One scan-based implementation covers all ten architectures:
+
+* params are *stacked* per layer (leaves carry a leading L dim) and layers
+  run under ``jax.lax.scan`` — HLO size is O(1) in depth, which is what
+  makes 64-layer x 512-device dry-runs compile on one CPU core;
+* per-layer heterogeneity (gemma3 local:global, hymba's three global
+  layers, xlstm's sLSTM positions) is expressed as boolean flag vectors
+  scanned alongside the params, selecting between block variants with
+  ``lax.cond``;
+* structurally different prefixes (deepseek-v2's leading dense-FFN layer)
+  are separate scanned groups.
+
+Three entry points per model: ``forward`` (train / eval, full sequence),
+``prefill`` (full sequence -> logits + KV cache), ``decode_step`` (one
+token + cache -> logits + cache).  MLA caches are stored *compressed*
+(c_kv + k_rope) and decoded with the absorbed-matmul form, per the
+DeepSeek-V2 inference scheme.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import shard
+from repro.models import ssm as ssm_mod
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+
+
+# ------------------------------------------------------------------- flags
+def layer_flags(cfg: ModelConfig) -> dict[str, np.ndarray]:
+    """Static per-layer structure flags."""
+    n = cfg.num_layers
+    flags: dict[str, np.ndarray] = {}
+    if cfg.local_global_ratio > 0:
+        # gemma3 pattern: N local then 1 global, repeating.
+        period = cfg.local_global_ratio + 1
+        flags["is_local"] = np.array(
+            [(i % period) != cfg.local_global_ratio for i in range(n)], dtype=bool
+        )
+    if cfg.family == "hybrid":
+        # hymba: global attention on first / middle / last layers, SWA elsewhere.
+        glob = {0, n // 2, n - 1}
+        flags["is_local"] = np.array([i not in glob for i in range(n)], dtype=bool)
+    if cfg.slstm_every > 0:
+        flags["is_slstm"] = np.array(
+            [(i + 1) % cfg.slstm_every == 0 for i in range(n)], dtype=bool
+        )
+    return flags
+
+
+def _moe_layers(cfg: ModelConfig) -> int:
+    return cfg.num_layers - cfg.first_dense_layers
+
+
+# -------------------------------------------------------------- block init
+def _attn_init(key, cfg: ModelConfig) -> dict:
+    if cfg.attn_type == "mla":
+        return L.mla_init(key, cfg)
+    return L.gqa_init(key, cfg)
+
+
+def _block_init(key, cfg: ModelConfig, kind: str) -> dict:
+    """kind: dense | moe | hybrid | xlstm"""
+    ks = jax.random.split(key, 4)
+    p: dict[str, Any] = {}
+    if kind == "xlstm":
+        p["pre_norm"] = L.norm_init(cfg.d_model, cfg.norm_type)
+        p["mlstm"] = ssm_mod.mlstm_init(ks[0], cfg.d_model, cfg.num_heads)
+        p["slstm"] = ssm_mod.slstm_init(ks[1], cfg.d_model, cfg.num_heads)
+        return p
+    p["attn_norm"] = L.norm_init(cfg.d_model, cfg.norm_type)
+    p["attn"] = _attn_init(ks[0], cfg)
+    p["mlp_norm"] = L.norm_init(cfg.d_model, cfg.norm_type)
+    if kind == "moe":
+        p["moe"] = L.moe_init(ks[1], cfg)
+    elif kind == "dense_ffn":
+        p["mlp"] = L.mlp_init(ks[1], cfg.d_model, cfg.dense_d_ff or cfg.d_ff)
+    else:
+        p["mlp"] = L.mlp_init(ks[1], cfg.d_model, cfg.d_ff)
+    if kind == "hybrid":
+        d_inner = 2 * cfg.d_model
+        p["mamba"] = ssm_mod.mamba_init(ks[2], cfg.d_model, d_inner, cfg.ssm_state, cfg.ssm_conv)
+        p["attn_out_norm"] = L.norm_init(cfg.d_model, cfg.norm_type)
+        p["mamba_out_norm"] = L.norm_init(cfg.d_model, cfg.norm_type)
+    return p
+
+
+def _stacked_init(key, cfg: ModelConfig, kind: str, n: int) -> dict:
+    keys = jax.random.split(key, n)
+    return jax.vmap(lambda k: _block_init(k, cfg, kind))(keys)
+
+
+def main_block_kind(cfg: ModelConfig) -> str:
+    if cfg.family == "ssm":
+        return "xlstm"
+    if cfg.family == "hybrid":
+        return "hybrid"
+    if cfg.is_moe:
+        return "moe"
+    return "dense"
+
+
+def init_lm(cfg: ModelConfig, key) -> dict:
+    ks = jax.random.split(key, 8)
+    params: dict[str, Any] = {
+        "embed": jax.random.normal(ks[0], (cfg.padded_vocab_size, cfg.d_model), jnp.float32)
+        * cfg.d_model**-0.5,
+        "final_norm": L.norm_init(cfg.d_model, cfg.norm_type),
+    }
+    kind = main_block_kind(cfg)
+    n_main = _moe_layers(cfg) if cfg.is_moe else cfg.num_layers
+    if cfg.is_moe and cfg.first_dense_layers:
+        params["dense_prefix"] = _stacked_init(ks[1], cfg, "dense_ffn", cfg.first_dense_layers)
+    params["layers"] = _stacked_init(ks[2], cfg, kind, n_main)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.dense_init(ks[3], cfg.d_model, cfg.padded_vocab_size)
+    if cfg.frontend == "vit_stub":
+        params["vis_proj"] = L.dense_init(ks[4], cfg.d_model, cfg.d_model)
+    if cfg.is_encdec:
+        params["encoder"] = {
+            "layers": _stacked_init(ks[5], cfg, "dense", cfg.encoder_layers),
+            "final_norm": L.norm_init(cfg.d_model, cfg.norm_type),
+        }
+        params["cross"] = _stacked_init(ks[6], cfg, "cross", n_main)  # see _block_init fallthrough
+    return params
+
+
+# cross-attention blocks (whisper decoder): plain GQA without rope
+def _cross_init(key, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(key, 2)
+    return {
+        "norm": L.norm_init(cfg.d_model, cfg.norm_type),
+        "attn": L.gqa_init(ks[0], cfg),
+    }
+
+
+# patch _block_init to dispatch "cross"
+_orig_block_init = _block_init
+
+
+def _block_init(key, cfg, kind):  # noqa: F811
+    if kind == "cross":
+        return _cross_init(key, cfg)
+    return _orig_block_init(key, cfg, kind)
+
+
+# ---------------------------------------------------------- full-seq blocks
+def _window_for(cfg: ModelConfig, is_local) -> int | None:
+    return cfg.sliding_window
+
+
+def _attn_full(p_attn, cfg, x, positions, is_local, causal=True):
+    """Attention with optional per-layer sliding window (via lax.cond)."""
+    if cfg.attn_type == "mla":
+        return L.mla_apply(p_attn, cfg, x, positions, causal=causal)
+    if cfg.sliding_window is None or is_local is None:
+        return L.gqa_apply(p_attn, cfg, x, positions, causal=causal)
+
+    def local_fn(args):
+        return L.gqa_apply(p_attn, cfg, args, positions, causal=causal, window=cfg.sliding_window)
+
+    def global_fn(args):
+        return L.gqa_apply(p_attn, cfg, args, positions, causal=causal)
+
+    return jax.lax.cond(is_local, local_fn, global_fn, x)
+
+
+def _block_full(p, cfg: ModelConfig, kind: str, x, positions, flags, causal=True):
+    """One block, full sequence, no cache.  flags: dict of per-layer scalars."""
+    if kind == "xlstm":
+        h = L.apply_norm(p["pre_norm"], x, cfg.norm_type)
+
+        def do_slstm(h):
+            return ssm_mod.slstm_apply(p["slstm"], h, cfg.num_heads)[0]
+
+        def do_mlstm(h):
+            return ssm_mod.mlstm_apply(p["mlstm"], h, cfg.num_heads)[0]
+
+        if "is_slstm" in flags:
+            y = jax.lax.cond(flags["is_slstm"], do_slstm, do_mlstm, h)
+        else:
+            y = do_mlstm(h)
+        return x + y
+
+    h = L.apply_norm(p["attn_norm"], x, cfg.norm_type)
+    is_local = flags.get("is_local")
+    if kind == "hybrid":
+        attn_out = _attn_full(p["attn"], cfg, h, positions, is_local, causal)
+        mamba_out, _ = ssm_mod.mamba_apply(p["mamba"], h, cfg.ssm_state)
+        y = 0.5 * (
+            L.apply_norm(p["attn_out_norm"], attn_out, cfg.norm_type)
+            + L.apply_norm(p["mamba_out_norm"], mamba_out, cfg.norm_type)
+        )
+    else:
+        y = _attn_full(p["attn"], cfg, h, positions, is_local, causal)
+    x = x + y
+    h = L.apply_norm(p["mlp_norm"], x, cfg.norm_type)
+    if kind == "moe":
+        x = x + L.moe_apply(p["moe"], cfg, h, cfg.mlp_act)
+    else:
+        x = x + L.mlp_apply(p["mlp"], h, cfg.mlp_act)
+    return x
+
+
+def _scan_stack(params_stacked, cfg, kind, x, positions, flags_np, causal=True, remat=True):
+    flags_arrays = {k: jnp.asarray(v) for k, v in flags_np.items()}
+
+    def body(carry, xs):
+        p_l, f_l = xs
+        out = _block_full(p_l, cfg, kind, carry, positions, f_l, causal)
+        return out, None
+
+    body_fn = jax.checkpoint(body) if remat else body
+    x, _ = jax.lax.scan(body_fn, x, (params_stacked, flags_arrays))
+    return x
+
+
+# ------------------------------------------------------------------ forward
+def embed_tokens(params, cfg, tokens):
+    x = params["embed"][tokens].astype(cfg.dtype)
+    return x * jnp.asarray(cfg.d_model**0.5, cfg.dtype) if cfg.tie_embeddings else x
+
+
+def logits_from(params, cfg, x):
+    x = L.apply_norm(params["final_norm"], x, cfg.norm_type)
+    if cfg.tie_embeddings:
+        w = params["embed"].astype(x.dtype)
+        logits = x @ w.T
+    else:
+        logits = x @ params["lm_head"].astype(x.dtype)
+    if cfg.padded_vocab_size != cfg.vocab_size:
+        # mask vocab-padding logits (sharding-friendly: elementwise iota)
+        valid = jnp.arange(cfg.padded_vocab_size) < cfg.vocab_size
+        logits = jnp.where(valid, logits, jnp.asarray(-1e30, logits.dtype))
+    return shard(logits, "batch", None, "vocab")
+
+
+def encode(params, cfg: ModelConfig, frames: jnp.ndarray) -> jnp.ndarray:
+    """Whisper-style encoder over precomputed frame embeddings (stub
+    frontend output), non-causal."""
+    x = frames.astype(cfg.dtype)
+    positions = jnp.arange(x.shape[1])
+    x = _scan_stack(params["encoder"]["layers"], cfg, "dense", x, positions, {}, causal=False)
+    return L.apply_norm(params["encoder"]["final_norm"], x, cfg.norm_type)
+
+
+def _cross_attend(p_cross_l, cfg, x, enc_kv):
+    """One cross-attention insertion (decoder side)."""
+    h = L.apply_norm(p_cross_l["norm"], x, cfg.norm_type)
+    b, s, _ = h.shape
+    hd = cfg.resolved_head_dim
+    dt = h.dtype
+    q = (h @ p_cross_l["attn"]["wq"].astype(dt)).reshape(b, s, cfg.num_heads, hd)
+    k, v = enc_kv  # precomputed (B, S_enc, KVH, hd)
+    out = L.attention_scores_blockwise(q, k, v, causal=False)
+    out = out.reshape(b, s, cfg.num_heads * hd)
+    return x + out @ p_cross_l["attn"]["wo"].astype(dt)
+
+
+def _encoder_kv(params, cfg, enc_out):
+    """Precompute per-layer cross-attention K/V from encoder output."""
+    b, se, _ = enc_out.shape
+    hd = cfg.resolved_head_dim
+
+    def one(p_cross_l):
+        dt = enc_out.dtype
+        k = (enc_out @ p_cross_l["attn"]["wk"].astype(dt)).reshape(b, se, cfg.num_kv_heads, hd)
+        v = (enc_out @ p_cross_l["attn"]["wv"].astype(dt)).reshape(b, se, cfg.num_kv_heads, hd)
+        return k, v
+
+    return jax.vmap(one)(params["cross"])  # leaves (L, B, S_enc, KVH, hd)
+
+
+def forward(
+    params,
+    cfg: ModelConfig,
+    tokens: jnp.ndarray,  # (B, S) int32
+    vision_embeds: jnp.ndarray | None = None,  # (B, N_vis, D) for VLM
+    encoder_frames: jnp.ndarray | None = None,  # (B, S_enc, D) for enc-dec
+) -> jnp.ndarray:
+    """Full-sequence forward -> logits (B, S_total, V)."""
+    x = embed_tokens(params, cfg, tokens)
+    if vision_embeds is not None:
+        vis = vision_embeds.astype(cfg.dtype) @ params["vis_proj"].astype(cfg.dtype)
+        x = jnp.concatenate([vis, x], axis=1)
+    x = shard(x, "batch", None, None)
+    positions = jnp.arange(x.shape[1])
+    flags = layer_flags(cfg)
+    kind = main_block_kind(cfg)
+
+    if cfg.is_encdec:
+        if encoder_frames is None:
+            raise ValueError("encoder-decoder model needs encoder_frames")
+        enc_out = encode(params, cfg, encoder_frames)
+        enc_kv = _encoder_kv(params, cfg, enc_out)
+
+        def body(carry, xs):
+            p_l, cross_l, kvs = xs
+            out = _block_full(p_l, cfg, "dense", carry, positions, {}, causal=True)
+            out = _cross_attend(cross_l, cfg, out, kvs)
+            return out, None
+
+        x, _ = jax.lax.scan(jax.checkpoint(body), x, (params["layers"], params["cross"], enc_kv))
+        return logits_from(params, cfg, x)
+
+    if cfg.is_moe and cfg.first_dense_layers:
+        x = _scan_stack(params["dense_prefix"], cfg, "dense_ffn", x, positions, {})
+    x = _scan_stack(params["layers"], cfg, kind, x, positions, flags)
+    return logits_from(params, cfg, x)

@@ -1,0 +1,12 @@
+"""Visual-data preprocessing substrate.
+
+Everything SMOL's runtime operates on lives here: a real (simplified)
+JPEG-family codec with partial/ROI/progressive decoding, a lossless
+"PNG-analog" (zstd) codec, an H.264-flavoured video codec model with a
+toggleable deblocking filter, and the preprocessing operator library
+(resize / crop / normalize / dtype / layout) with paired host (numpy) and
+device (jnp) implementations.
+
+Submodules are imported lazily by users (``from repro.preprocessing import
+jpeg``) to keep import costs low and avoid cycles.
+"""

@@ -1,0 +1,163 @@
+"""Natively-present visual data formats — the paper's ℱ.
+
+Image/video serving systems store multiple encodings of the same content
+(full-resolution JPEG, 161-px thumbnails in PNG/JPEG, multi-bitrate video
+renditions).  ``StoredImage`` / ``StoredVideo`` model exactly that: one
+logical asset, several physical encodings, so SMOL's planner can treat the
+*input format* as a plan dimension (§5.2).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.preprocessing import jpeg, png, video
+from repro.preprocessing.ops import ResizeShortSide
+
+
+@dataclasses.dataclass(frozen=True)
+class ImageFormat:
+    codec: str  # "jpeg" | "png"
+    short_side: int | None = None  # None = native resolution
+    quality: int | None = None  # jpeg only
+
+    @property
+    def key(self) -> str:
+        res = "full" if self.short_side is None else str(self.short_side)
+        q = "" if self.quality is None else f"_q{self.quality}"
+        return f"{self.codec}_{res}{q}"
+
+    def __str__(self) -> str:
+        return self.key
+
+
+FULL_JPEG_Q95 = ImageFormat("jpeg", None, 95)
+FULL_JPEG_Q75 = ImageFormat("jpeg", None, 75)
+THUMB_PNG_161 = ImageFormat("png", 161, None)
+THUMB_JPEG_161_Q95 = ImageFormat("jpeg", 161, 95)
+THUMB_JPEG_161_Q75 = ImageFormat("jpeg", 161, 75)
+
+# The format set evaluated in the paper's image experiments (§8.1).
+PAPER_IMAGE_FORMATS = [
+    FULL_JPEG_Q95,
+    THUMB_PNG_161,
+    THUMB_JPEG_161_Q95,
+    THUMB_JPEG_161_Q75,
+]
+
+
+class StoredImage:
+    """One logical image stored in several physical encodings."""
+
+    def __init__(self, variants: dict[ImageFormat, bytes], native_shape: tuple[int, int, int]):
+        self.variants = variants
+        self.native_shape = native_shape
+
+    @classmethod
+    def from_array(cls, img: np.ndarray, formats: list[ImageFormat] | None = None) -> "StoredImage":
+        formats = formats or PAPER_IMAGE_FORMATS
+        variants: dict[ImageFormat, bytes] = {}
+        for fmt in formats:
+            src = img
+            if fmt.short_side is not None and fmt.short_side < min(img.shape[:2]):
+                src = ResizeShortSide(fmt.short_side).apply_host(img)
+            if fmt.codec == "jpeg":
+                variants[fmt] = jpeg.encode(src, quality=fmt.quality or 75)
+            elif fmt.codec == "png":
+                variants[fmt] = png.encode(src)
+            else:
+                raise ValueError(f"unknown codec {fmt.codec}")
+        return cls(variants, tuple(img.shape))
+
+    def formats(self) -> list[ImageFormat]:
+        return list(self.variants)
+
+    def nbytes(self, fmt: ImageFormat) -> int:
+        return len(self.variants[fmt])
+
+    def decode(
+        self,
+        fmt: ImageFormat,
+        roi: tuple[int, int, int, int] | None = None,
+        max_rows: int | None = None,
+        dc_only: bool = False,
+    ) -> np.ndarray:
+        data = self.variants[fmt]
+        if fmt.codec == "jpeg":
+            return jpeg.decode(data, roi=roi, max_rows=max_rows, dc_only=dc_only)
+        if roi is not None or dc_only:
+            # PNG-analog supports early stopping only (paper Table 4).
+            out = png.decode(data, max_rows=None if roi is None else roi[2])
+            if roi is not None:
+                y0, x0, y1, x1 = roi
+                return out[y0:y1, x0:x1]
+            return out
+        return png.decode(data, max_rows=max_rows)
+
+    def decode_to_coefficients(self, fmt: ImageFormat, **kw):
+        """Split-decode path (host entropy stage only) — JPEG variants only."""
+        if fmt.codec != "jpeg":
+            raise ValueError("split decode requires a JPEG variant")
+        return jpeg.decode_to_coefficients(self.variants[fmt], **kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class VideoFormat:
+    codec: str = "svid"
+    short_side: int | None = None  # None = native; 480 = the paper's low-res rendition
+    quality: int = 75
+
+    @property
+    def key(self) -> str:
+        res = "full" if self.short_side is None else f"{self.short_side}p"
+        return f"{self.codec}_{res}_q{self.quality}"
+
+    def __str__(self) -> str:
+        return self.key
+
+
+class StoredVideo:
+    """One logical video stored at several renditions (YouTube-style)."""
+
+    def __init__(self, variants: dict[VideoFormat, bytes], native_shape: tuple[int, ...]):
+        self.variants = variants
+        self.native_shape = native_shape
+
+    @classmethod
+    def from_frames(
+        cls,
+        frames: np.ndarray,
+        formats: list[VideoFormat] | None = None,
+        gop: int = 8,
+    ) -> "StoredVideo":
+        formats = formats or [VideoFormat(), VideoFormat(short_side=min(frames.shape[1:3]) // 2)]
+        variants: dict[VideoFormat, bytes] = {}
+        for fmt in formats:
+            src = frames
+            if fmt.short_side is not None and fmt.short_side < min(frames.shape[1:3]):
+                rs = ResizeShortSide(fmt.short_side)
+                src = np.stack([rs.apply_host(f) for f in frames])
+            variants[fmt] = video.encode(src, quality=fmt.quality, gop=gop)
+        return cls(variants, tuple(frames.shape))
+
+    def formats(self) -> list[VideoFormat]:
+        return list(self.variants)
+
+    def nbytes(self, fmt: VideoFormat) -> int:
+        return len(self.variants[fmt])
+
+    def decode(
+        self,
+        fmt: VideoFormat,
+        frame_indices: list[int] | None = None,
+        max_frames: int | None = None,
+        deblock: bool = True,
+    ) -> np.ndarray:
+        return video.decode(
+            self.variants[fmt],
+            frame_indices=frame_indices,
+            max_frames=max_frames,
+            deblock=deblock,
+        )

@@ -1,0 +1,379 @@
+"""Preprocessing operator library.
+
+Each operator carries BOTH a host (numpy) and a device (jax.numpy)
+implementation of the *same* algorithm, plus a cost function counting
+arithmetic operations weighted by dtype width — the paper's §6.2 cost
+heuristic.  The DAG optimizer (core/dag.py) reorders/fuses/prunes chains of
+these ops; the placement optimizer (core/placement.py) decides, per op,
+whether the host or device implementation runs (§6.3).
+
+Shapes are (H, W, C) uint8 at the pipeline head ("HWC" layout); the DNN
+consumes (C, H, W) float ("CHW").
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax.numpy as jnp
+import numpy as np
+
+_DTYPE_WEIGHT = {"uint8": 1.0, "int16": 2.0, "float16": 2.0, "bfloat16": 2.0, "float32": 4.0}
+
+
+@dataclasses.dataclass(frozen=True)
+class TensorMeta:
+    shape: tuple[int, ...]  # spatial-first: (H, W, C) or (C, H, W)
+    dtype: str
+    layout: str  # "HWC" | "CHW"
+
+    @property
+    def spatial(self) -> tuple[int, int]:
+        return (self.shape[0], self.shape[1]) if self.layout == "HWC" else (self.shape[1], self.shape[2])
+
+    @property
+    def channels(self) -> int:
+        return self.shape[2] if self.layout == "HWC" else self.shape[0]
+
+    @property
+    def numel(self) -> int:
+        return int(np.prod(self.shape))
+
+
+def _bilinear_resize(x, out_h: int, out_w: int, xp):
+    """Half-pixel-center bilinear resize; identical math for numpy and jnp.
+
+    Operates on (H, W, C) float arrays.
+    """
+    h, w = x.shape[0], x.shape[1]
+    ys = (xp.arange(out_h, dtype=xp.float32) + 0.5) * (h / out_h) - 0.5
+    xs = (xp.arange(out_w, dtype=xp.float32) + 0.5) * (w / out_w) - 0.5
+    ys = xp.clip(ys, 0.0, h - 1.0)
+    xs = xp.clip(xs, 0.0, w - 1.0)
+    y0 = xp.floor(ys).astype(xp.int32)
+    x0 = xp.floor(xs).astype(xp.int32)
+    y1 = xp.minimum(y0 + 1, h - 1)
+    x1 = xp.minimum(x0 + 1, w - 1)
+    wy = (ys - y0)[:, None, None]
+    wx = (xs - x0)[None, :, None]
+    a = x[y0][:, x0]
+    b = x[y0][:, x1]
+    c = x[y1][:, x0]
+    d = x[y1][:, x1]
+    top = a + (b - a) * wx
+    bot = c + (d - c) * wx
+    return top + (bot - top) * wy
+
+
+class PreprocOp:
+    """Base preprocessing operator."""
+
+    name: str = "op"
+    elementwise: bool = False  # fusable with adjacent elementwise ops
+
+    def out_meta(self, m: TensorMeta) -> TensorMeta:
+        raise NotImplementedError
+
+    def apply_host(self, x: np.ndarray) -> np.ndarray:
+        raise NotImplementedError
+
+    def apply_device(self, x: jnp.ndarray) -> jnp.ndarray:
+        raise NotImplementedError
+
+    def flops(self, m: TensorMeta) -> float:
+        """Weighted arithmetic-op count (paper §6.2 cost heuristic)."""
+        raise NotImplementedError
+
+    def spec(self) -> tuple[Any, ...]:
+        """Hashable identity for plan caching."""
+        return (type(self).__name__,)
+
+    def __repr__(self) -> str:
+        return f"{type(self).__name__}{self.spec()[1:]}"
+
+
+@dataclasses.dataclass(frozen=True, repr=False)
+class ResizeShortSide(PreprocOp):
+    """Aspect-preserving resize so the short edge equals ``target``."""
+
+    target: int
+    name = "resize_short"
+
+    def _out_hw(self, h: int, w: int) -> tuple[int, int]:
+        s = self.target / min(h, w)
+        return max(self.target, round(h * s)), max(self.target, round(w * s))
+
+    def out_meta(self, m: TensorMeta) -> TensorMeta:
+        assert m.layout == "HWC", "resize before layout change"
+        oh, ow = self._out_hw(*m.spatial)
+        return TensorMeta((oh, ow, m.channels), m.dtype, "HWC")
+
+    def _apply(self, x, xp):
+        oh, ow = self._out_hw(x.shape[0], x.shape[1])
+        orig_dtype = x.dtype
+        y = _bilinear_resize(x.astype(xp.float32), oh, ow, xp)
+        if str(orig_dtype) == "uint8":
+            y = xp.clip(xp.round(y), 0, 255).astype(xp.uint8)
+        else:
+            y = y.astype(orig_dtype)
+        return y
+
+    def apply_host(self, x):
+        return self._apply(x, np)
+
+    def apply_device(self, x):
+        return self._apply(x, jnp)
+
+    def flops(self, m: TensorMeta) -> float:
+        oh, ow = self._out_hw(*m.spatial)
+        return 8.0 * oh * ow * m.channels * _DTYPE_WEIGHT.get(m.dtype, 4.0)
+
+    def spec(self):
+        return ("ResizeShortSide", self.target)
+
+
+@dataclasses.dataclass(frozen=True, repr=False)
+class Resize(PreprocOp):
+    """Resize to an exact (h, w)."""
+
+    height: int
+    width: int
+    name = "resize"
+
+    def out_meta(self, m: TensorMeta) -> TensorMeta:
+        assert m.layout == "HWC"
+        return TensorMeta((self.height, self.width, m.channels), m.dtype, "HWC")
+
+    def _apply(self, x, xp):
+        orig_dtype = x.dtype
+        y = _bilinear_resize(x.astype(xp.float32), self.height, self.width, xp)
+        if str(orig_dtype) == "uint8":
+            return xp.clip(xp.round(y), 0, 255).astype(xp.uint8)
+        return y.astype(orig_dtype)
+
+    def apply_host(self, x):
+        return self._apply(x, np)
+
+    def apply_device(self, x):
+        return self._apply(x, jnp)
+
+    def flops(self, m: TensorMeta) -> float:
+        return 8.0 * self.height * self.width * m.channels * _DTYPE_WEIGHT.get(m.dtype, 4.0)
+
+    def spec(self):
+        return ("Resize", self.height, self.width)
+
+
+@dataclasses.dataclass(frozen=True, repr=False)
+class CenterCrop(PreprocOp):
+    size: int
+    name = "center_crop"
+
+    def out_meta(self, m: TensorMeta) -> TensorMeta:
+        assert m.layout == "HWC"
+        return TensorMeta((self.size, self.size, m.channels), m.dtype, "HWC")
+
+    def _offsets(self, h: int, w: int) -> tuple[int, int]:
+        return (h - self.size) // 2, (w - self.size) // 2
+
+    def apply_host(self, x):
+        t, l = self._offsets(x.shape[0], x.shape[1])
+        return x[t : t + self.size, l : l + self.size]
+
+    def apply_device(self, x):
+        t, l = self._offsets(x.shape[0], x.shape[1])
+        return jnp.asarray(x)[t : t + self.size, l : l + self.size]
+
+    def flops(self, m: TensorMeta) -> float:
+        return 0.0  # pure slicing
+
+    def spec(self):
+        return ("CenterCrop", self.size)
+
+
+@dataclasses.dataclass(frozen=True, repr=False)
+class ToFloat(PreprocOp):
+    """uint8 -> float32 in [0, 1]."""
+
+    scale: float = 1.0 / 255.0
+    name = "to_float"
+    elementwise = True
+
+    def out_meta(self, m: TensorMeta) -> TensorMeta:
+        return TensorMeta(m.shape, "float32", m.layout)
+
+    def apply_host(self, x):
+        return x.astype(np.float32) * np.float32(self.scale)
+
+    def apply_device(self, x):
+        return x.astype(jnp.float32) * jnp.float32(self.scale)
+
+    def flops(self, m: TensorMeta) -> float:
+        return 2.0 * m.numel * _DTYPE_WEIGHT["float32"]
+
+    def spec(self):
+        return ("ToFloat", self.scale)
+
+
+@dataclasses.dataclass(frozen=True, repr=False)
+class Normalize(PreprocOp):
+    """(x - mean) / std per channel (expects float input)."""
+
+    mean: tuple[float, ...] = (0.485, 0.456, 0.406)
+    std: tuple[float, ...] = (0.229, 0.224, 0.225)
+    name = "normalize"
+    elementwise = True
+
+    def _mean_std(self, xp, layout: str, channels: int):
+        mean = xp.asarray(self.mean[:channels], dtype=xp.float32)
+        std = xp.asarray(self.std[:channels], dtype=xp.float32)
+        if layout == "CHW":
+            return mean[:, None, None], std[:, None, None]
+        return mean, std
+
+    def out_meta(self, m: TensorMeta) -> TensorMeta:
+        return m
+
+    @staticmethod
+    def _layout_of(x) -> str:
+        return "CHW" if x.shape[0] in (1, 3) and x.shape[-1] not in (1, 3) else "HWC"
+
+    def apply_host(self, x):
+        layout = self._layout_of(x)
+        c = x.shape[0] if layout == "CHW" else x.shape[-1]
+        mean, std = self._mean_std(np, layout, c)
+        return (x - mean) / std
+
+    def apply_device(self, x):
+        layout = self._layout_of(x)
+        c = x.shape[0] if layout == "CHW" else x.shape[-1]
+        mean, std = self._mean_std(jnp, layout, c)
+        return (x - mean) / std
+
+    def flops(self, m: TensorMeta) -> float:
+        return 2.0 * m.numel * _DTYPE_WEIGHT["float32"]
+
+    def spec(self):
+        return ("Normalize", self.mean, self.std)
+
+
+@dataclasses.dataclass(frozen=True, repr=False)
+class ChannelsFirst(PreprocOp):
+    """HWC -> CHW."""
+
+    name = "channels_first"
+    elementwise = True  # pure permutation; fusable into the elementwise kernel
+
+    def out_meta(self, m: TensorMeta) -> TensorMeta:
+        assert m.layout == "HWC"
+        h, w, c = m.shape
+        return TensorMeta((c, h, w), m.dtype, "CHW")
+
+    def apply_host(self, x):
+        return np.ascontiguousarray(np.transpose(x, (2, 0, 1)))
+
+    def apply_device(self, x):
+        return jnp.transpose(x, (2, 0, 1))
+
+    def flops(self, m: TensorMeta) -> float:
+        return 0.5 * m.numel * _DTYPE_WEIGHT.get(m.dtype, 4.0)  # pure data movement
+
+    def spec(self):
+        return ("ChannelsFirst",)
+
+
+@dataclasses.dataclass(frozen=True, repr=False)
+class FusedElementwise(PreprocOp):
+    """Fusion product of a run of elementwise ops (ToFloat/Normalize/
+    ChannelsFirst).  One pass over the data: the §6.2 'fusion always
+    improves performance' rule, realised either as a single numpy
+    expression (host) or the Pallas fused kernel (device)."""
+
+    ops: tuple[PreprocOp, ...]
+    name = "fused_elementwise"
+    elementwise = True
+
+    def out_meta(self, m: TensorMeta) -> TensorMeta:
+        for op in self.ops:
+            m = op.out_meta(m)
+        return m
+
+    def _folded(self, channels: int) -> tuple[np.ndarray, np.ndarray, bool]:
+        """Fold the op run into (scale, bias, transpose?) applied as
+        x*scale + bias — a single FMA per element."""
+        scale = np.ones(channels, dtype=np.float32)
+        bias = np.zeros(channels, dtype=np.float32)
+        transpose = False
+        for op in self.ops:
+            if isinstance(op, ToFloat):
+                scale *= np.float32(op.scale)
+                bias *= np.float32(op.scale)
+            elif isinstance(op, Normalize):
+                std = np.asarray(op.std[:channels], np.float32)
+                mean = np.asarray(op.mean[:channels], np.float32)
+                scale /= std
+                bias = (bias - mean) / std
+            elif isinstance(op, ChannelsFirst):
+                transpose = True
+            else:
+                raise TypeError(f"not elementwise-fusable: {op}")
+        return scale, bias, transpose
+
+    def apply_host(self, x):
+        channels = x.shape[-1]
+        scale, bias, transpose = self._folded(channels)
+        y = x.astype(np.float32) * scale + bias
+        if transpose:
+            y = np.ascontiguousarray(np.transpose(y, (2, 0, 1)))
+        return y
+
+    def apply_device(self, x):
+        channels = x.shape[-1]
+        scale, bias, transpose = self._folded(channels)
+        y = x.astype(jnp.float32) * jnp.asarray(scale) + jnp.asarray(bias)
+        if transpose:
+            y = jnp.transpose(y, (2, 0, 1))
+        return y
+
+    def flops(self, m: TensorMeta) -> float:
+        # single fused pass: one multiply-add per element (+ optional move)
+        return 2.0 * m.numel * _DTYPE_WEIGHT["float32"]
+
+    def spec(self):
+        return ("FusedElementwise",) + tuple(op.spec() for op in self.ops)
+
+
+def apply_chain_host(ops: list[PreprocOp], x: np.ndarray) -> np.ndarray:
+    for op in ops:
+        x = op.apply_host(x)
+    return x
+
+
+def apply_chain_device(ops: list[PreprocOp], x) -> jnp.ndarray:
+    for op in ops:
+        x = op.apply_device(x)
+    return x
+
+
+def chain_out_meta(ops: list[PreprocOp], m: TensorMeta) -> TensorMeta:
+    for op in ops:
+        m = op.out_meta(m)
+    return m
+
+
+def chain_flops(ops: list[PreprocOp], m: TensorMeta) -> float:
+    total = 0.0
+    for op in ops:
+        total += op.flops(m)
+        m = op.out_meta(m)
+    return total
+
+
+STANDARD_RESNET_CHAIN: list[PreprocOp] = [
+    ResizeShortSide(256),
+    CenterCrop(224),
+    ToFloat(),
+    Normalize(),
+    ChannelsFirst(),
+]

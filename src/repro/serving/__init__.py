@@ -1,0 +1,1 @@
+"""Serving substrate: KV-cache policy, serve steps, batched engine."""

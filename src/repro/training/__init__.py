@@ -1,0 +1,2 @@
+"""Training substrate: optimizer, schedules, train step, low-res-augmented
+training (paper §5.3)."""

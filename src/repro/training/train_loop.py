@@ -1,0 +1,175 @@
+"""LM training step + loop: loss, grad accumulation, mixed precision,
+checkpoint/restart, preemption, straggler accounting.
+
+``make_train_step`` builds the pjit-able step used both by the real
+training loop (examples/train_lm.py) and the multi-pod dry-run — the SAME
+function object lowers for the 512-chip mesh (launch/dryrun.py), so what
+we dry-run is what we train.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import logging
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import checkpoint as ckpt_mod
+from repro.distributed.fault_tolerance import PreemptionHandler, StragglerMonitor
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.training.optimizer import AdamWConfig, adamw_init, adamw_update, cosine_schedule
+
+log = logging.getLogger("repro.train")
+
+
+def lm_loss(params, cfg: ModelConfig, tokens, targets, loss_mask=None, **fwd_kw):
+    """Next-token cross-entropy (f32 logits path), with z-loss for
+    stability at scale."""
+    logits = T.forward(params, cfg, tokens, **fwd_kw).astype(jnp.float32)
+    if cfg.frontend == "vit_stub" and "vision_embeds" in fwd_kw:
+        n_vis = fwd_kw["vision_embeds"].shape[1]
+        logits = logits[:, n_vis:]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0] - logz
+    zloss = 1e-4 * jnp.square(logz)
+    per_tok = -ll + zloss
+    if loss_mask is None:
+        return per_tok.mean()
+    denom = jnp.maximum(loss_mask.sum(), 1.0)
+    return (per_tok * loss_mask).sum() / denom
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    optimizer: AdamWConfig = AdamWConfig()
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    grad_accum: int = 1  # microbatches per optimizer step
+    checkpoint_every: int = 500
+    checkpoint_dir: str | None = None
+    keep_checkpoints: int = 3
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    tcfg: TrainConfig,
+    loss_fn: Callable | None = None,
+    grad_pspecs=None,
+) -> Callable:
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    state = {params, opt, step}.  batch = {tokens (B, S+1) int32, ...}.
+    With grad_accum > 1 the batch leading dim is (accum, B_micro, ...)
+    and gradients average over microbatches via lax.scan (sequential —
+    memory stays one microbatch).
+
+    ``grad_pspecs``: optional pytree of PartitionSpec matching params;
+    gradients (and the accumulation buffer) are constrained to it so the
+    backward pass stays sharded like the parameters (ZeRO/FSDP).
+    """
+    loss_fn = loss_fn or lm_loss
+    schedule = cosine_schedule(tcfg.warmup_steps, tcfg.total_steps)
+
+    def constrain(grads):
+        if grad_pspecs is None:
+            return grads
+        return jax.tree.map(
+            lambda g, s: jax.lax.with_sharding_constraint(g, s), grads, grad_pspecs
+        )
+
+    def compute_loss(params, batch):
+        tokens = batch["tokens"]
+        fwd_kw = {}
+        if "vision_embeds" in batch:
+            fwd_kw["vision_embeds"] = batch["vision_embeds"]
+        if "encoder_frames" in batch:
+            fwd_kw["encoder_frames"] = batch["encoder_frames"]
+        return loss_fn(
+            params, cfg, tokens[:, :-1], tokens[:, 1:], batch.get("loss_mask"), **fwd_kw
+        )
+
+    def train_step(state, batch):
+        params, opt, step = state["params"], state["opt"], state["step"]
+        if tcfg.grad_accum > 1:
+            def micro(carry, mb):
+                loss_acc, grad_acc = carry
+                loss, grads = jax.value_and_grad(compute_loss)(params, mb)
+                grads = constrain(grads)
+                return (
+                    loss_acc + loss / tcfg.grad_accum,
+                    constrain(
+                        jax.tree.map(
+                            lambda a, g: a + g / tcfg.grad_accum, grad_acc, grads
+                        )
+                    ),
+                ), None
+
+            zeros = constrain(
+                jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            )
+            (loss, grads), _ = jax.lax.scan(micro, (0.0, zeros), batch)
+        else:
+            loss, grads = jax.value_and_grad(compute_loss)(params, batch)
+            grads = constrain(grads)
+        new_params, new_opt, gnorm = adamw_update(
+            grads, opt, params, tcfg.optimizer, schedule(step)
+        )
+        new_state = {"params": new_params, "opt": new_opt, "step": step + 1}
+        return new_state, {"loss": loss, "grad_norm": gnorm}
+
+    return train_step
+
+
+def init_train_state(cfg: ModelConfig, key) -> dict:
+    params = T.init_lm(cfg, key)
+    return {"params": params, "opt": adamw_init(params), "step": jnp.zeros((), jnp.int32)}
+
+
+def train(
+    cfg: ModelConfig,
+    tcfg: TrainConfig,
+    data_iter,
+    num_steps: int,
+    key=None,
+    state: dict | None = None,
+    preemption: PreemptionHandler | None = None,
+    log_every: int = 10,
+) -> tuple[dict, list[dict]]:
+    """Single-host training loop with checkpoint/restart + preemption +
+    straggler accounting.  Resumes from tcfg.checkpoint_dir if present."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    if state is None:
+        state = init_train_state(cfg, key)
+        if tcfg.checkpoint_dir and ckpt_mod.latest_step(tcfg.checkpoint_dir) is not None:
+            state, at = ckpt_mod.restore(tcfg.checkpoint_dir, None, state)
+            log.info("restored checkpoint at step %d", at)
+
+    step_fn = jax.jit(make_train_step(cfg, tcfg), donate_argnums=(0,))
+    preemption = preemption or PreemptionHandler(install=False)
+    monitor = StragglerMonitor()
+    history: list[dict] = []
+    start = int(state["step"])
+    for i in range(start, start + num_steps):
+        batch = next(data_iter)
+        t0 = time.perf_counter()
+        state, metrics = step_fn(state, batch)
+        loss = float(metrics["loss"])
+        dt = time.perf_counter() - t0
+        monitor.observe(i, dt)
+        history.append({"step": i, "loss": loss, "sec": dt})
+        if i % log_every == 0:
+            log.info("step %d loss %.4f (%.3fs)", i, loss, dt)
+        should_ckpt = tcfg.checkpoint_dir and (
+            (i + 1) % tcfg.checkpoint_every == 0 or preemption.should_stop
+        )
+        if should_ckpt:
+            ckpt_mod.save(tcfg.checkpoint_dir, i + 1, state, keep=tcfg.keep_checkpoints)
+        if preemption.should_stop:
+            log.warning("stopping at step %d on preemption request", i)
+            break
+    return state, history

@@ -1,0 +1,14 @@
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def smooth_image(rng, h=128, w=160, block=16):
+    """Piecewise-smooth uint8 test image (codec-friendly)."""
+    base = rng.normal(size=(-(-h // block), -(-w // block), 3))
+    img = np.kron(base, np.ones((block, block, 1))) * 35 + 128
+    return np.clip(img, 0, 255).astype(np.uint8)[:h, :w]

@@ -1,0 +1,186 @@
+"""SMOL core: cost models (paper Eq. 2/3/4 + Table 3), DAG optimizer,
+placement, cascades, aggregation, Pareto."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from conftest import smooth_image
+from repro.core import aggregation, cascade, cost_model, dag, placement
+from repro.preprocessing import ops as P
+from repro.preprocessing.ops import TensorMeta
+
+
+# ------------------------------------------------------------- cost models
+def test_table3_preproc_bound_row():
+    """Paper Table 3, preproc-bound: preproc 534, exec 4999, pipelined 557.
+    SMOL predicts 534 (4.1% err), BlazeIt 4999 (798%), Tahoma 482 (9.3%)."""
+    smol = cost_model.estimate_smol(534, [4999])
+    blazeit = cost_model.estimate_blazeit(534, [4999])
+    tahoma = cost_model.estimate_tahoma(534, [4999])
+    assert smol == 534
+    assert blazeit == 4999
+    assert abs(tahoma - 482) < 1.0
+    measured = 557
+    assert abs(smol - measured) / measured < 0.05
+    assert abs(blazeit - measured) / measured > 5
+
+
+def test_table3_balanced_row():
+    smol = cost_model.estimate_smol(4001, [4999])
+    assert smol == 4001
+    assert abs(smol - 4056) / 4056 < 0.02  # 1.4% error in the paper
+
+
+def test_table3_dnn_bound_row():
+    smol = cost_model.estimate_smol(5876, [1844])
+    assert smol == 1844
+    assert abs(smol - 1720) / 1720 < 0.08  # 7.2% error in the paper
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    pre=st.floats(10, 1e5),
+    ex=st.lists(st.floats(10, 1e5), min_size=1, max_size=4),
+)
+def test_smol_is_min_and_bounds(pre, ex):
+    pf = [1.0] * len(ex)
+    smol = cost_model.estimate_smol(pre, ex, pf)
+    tah = cost_model.estimate_tahoma(pre, ex, pf)
+    blz = cost_model.estimate_blazeit(pre, ex, pf)
+    assert smol == min(pre, blz)
+    assert tah <= smol + 1e-9  # additive model never exceeds the min model
+    assert smol <= blz + 1e-9
+
+
+def test_cascade_pass_fraction_weighting():
+    # stage 1 at 1000 im/s passes 10% to stage 2 at 100 im/s
+    t = cost_model.cascade_exec_throughput([1000, 100], [1.0, 0.1])
+    assert abs(t - 1.0 / (1 / 1000 + 0.1 / 100)) < 1e-9
+
+
+# ---------------------------------------------------------------- pareto
+@settings(max_examples=25, deadline=None)
+@given(
+    pts=st.lists(
+        st.tuples(st.floats(1, 100), st.floats(0, 1)), min_size=1, max_size=30
+    )
+)
+def test_pareto_properties(pts):
+    class E:
+        def __init__(self, t, a):
+            self.throughput, self.accuracy = t, a
+
+    items = [E(t, a) for t, a in pts]
+    front = cost_model.pareto_frontier(items)
+    # no member dominated by any other item
+    for f in front:
+        for o in items:
+            assert not (
+                (o.throughput > f.throughput and o.accuracy >= f.accuracy)
+                or (o.throughput >= f.throughput and o.accuracy > f.accuracy)
+            )
+    # every item dominated-or-equal by some frontier member
+    for o in items:
+        assert any(
+            f.throughput >= o.throughput and f.accuracy >= o.accuracy for f in front
+        )
+
+
+# ---------------------------------------------------------------- DAG opt
+def test_dag_optimizer_cuts_cost_and_preserves_semantics(rng):
+    meta = TensorMeta((320, 480, 3), "uint8", "HWC")
+    chain = P.STANDARD_RESNET_CHAIN
+    best = dag.optimize(chain, meta)
+    assert best.cost < P.chain_flops(chain, meta) * 0.6
+    img = smooth_image(rng, 320, 480)
+    ref = P.apply_chain_host(chain, img)
+    out = best.apply_host(img)
+    assert out.shape == ref.shape
+    assert np.abs(out - ref).mean() < 0.05  # reordered resize: approx equal
+
+
+def test_all_enumerated_plans_agree(rng):
+    meta = TensorMeta((256, 320, 3), "uint8", "HWC")
+    chain = P.STANDARD_RESNET_CHAIN
+    img = smooth_image(rng, 256, 320)
+    ref = P.apply_chain_host(chain, img)
+    for plan in dag.optimize(chain, meta, return_all=True):
+        out = plan.apply_host(img)
+        assert out.shape == ref.shape
+        assert np.abs(out - ref).mean() < 0.05, plan
+
+
+def test_optimized_plan_contains_fusion():
+    meta = TensorMeta((320, 480, 3), "uint8", "HWC")
+    best = dag.optimize(P.STANDARD_RESNET_CHAIN, meta)
+    assert any(isinstance(op, P.FusedElementwise) for op in best.ops)
+
+
+def test_pruning_rejects_float_resize():
+    """P2: no surviving plan resizes after the float conversion."""
+    meta = TensorMeta((320, 480, 3), "uint8", "HWC")
+    for plan in dag.optimize(P.STANDARD_RESNET_CHAIN, meta, return_all=True):
+        seen_float = False
+        for op in plan.ops:
+            if isinstance(op, (P.ToFloat, P.FusedElementwise)):
+                seen_float = True
+            assert not (seen_float and isinstance(op, (P.Resize, P.ResizeShortSide)))
+
+
+# -------------------------------------------------------------- placement
+def test_placement_direction():
+    meta = TensorMeta((320, 480, 3), "uint8", "HWC")
+    chain = dag.optimize(P.STANDARD_RESNET_CHAIN, meta).ops
+    # preprocessing-bound: decode slow -> everything to the accelerator
+    pre_bound = placement.choose_split(chain, meta, host_decode_time=1 / 500, dnn_device_time=1 / 5000)
+    # DNN-bound: decode fast, DNN slow -> ops stay on host
+    dnn_bound = placement.choose_split(chain, meta, host_decode_time=1 / 50000, dnn_device_time=1 / 100)
+    assert len(pre_bound.device_ops) >= len(dnn_bound.device_ops)
+    assert pre_bound.split <= dnn_bound.split
+
+
+def test_placement_throughput_is_min_of_stages():
+    meta = TensorMeta((320, 480, 3), "uint8", "HWC")
+    chain = dag.optimize(P.STANDARD_RESNET_CHAIN, meta).ops
+    pl = placement.choose_split(chain, meta, host_decode_time=1 / 500, dnn_device_time=1 / 5000)
+    assert pl.est_throughput == pytest.approx(
+        min(pl.est_host_throughput, pl.est_device_throughput)
+    )
+
+
+# ---------------------------------------------------------------- cascade
+def test_cascade_exits_and_pass_fractions(rng):
+    def confident(x):
+        m = x.mean(axis=(1, 2, 3))
+        return np.stack([m * 20, -m * 20], -1)
+
+    def fallback(x):
+        return np.zeros((x.shape[0], 2))
+
+    c = cascade.Cascade(
+        [cascade.CascadeStage("s", confident, 0.99), cascade.CascadeStage("t", fallback, 0.0)]
+    )
+    batch = rng.normal(size=(128, 3, 4, 4)).astype(np.float32)
+    res = c(batch)
+    assert res.pass_fractions[0] == 1.0
+    assert 0.0 <= res.pass_fractions[1] < 0.5
+    assert (res.exit_stage[res.pass_fractions[1] == 0.0 and [] or slice(None)] >= 0).all()
+
+
+# ------------------------------------------------------------ aggregation
+def test_control_variate_unbiased_and_cheaper(rng):
+    truth = rng.poisson(2.0, size=4000).astype(np.float64)
+    spec = truth + rng.normal(0, 0.4, size=4000)
+    cv = aggregation.control_variate_aggregate(spec, lambda i: truth[i], eps=0.05, seed=1)
+    plain = aggregation.plain_sampling_aggregate(lambda i: truth[i], 4000, eps=0.05, seed=1)
+    assert abs(cv.estimate - truth.mean()) < 0.15
+    assert cv.num_target_invocations < plain.num_target_invocations
+    assert cv.variance_reduction > 2.0
+
+
+def test_aggregation_respects_error_bound(rng):
+    truth = rng.poisson(3.0, size=3000).astype(np.float64)
+    spec = truth + rng.normal(0, 0.3, size=3000)
+    cv = aggregation.control_variate_aggregate(spec, lambda i: truth[i], eps=0.1, seed=2)
+    assert cv.ci_halfwidth <= 0.1 or cv.num_target_invocations == 3000

@@ -1,0 +1,110 @@
+"""JPEG-family codec: roundtrip, partial decoding, split decode."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from conftest import smooth_image
+from repro.preprocessing import dct, jpeg
+
+
+@pytest.mark.parametrize("quality", [50, 75, 95, 100])
+@pytest.mark.parametrize("subsample", [False, True])
+def test_roundtrip_quality(quality, subsample, rng):
+    img = smooth_image(rng, 120, 150)
+    out = jpeg.decode(jpeg.encode(img, quality=quality, subsample=subsample))
+    assert out.shape == img.shape
+    mae = np.abs(out.astype(int) - img.astype(int)).mean()
+    assert mae < (8.0 if quality < 90 else 2.5)
+
+
+def test_q100_near_lossless(rng):
+    img = smooth_image(rng, 64, 64)
+    out = jpeg.decode(jpeg.encode(img, quality=100))
+    assert np.abs(out.astype(int) - img.astype(int)).max() <= 2
+
+
+def test_grayscale(rng):
+    img = smooth_image(rng, 72, 80)[..., 0]
+    out = jpeg.decode(jpeg.encode(img, quality=90))
+    assert out.shape == img.shape
+
+
+def test_compression_ratio_ordering(rng):
+    img = np.clip(
+        smooth_image(rng, 128, 128).astype(int) + rng.integers(-12, 12, (128, 128, 3)),
+        0,
+        255,
+    ).astype(np.uint8)
+    sizes = {q: len(jpeg.encode(img, quality=q)) for q in (50, 75, 95)}
+    assert sizes[50] <= sizes[75] <= sizes[95]
+    assert img.size / sizes[75] > 3  # meaningfully compressed
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    y0=st.integers(0, 60),
+    x0=st.integers(0, 80),
+    hh=st.integers(8, 60),
+    ww=st.integers(8, 60),
+    data=st.data(),
+)
+def test_roi_decode_matches_full(y0, x0, hh, ww, data):
+    rng = np.random.default_rng(42)
+    img = smooth_image(rng, 128, 160)
+    blob = jpeg.encode(img, quality=90)
+    full = jpeg.decode(blob)
+    y1, x1 = min(128, y0 + hh), min(160, x0 + ww)
+    crop = jpeg.decode(blob, roi=(y0, x0, y1, x1))
+    # snap outward to the 8px block grid, as Algorithm 1 does
+    sy0, sx0 = (y0 // 8) * 8, (x0 // 8) * 8
+    sy1 = min(128, ((y1 + 7) // 8) * 8)
+    sx1 = min(160, ((x1 + 7) // 8) * 8)
+    assert np.array_equal(crop, full[sy0:sy1, sx0:sx1])
+
+
+def test_early_stop_matches_top_rows(rng):
+    img = smooth_image(rng, 128, 96)
+    blob = jpeg.encode(img, quality=85)
+    full = jpeg.decode(blob)
+    for rows in (8, 40, 64, 128):
+        assert np.array_equal(jpeg.decode(blob, max_rows=rows), full[:rows])
+
+
+def test_dc_only_progressive(rng):
+    img = smooth_image(rng, 128, 96)
+    blob = jpeg.encode(img, quality=85)
+    dc = jpeg.decode(blob, dc_only=True)
+    assert dc.shape == (16, 12, 3)
+    # the DC image is the 8x8 block means, approximately
+    ref = img.reshape(16, 8, 12, 8, 3).mean(axis=(1, 3))
+    assert np.abs(dc.astype(float) - ref).mean() < 12
+
+
+def test_split_decode_equals_full(rng):
+    """Host entropy stage + (separately applied) dequant+IDCT must equal
+    the one-shot decoder: the placement split is semantics-preserving."""
+    img = smooth_image(rng, 64, 64)
+    blob = jpeg.encode(img, quality=90)
+    hdr, planes_zz, qtables, _ = jpeg.decode_to_coefficients(blob)
+    recon = [jpeg._idct_plane(zz, qt) + 128.0 for zz, qt in zip(planes_zz, qtables)]
+    ycc = np.stack(recon, axis=-1)
+    rgb = np.clip(np.round(dct.ycbcr_to_rgb(ycc)), 0, 255).astype(np.uint8)
+    assert np.array_equal(rgb[:64, :64], jpeg.decode(blob))
+
+
+def test_partial_decode_is_cheaper(rng):
+    """ROI decoding must touch fewer bands (cost model depends on it)."""
+    import time
+
+    img = smooth_image(rng, 512, 512)
+    blob = jpeg.encode(img, quality=85)
+    t0 = time.perf_counter()
+    for _ in range(3):
+        jpeg.decode(blob)
+    t_full = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    for _ in range(3):
+        jpeg.decode(blob, roi=(0, 0, 64, 64))
+    t_roi = time.perf_counter() - t0
+    assert t_roi < t_full * 0.7

@@ -1,0 +1,134 @@
+"""Model-family correctness: forward vs prefill+decode parity for every
+architecture family in the pool."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.models import decode as D
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+
+KEY = jax.random.PRNGKey(0)
+
+
+def parity_check(cfg, **fwd_kw):
+    B, S = 2, 12
+    V = cfg.vocab_size  # compare REAL vocab only (pad logits are -1e30)
+    params = T.init_lm(cfg, KEY)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, V)
+    logits_full = T.forward(params, cfg, toks, **fwd_kw)[..., :V]
+    n_extra = fwd_kw["vision_embeds"].shape[1] if "vision_embeds" in fwd_kw else 0
+
+    pre_kw = {k: v for k, v in fwd_kw.items() if k in ("encoder_frames", "vision_embeds")}
+    lg, cache, lens = D.prefill(
+        params, cfg, toks[:, : S - 2], max_len=S + n_extra + 4, cache_dtype=jnp.float32, **pre_kw
+    )
+    ref = logits_full[:, S - 3 + n_extra]
+    scale = float(jnp.abs(ref).max()) + 1e-9
+    assert 1e-3 < scale < 1e6, scale  # sanity: not comparing pad values
+    assert float(jnp.abs(lg[..., :V] - ref).max()) / scale < 2e-2
+
+    for t in range(S - 2, S - 1):
+        lg, cache, lens = D.decode_step(params, cfg, toks[:, t], cache, lens)
+        ref = logits_full[:, t + n_extra]
+        scale = float(jnp.abs(ref).max()) + 1e-9
+        assert float(jnp.abs(lg[..., :V] - ref).max()) / scale < 2e-2
+
+
+def test_dense_gqa_qknorm():
+    parity_check(
+        ModelConfig("t", "dense", 3, 64, 4, 2, 128, 97, head_dim=16, qk_norm=True, dtype="float32")
+    )
+
+
+def test_local_global_sliding_window_tied():
+    parity_check(
+        ModelConfig(
+            "t", "dense", 4, 48, 4, 1, 96, 61, head_dim=16, sliding_window=4,
+            local_global_ratio=2, tie_embeddings=True, dtype="float32",
+        )
+    )
+
+
+def test_moe_topk():
+    parity_check(
+        ModelConfig(
+            "t", "moe", 3, 48, 4, 4, 32, 61, head_dim=12, num_experts=8,
+            experts_per_token=2, moe_capacity_factor=4.0, dtype="float32",
+        )
+    )
+
+
+def test_mla_moe_shared_prefix():
+    parity_check(
+        ModelConfig(
+            "t", "moe", 3, 64, 4, 4, 32, 61, attn_type="mla", kv_lora_rank=16,
+            q_lora_rank=24, rope_head_dim=8, nope_head_dim=16, v_head_dim=16,
+            num_experts=8, num_shared_experts=2, experts_per_token=2,
+            first_dense_layers=1, dense_d_ff=128, moe_capacity_factor=4.0,
+            dtype="float32",
+        )
+    )
+
+
+def test_hybrid_attn_mamba():
+    parity_check(
+        ModelConfig(
+            "t", "hybrid", 3, 40, 5, 5, 96, 61, head_dim=8, sliding_window=4,
+            ssm_state=8, dtype="float32",
+        )
+    )
+
+
+def test_xlstm():
+    parity_check(
+        ModelConfig("t", "ssm", 4, 32, 4, 4, 0, 61, slstm_every=2, dtype="float32")
+    )
+
+
+def test_whisper_encdec():
+    cfg = ModelConfig(
+        "t", "audio", 2, 32, 4, 4, 64, 61, head_dim=16, encoder_layers=2,
+        encoder_seq_len=8, cross_attention=True, mlp_act="gelu",
+        norm_type="layernorm", dtype="float32",
+    )
+    frames = jax.random.normal(jax.random.PRNGKey(3), (2, 8, 32), jnp.float32)
+    parity_check(cfg, encoder_frames=frames)
+
+
+def test_vlm():
+    cfg = ModelConfig(
+        "t", "vlm", 2, 32, 4, 2, 64, 61, head_dim=8, frontend="vit_stub",
+        num_vision_tokens=6, dtype="float32",
+    )
+    vis = jax.random.normal(jax.random.PRNGKey(4), (2, 6, 32), jnp.float32)
+    parity_check(cfg, vision_embeds=vis)
+
+
+def test_blockwise_attention_matches_dense():
+    from repro.models.layers import _attention_dense, attention_scores_blockwise
+
+    rng = jax.random.PRNGKey(2)
+    q = jax.random.normal(rng, (2, 64, 4, 16))
+    k = jax.random.normal(jax.random.PRNGKey(3), (2, 64, 2, 16))
+    v = jax.random.normal(jax.random.PRNGKey(4), (2, 64, 2, 16))
+    blocky = attention_scores_blockwise(q, k, v, causal=True, block=16)
+    dense = _attention_dense(q, k, v, True, None, 16**-0.5)
+    assert float(jnp.abs(blocky - dense).max()) < 1e-5
+
+
+def test_moe_load_is_spread():
+    """Router at init should not collapse onto one expert."""
+    from repro.models import layers as L
+
+    cfg = ModelConfig(
+        "t", "moe", 1, 32, 4, 4, 16, 61, num_experts=8, experts_per_token=2,
+        moe_capacity_factor=4.0, dtype="float32",
+    )
+    p = L.moe_init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 32, 32))
+    gates = jax.nn.softmax(x.reshape(-1, 32) @ p["router"], axis=-1)
+    _, idx = jax.lax.top_k(gates, 2)
+    counts = jnp.bincount(idx.reshape(-1), length=8)
+    assert int(counts.max()) < 2 * 4 * 32  # no single-expert collapse

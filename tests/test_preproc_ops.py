@@ -1,0 +1,55 @@
+"""Preprocessing operators: host/device parity, fusion correctness."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from conftest import smooth_image
+from repro.preprocessing import ops as P
+from repro.preprocessing.ops import TensorMeta
+
+
+@settings(max_examples=10, deadline=None)
+@given(h=st.integers(40, 200), w=st.integers(40, 200))
+def test_chain_host_device_parity(h, w):
+    rng = np.random.default_rng(7)
+    img = smooth_image(rng, h, w)
+    chain = P.STANDARD_RESNET_CHAIN
+    yh = P.apply_chain_host(chain, img)
+    yd = np.asarray(P.apply_chain_device(chain, img))
+    assert yh.shape == (3, 224, 224)
+    assert np.abs(yh - yd).max() < 1e-4
+
+
+def test_out_meta_tracks_shapes(rng):
+    meta = TensorMeta((300, 400, 3), "uint8", "HWC")
+    out = P.chain_out_meta(P.STANDARD_RESNET_CHAIN, meta)
+    assert out.shape == (3, 224, 224) and out.dtype == "float32" and out.layout == "CHW"
+
+
+def test_fused_equals_unfused(rng):
+    img = smooth_image(rng, 120, 140)
+    tail = [P.ToFloat(), P.Normalize(), P.ChannelsFirst()]
+    fused = P.FusedElementwise(tuple(tail))
+    a = P.apply_chain_host(tail, img)
+    b = fused.apply_host(img)
+    assert np.abs(a - b).max() < 1e-5
+    bd = np.asarray(fused.apply_device(img))
+    assert np.abs(a - bd).max() < 1e-5
+
+
+def test_fusion_reduces_cost(rng):
+    meta = TensorMeta((224, 224, 3), "uint8", "HWC")
+    tail = [P.ToFloat(), P.Normalize(), P.ChannelsFirst()]
+    fused = [P.FusedElementwise(tuple(tail))]
+    assert P.chain_flops(fused, meta) < P.chain_flops(tail, meta)
+
+
+@settings(max_examples=10, deadline=None)
+@given(target=st.sampled_from([64, 128, 161, 224, 256]))
+def test_resize_short_side_geometry(target):
+    rng = np.random.default_rng(3)
+    img = smooth_image(rng, 97, 201)
+    out = P.ResizeShortSide(target).apply_host(img)
+    assert min(out.shape[:2]) == target
+    # aspect preserved within rounding
+    assert abs(out.shape[1] / out.shape[0] - 201 / 97) < 0.05
