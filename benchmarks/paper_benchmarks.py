@@ -38,7 +38,6 @@ def _tput_row(name: str, items_per_sec: float, extra: str = "") -> tuple[str, fl
 # --------------------------------------------------------------- Figure 1
 def fig1_breakdown() -> ROWS:
     """Stage-by-stage end-to-end inference breakdown (paper Fig. 1)."""
-    rng = np.random.default_rng(0)
     imgs, _ = datasets.raw_image_batch("imagenet-sim", 32, seed=5)
     blobs = [jpeg.encode(im, quality=85) for im in imgs]
     rows: ROWS = []
@@ -55,7 +54,7 @@ def fig1_breakdown() -> ROWS:
     cc = P.CenterCrop(V.INPUT)
     tail = P.FusedElementwise((P.ToFloat(), P.Normalize(), P.ChannelsFirst()))
     t0 = time.perf_counter()
-    final = [tail.apply_host(cc.apply_host(r)) for r in resized]
+    _ = [tail.apply_host(cc.apply_host(r)) for r in resized]
     rows.append(_tput_row("fig1.crop_norm_layout", len(blobs) / (time.perf_counter() - t0)))
 
     _, _, fwd = V.train_model("imagenet-sim", "cnn-l", "reg", steps=1)
@@ -64,7 +63,7 @@ def fig1_breakdown() -> ROWS:
 
     t0 = time.perf_counter()
     for b in blobs:
-        x = tail.apply_host(cc.apply_host(rs.apply_host(jpeg.decode(b))))
+        _ = tail.apply_host(cc.apply_host(rs.apply_host(jpeg.decode(b))))
     pre_tput = len(blobs) / (time.perf_counter() - t0)
     rows.append(_tput_row("fig1.preprocessing_total", pre_tput,
                           f"exec/preproc ratio {exec_tput / pre_tput:.1f}x"))

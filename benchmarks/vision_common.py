@@ -58,7 +58,6 @@ def init_cnn(key, widths, blocks, num_classes):
 
 def cnn_forward(params, x):
     y = jax.nn.relu(conv(x, params["stem"], stride=2))
-    stage = 0
     for i, w in enumerate(params["layers"]):
         stride = 2 if (i > 0 and w.shape[2] != w.shape[3]) else 1
         y = jax.nn.relu(conv(y, w, stride=stride))

@@ -1,72 +1,121 @@
-"""Image-analytics deployment (paper §3.2 classification example).
+"""Image-analytics deployment (paper §3.2) on the SmolRuntime facade.
 
-Full SMOL loop on a synthetic dataset: train the model family at two
-input-fidelity conditions (regular + low-res-augmented, §5.3), calibrate
-decode/exec throughputs, generate the 𝒟 x ℱ plan space, and report the
-Pareto frontier + the plan selected under an accuracy constraint.
+The full SMOL loop, end to end through one object: train the model family
+at two input-fidelity conditions (regular + low-res-augmented, §5.3), hand
+the runtime the model set 𝒟, the native format set ℱ, and an accuracy
+constraint — it calibrates decode/exec throughputs, generates and ranks the
+𝒟 × ℱ plan space, splits preprocessing across host/device, and runs the
+corpus through the pipelined engine.
 
     PYTHONPATH=src python examples/image_analytics.py
 """
 
+import os
 import sys
 
-sys.path.insert(0, "benchmarks")
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
-import numpy as np  # noqa: E402
+import numpy as np
 
-from benchmarks import vision_common as V  # noqa: E402
-from repro.core.cost_model import estimate_smol, pareto_frontier  # noqa: E402
-from repro.preprocessing.formats import (  # noqa: E402
+from benchmarks import vision_common as V
+from repro.core.planner import ModelSpec
+from repro.preprocessing.formats import (
     FULL_JPEG_Q95,
     THUMB_JPEG_161_Q75,
     THUMB_JPEG_161_Q95,
     THUMB_PNG_161,
 )
+from repro.runtime import RuntimeConfig, SmolRuntime
 
-FORMATS = {
-    "full": FULL_JPEG_Q95,
-    "png161": THUMB_PNG_161,
-    "jq95": THUMB_JPEG_161_Q95,
-    "jq75": THUMB_JPEG_161_Q75,
+FORMATS = [FULL_JPEG_Q95, THUMB_PNG_161, THUMB_JPEG_161_Q95, THUMB_JPEG_161_Q75]
+COND_BY_KEY = {
+    FULL_JPEG_Q95.key: "full",
+    THUMB_PNG_161.key: "png161",
+    THUMB_JPEG_161_Q95.key: "jq95",
+    THUMB_JPEG_161_Q75.key: "jq75",
 }
 
 
-class Plan:
-    def __init__(self, name, throughput, accuracy):
-        self.name, self.throughput, self.accuracy = name, throughput, accuracy
+def build_model_set(ds: str):
+    """𝒟: each architecture trained regular (full-res only) and low-res-
+    augmented (§5.3, accurate on the thumbnail formats too)."""
+    models, model_fns = [], {}
+    for arch in ("cnn-s", "cnn-l"):
+        _, reg_accs, reg_fwd = V.train_model(ds, arch, "reg")
+        _, aug_accs, aug_fwd = V.train_model(ds, arch, "png161")
+        exec_tput = V.measure_exec_throughput(reg_fwd)
 
-    def __repr__(self):
-        return f"{self.name}: {self.throughput:.0f} im/s @ {self.accuracy:.3f}"
+        name = f"{arch}-reg"
+        models.append(
+            ModelSpec(name, V.INPUT, exec_tput, {FULL_JPEG_Q95.key: reg_accs["full"]})
+        )
+        model_fns[name] = reg_fwd
+
+        name = f"{arch}-aug"
+        models.append(
+            ModelSpec(
+                name,
+                V.INPUT,
+                exec_tput,
+                {k: aug_accs[c] for k, c in COND_BY_KEY.items() if k != FULL_JPEG_Q95.key},
+            )
+        )
+        model_fns[name] = aug_fwd
+    return models, model_fns
 
 
 def main():
     ds = "animals-10"
     stored = V.dataset_cache(ds, 8, 96)[4]
-    dec = {k: V.measure_decode_throughput(stored, f) for k, f in FORMATS.items()}
-    print("decode throughputs:", {k: round(v, 1) for k, v in dec.items()})
+    models, model_fns = build_model_set(ds)
 
-    plans = []
-    for model in ("cnn-s", "cnn-l"):
-        _, reg_accs, fwd = V.train_model(ds, model, "reg")
-        _, aug_accs, _ = V.train_model(ds, model, "png161")  # §5.3 training
-        exec_tput = V.measure_exec_throughput(fwd)
-        plans.append(Plan(f"naive/{model}@full", estimate_smol(dec["full"], [exec_tput]),
-                          reg_accs["full"]))
-        for cond in ("png161", "jq95", "jq75"):
-            plans.append(Plan(f"smol/{model}@{cond}",
-                              estimate_smol(dec[cond], [exec_tput]), aug_accs[cond]))
+    naive_acc = max(
+        m.accuracy_by_format[FULL_JPEG_Q95.key] for m in models if m.name.endswith("-reg")
+    )
+    floor = naive_acc - 0.02
 
-    front = pareto_frontier(plans)
-    print("\nPareto frontier (throughput x accuracy):")
-    for p in front:
+    runtime = SmolRuntime(
+        models,
+        FORMATS,
+        model_fns,
+        calibration=stored[:8],
+        config=RuntimeConfig(
+            batch_size=16, num_workers=2, min_accuracy=floor, recalibrate_every=48
+        ),
+    )
+
+    print("Pareto frontier (estimated throughput x accuracy):")
+    for p in runtime.pareto():
         print("  ", p)
 
-    naive_best = max(p for p in plans if p.name.startswith("naive"))
-    floor = naive_best.accuracy - 0.02
-    feasible = [p for p in plans if p.accuracy >= floor]
-    chosen = max(feasible, key=lambda p: p.throughput)
-    print(f"\naccuracy-constrained selection (floor {floor:.3f}): {chosen}")
-    print(f"speedup over naive full-res plan: {chosen.throughput / naive_best.throughput:.2f}x")
+    plan = runtime.plan()
+    print(f"\naccuracy-constrained selection (floor {floor:.3f}): {plan}")
+    print(
+        f"placement: {plan.placement.split} host op(s), "
+        f"{len(plan.placement.device_ops)} device op(s)"
+    )
+
+    outputs, report = runtime.run(stored)
+    preds = [int(np.argmax(o)) for o in outputs]
+    print(f"\npipelined run: {report.stats.num_items} images "
+          f"@ {report.throughput:.1f} im/s (plan {report.plan_key})")
+    print(f"stage occupancy: host {report.stats.host_busy_seconds:.2f}s, "
+          f"device {report.stats.device_busy_seconds:.2f}s "
+          f"over {report.stats.wall_seconds:.2f}s wall")
+    moved = [ev for ev in report.recalibrations if ev.changed]
+    for ev in moved:
+        print(f"recalibration: split {ev.old_split} -> {ev.new_split}")
+    if report.recalibrations and not moved:
+        print(f"recalibration: split stable at "
+              f"{report.recalibrations[-1].new_split} ({len(report.recalibrations)} checks)")
+    print(f"class histogram: {np.bincount(preds).tolist()}")
+
+    # context: what the naive full-res plan would have cost
+    naive = [p for p in runtime.planner().generate() if p.model.name.endswith("-reg")]
+    if naive:
+        best_naive = max(naive, key=lambda p: p.estimate.throughput)
+        print(f"\nest. speedup over naive full-res plan: "
+              f"{plan.estimate.throughput / best_naive.estimate.throughput:.2f}x")
 
 
 if __name__ == "__main__":

@@ -10,7 +10,7 @@ over 𝒟 x ℱ, and pipelined execution of the chosen plan.
 import numpy as np
 
 from repro.core import dag
-from repro.core.cost_model import estimate_smol, pareto_frontier
+from repro.core.cost_model import estimate_smol
 from repro.core.engine import measure_plan
 from repro.data import datasets
 from repro.preprocessing import ops as P

@@ -7,7 +7,6 @@ an inference paper, so serving is the end-to-end deliverable).
 
 import argparse
 
-import jax
 import numpy as np
 
 from repro.data.pipeline import PrefetchIterator, ShardedBatchSource, synthetic_lm_batch_fn
@@ -54,8 +53,9 @@ def main():
           f"in {stats.wall_seconds:.2f}s ({stats.tokens_per_second:.1f} tok/s, "
           f"{stats.decode_steps} decode steps)")
     for r in done[:3]:
-        ttft = (r.first_token_at or 0) - r.submitted_at if r.submitted_at else None
-        print(f"  req {r.uid}: output ids {r.output_ids[:8]}...")
+        ttft = r.first_token_at - r.submitted_at if (r.first_token_at and r.submitted_at) else None
+        ttft_s = "n/a" if ttft is None else f"{ttft:.3f}s"
+        print(f"  req {r.uid}: ttft {ttft_s}, output ids {r.output_ids[:8]}...")
 
 
 if __name__ == "__main__":

@@ -18,7 +18,7 @@ exactly the Figure 9 story.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Sequence
+from typing import Callable
 
 import numpy as np
 

@@ -40,10 +40,29 @@ class EngineStats:
     num_items: int
     wall_seconds: float
     batches: int
+    # Stage occupancy, the feedback signal for online recalibration (§6.3):
+    # host_busy_seconds sums wall time spent inside host_fn across all
+    # producers; device_busy_seconds estimates the accelerator stream's busy
+    # interval (XLA executes one ordered stream per core, so consecutive
+    # dispatch->completion intervals are merged, not double-counted).
+    host_busy_seconds: float = 0.0
+    device_busy_seconds: float = 0.0
 
     @property
     def throughput(self) -> float:
         return self.num_items / self.wall_seconds if self.wall_seconds > 0 else float("inf")
+
+    @property
+    def host_seconds_per_item(self) -> float:
+        return self.host_busy_seconds / self.num_items if self.num_items else 0.0
+
+    @property
+    def device_seconds_per_batch(self) -> float:
+        return self.device_busy_seconds / self.batches if self.batches else 0.0
+
+    @property
+    def device_seconds_per_item(self) -> float:
+        return self.device_busy_seconds / self.num_items if self.num_items else 0.0
 
 
 class PipelinedEngine:
@@ -88,13 +107,20 @@ class PipelinedEngine:
             self.device_fn = jax.jit(device_fn)
         else:
             self.device_fn = device_fn
+        self._warmed = False
 
     # ---------------------------------------------------------------- modes
     def run_preproc_only(self, items: Sequence[Any]) -> EngineStats:
         """Producer-pool throughput with the device leg disabled."""
         t0 = time.perf_counter()
-        self._drain_producers(items, sink=lambda idx, arr: None)
-        return EngineStats("preproc_only", len(items), time.perf_counter() - t0, 0)
+        host_busy = self._drain_producers(items, sink=lambda idx, arr: None)
+        return EngineStats(
+            "preproc_only",
+            len(items),
+            time.perf_counter() - t0,
+            0,
+            host_busy_seconds=host_busy,
+        )
 
     def run_exec_only(self, num_items: int) -> EngineStats:
         """Device throughput on synthetic inputs (paper §4: 'measured using
@@ -111,25 +137,43 @@ class PipelinedEngine:
                 jax.block_until_ready(outs.pop(0))  # bounded in-flight work
         jax.block_until_ready(outs)
         dt = time.perf_counter() - t0
-        return EngineStats("exec_only", n_batches * self.batch_size, dt, n_batches)
+        return EngineStats(
+            "exec_only", n_batches * self.batch_size, dt, n_batches, device_busy_seconds=dt
+        )
 
     def run(
         self, items: Sequence[Any], return_outputs: bool = True
     ) -> tuple[list[Any], EngineStats]:
         """Fully pipelined end-to-end execution."""
         n = len(items)
-        # Warm up the compiled graph outside the measured window.
-        warm = self.device_fn(self._staging[0])
-        jax.block_until_ready(warm)
+        if not self._warmed:
+            # Warm up the compiled graph outside the measured window (once
+            # per engine — chunked callers reuse the compilation).
+            jax.block_until_ready(self.device_fn(self._staging[0]))
+            self._warmed = True
 
         q: queue.Queue = queue.Queue(maxsize=self.queue_depth)
         stop = object()
+        host_lock = threading.Lock()
+        clock = _DeviceClock()
+        host_busy = 0.0
+        errors: list[BaseException] = []
 
         def producer(worker_id: int):
+            nonlocal host_busy
+            busy = 0.0
             try:
                 for idx in range(worker_id, n, self.num_workers):
-                    q.put((idx, self.host_fn(items[idx])))
+                    t_in = time.perf_counter()
+                    arr = self.host_fn(items[idx])
+                    busy += time.perf_counter() - t_in
+                    q.put((idx, arr))
+            except BaseException as e:  # noqa: BLE001 — re-raised to caller
+                with host_lock:
+                    errors.append(e)
             finally:
+                with host_lock:
+                    host_busy += busy
                 q.put((None, stop))  # always release the consumer
 
         t0 = time.perf_counter()
@@ -141,8 +185,8 @@ class PipelinedEngine:
             t.start()
 
         outputs: list[Any] = [None] * n if return_outputs else []
-        in_flight: list[tuple[list[int], Any]] = []
-        done_workers, received = 0, 0
+        in_flight: list[tuple[list[int], Any, float]] = []
+        done_workers = 0
         slot = 0
         batch_idx: list[int] = []
         buf = self._staging[slot]
@@ -152,61 +196,93 @@ class PipelinedEngine:
             nonlocal slot, buf, batch_idx, n_batches
             if count == 0:
                 return
+            dispatch_t = time.perf_counter()
             dev_out = self.device_fn(buf)  # async dispatch
-            in_flight.append((list(batch_idx[:count]), dev_out))
+            in_flight.append((list(batch_idx[:count]), dev_out, dispatch_t))
             n_batches += 1
             if len(in_flight) >= len(self._staging):
-                self._retire(in_flight.pop(0), outputs, return_outputs)
+                self._retire(in_flight.pop(0), outputs, return_outputs, clock)
             slot = (slot + 1) % len(self._staging)
             buf = self._staging[slot]
             batch_idx = []
 
+        def retire_ready():
+            # Eager retirement: record completion close to when the device
+            # actually finished, instead of when the ring forces a block.
+            # Without this, deferred retires attribute consumer/host wait
+            # time to the device and inflate device_busy_seconds — the
+            # recalibration signal — in host-bound regimes.
+            while in_flight and _array_is_ready(in_flight[0][1]):
+                self._retire(in_flight.pop(0), outputs, return_outputs, clock)
+
         while done_workers < self.num_workers:
-            idx, arr = q.get()
+            retire_ready()
+            try:
+                # short timeout so completions are noticed (and timed) even
+                # when the host stage starves the queue
+                idx, arr = q.get(timeout=0.002 if in_flight else None)
+            except queue.Empty:
+                continue
             if arr is stop:
                 done_workers += 1
                 continue
             buf[len(batch_idx)] = arr
             batch_idx.append(idx)
-            received += 1
             if len(batch_idx) == self.batch_size:
                 flush(self.batch_size)
         if batch_idx:  # ragged tail: pad (padding rows already zeroed-ish; fine)
             flush(len(batch_idx))
         while in_flight:
-            self._retire(in_flight.pop(0), outputs, return_outputs)
+            self._retire(in_flight.pop(0), outputs, return_outputs, clock)
         dt = time.perf_counter() - t0
         for t in threads:
             t.join()
-        return outputs, EngineStats("pipelined", n, dt, n_batches)
+        if errors:
+            raise errors[0]
+        return outputs, EngineStats(
+            "pipelined",
+            n,
+            dt,
+            n_batches,
+            host_busy_seconds=host_busy,
+            device_busy_seconds=clock.busy,
+        )
 
     # -------------------------------------------------------------- helpers
-    def _retire(self, entry, outputs, return_outputs: bool):
-        idxs, dev_out = entry
+    def _retire(self, entry, outputs, return_outputs: bool, clock: "_DeviceClock | None" = None):
+        idxs, dev_out, dispatch_t = entry
         if return_outputs:
             host_out = np.asarray(dev_out)
             for row, idx in enumerate(idxs):
                 outputs[idx] = host_out[row]
         else:
             jax.block_until_ready(dev_out)
+        if clock is not None:
+            clock.retire(dispatch_t)
 
-    def _drain_producers(self, items: Sequence[Any], sink):
+    def _drain_producers(self, items: Sequence[Any], sink) -> float:
+        """Run the producer pool to completion; returns summed host_fn time."""
         n = len(items)
         done = threading.Event()
-        counter = {"n": 0}
+        counter = {"n": 0, "busy": 0.0}
         errors: list[BaseException] = []
         lock = threading.Lock()
 
         def producer(worker_id: int):
+            busy = 0.0
             try:
                 for idx in range(worker_id, n, self.num_workers):
-                    sink(idx, self.host_fn(items[idx]))
+                    t_in = time.perf_counter()
+                    arr = self.host_fn(items[idx])
+                    busy += time.perf_counter() - t_in
+                    sink(idx, arr)
             except BaseException as e:  # noqa: BLE001 — surfaced to caller
                 with lock:
                     errors.append(e)
             finally:
                 with lock:
                     counter["n"] += 1
+                    counter["busy"] += busy
                     if counter["n"] == self.num_workers:
                         done.set()
 
@@ -221,6 +297,38 @@ class PipelinedEngine:
             t.join()
         if errors:
             raise errors[0]
+        return counter["busy"]
+
+
+def _array_is_ready(x) -> bool:
+    """True when an async-dispatched output has materialized (best effort)."""
+    probe = x
+    if isinstance(x, (tuple, list)) and x:
+        probe = x[0]
+    is_ready = getattr(probe, "is_ready", None)
+    return bool(is_ready()) if callable(is_ready) else False
+
+
+class _DeviceClock:
+    """Busy-interval accumulator for the (serial) accelerator stream.
+
+    Dispatch happens asynchronously; by the time we block on a batch, later
+    batches may already be queued.  Merging [dispatch, retire] intervals via
+    a watermark avoids counting the overlap twice.  Retire times are an
+    upper bound on completion; the engine retires eagerly (is_ready polling)
+    to keep the bound tight.
+    """
+
+    def __init__(self):
+        self.busy = 0.0
+        self._watermark = 0.0
+
+    def retire(self, dispatch_t: float) -> None:
+        now = time.perf_counter()
+        start = max(dispatch_t, self._watermark)
+        if now > start:
+            self.busy += now - start
+        self._watermark = now
 
 
 def measure_plan(

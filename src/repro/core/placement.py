@@ -55,6 +55,73 @@ def _stage_time(
     return t, m
 
 
+def _per_op_times(
+    chain: Sequence[PreprocOp],
+    in_meta: TensorMeta,
+    host_ops_per_sec: float,
+    device_ops_per_sec: float,
+    measured_host_times: Sequence[float] | None = None,
+    measured_device_times: Sequence[float] | None = None,
+) -> tuple[list[float], list[float]]:
+    """Per-op (host, device) seconds as the chain's metadata threads through."""
+    host_times, device_times = [], []
+    m = in_meta
+    for i, op in enumerate(chain):
+        if measured_host_times is not None:
+            host_times.append(measured_host_times[i])
+        else:
+            host_times.append(op.flops(m) / host_ops_per_sec)
+        if measured_device_times is not None:
+            device_times.append(measured_device_times[i])
+        else:
+            device_times.append(op.flops(m) / device_ops_per_sec)
+        m = op.out_meta(m)
+    return host_times, device_times
+
+
+def _split_candidate(
+    chain: Sequence[PreprocOp],
+    split: int,
+    host_decode_time: float,
+    dnn_device_time: float,
+    host_times: Sequence[float],
+    device_times: Sequence[float],
+) -> Placement:
+    t_host = host_decode_time + sum(host_times[:split])
+    t_dev = sum(device_times[split:]) + dnn_device_time
+    tput_host = 1.0 / t_host if t_host > 0 else float("inf")
+    tput_dev = 1.0 / t_dev if t_dev > 0 else float("inf")
+    return Placement(
+        split=split,
+        host_ops=tuple(chain[:split]),
+        device_ops=tuple(chain[split:]),
+        est_throughput=min(tput_host, tput_dev),
+        est_host_throughput=tput_host,
+        est_device_throughput=tput_dev,
+    )
+
+
+def placement_for_split(
+    chain: Sequence[PreprocOp],
+    in_meta: TensorMeta,
+    split: int,
+    host_decode_time: float,
+    dnn_device_time: float,
+    host_ops_per_sec: float = 2.0e9,
+    device_ops_per_sec: float | None = None,
+) -> Placement:
+    """The Placement (with estimates) for one *forced* split point.
+
+    Shares the cost formula with :func:`choose_split` so callers comparing
+    a forced split against the optimum (e.g. recalibration hysteresis)
+    never diverge from the optimizer's own arithmetic.
+    """
+    if device_ops_per_sec is None:
+        device_ops_per_sec = host_ops_per_sec * DEFAULT_DEVICE_SPEEDUP
+    host_times, device_times = _per_op_times(chain, in_meta, host_ops_per_sec, device_ops_per_sec)
+    return _split_candidate(chain, split, host_decode_time, dnn_device_time, host_times, device_times)
+
+
 def choose_split(
     chain: Sequence[PreprocOp],
     in_meta: TensorMeta,
@@ -74,35 +141,14 @@ def choose_split(
     """
     if device_ops_per_sec is None:
         device_ops_per_sec = host_ops_per_sec * DEFAULT_DEVICE_SPEEDUP
-    n = len(chain)
-
-    host_times, device_times = [], []
-    m = in_meta
-    for i, op in enumerate(chain):
-        if measured_host_times is not None:
-            host_times.append(measured_host_times[i])
-        else:
-            host_times.append(op.flops(m) / host_ops_per_sec)
-        if measured_device_times is not None:
-            device_times.append(measured_device_times[i])
-        else:
-            device_times.append(op.flops(m) / device_ops_per_sec)
-        m = op.out_meta(m)
-
+    host_times, device_times = _per_op_times(
+        chain, in_meta, host_ops_per_sec, device_ops_per_sec,
+        measured_host_times, measured_device_times,
+    )
     best: Placement | None = None
-    for split in range(n + 1):
-        t_host = host_decode_time + sum(host_times[:split])
-        t_dev = sum(device_times[split:]) + dnn_device_time
-        tput_host = 1.0 / t_host if t_host > 0 else float("inf")
-        tput_dev = 1.0 / t_dev if t_dev > 0 else float("inf")
-        tput = min(tput_host, tput_dev)
-        cand = Placement(
-            split=split,
-            host_ops=tuple(chain[:split]),
-            device_ops=tuple(chain[split:]),
-            est_throughput=tput,
-            est_host_throughput=tput_host,
-            est_device_throughput=tput_dev,
+    for split in range(len(chain) + 1):
+        cand = _split_candidate(
+            chain, split, host_decode_time, dnn_device_time, host_times, device_times
         )
         if best is None or cand.est_throughput > best.est_throughput:
             best = cand

@@ -123,23 +123,27 @@ class Planner:
         self.device_ops_per_sec = device_ops_per_sec
         self.use_roi_decode = use_roi_decode
         self.estimator = estimator
+        self._generated: list[QueryPlan] | None = None  # inputs are immutable
 
-    def _plan_one(self, model: ModelSpec, fmt: ImageFormat) -> QueryPlan | None:
-        acc = model.accuracy_by_format.get(fmt.key)
-        if acc is None:
-            return None  # model was not trained/evaluated for this format
-        in_meta = self.decoded_meta(fmt)
-        chain = standard_chain(model.input_size)
-        plan = dag_mod.optimize(chain, in_meta)
-        t_decode = self.decode_time(fmt)
-        t_dnn = 1.0 / model.exec_throughput
+    def _place_and_estimate(
+        self,
+        model: ModelSpec,
+        fmt: ImageFormat,
+        dag_plan: dag_mod.DagPlan,
+        accuracy: float,
+        t_decode: float,
+        t_dnn: float,
+        host_ops_per_sec: float | None = None,
+        device_ops_per_sec: float | None = None,
+    ) -> QueryPlan:
+        """Shared tail of planning: split the chain, estimate, wrap."""
         placement = placement_mod.choose_split(
-            plan.ops,
-            in_meta,
+            dag_plan.ops,
+            self.decoded_meta(fmt),
             host_decode_time=t_decode,
             dnn_device_time=t_dnn,
-            host_ops_per_sec=self.host_ops_per_sec,
-            device_ops_per_sec=self.device_ops_per_sec,
+            host_ops_per_sec=host_ops_per_sec or self.host_ops_per_sec,
+            device_ops_per_sec=device_ops_per_sec or self.device_ops_per_sec,
         )
         stages = StageThroughputs(
             preproc=placement.est_host_throughput,
@@ -148,19 +152,58 @@ class Planner:
         )
         est = PlanEstimate(
             throughput=stages.estimate(self.estimator),
-            accuracy=acc,
+            accuracy=accuracy,
             stages=stages,
         )
-        return QueryPlan(model, fmt, plan, placement, est)
+        return QueryPlan(model, fmt, dag_plan, placement, est)
+
+    def _plan_one(self, model: ModelSpec, fmt: ImageFormat) -> QueryPlan | None:
+        acc = model.accuracy_by_format.get(fmt.key)
+        if acc is None:
+            return None  # model was not trained/evaluated for this format
+        chain = standard_chain(model.input_size)
+        dag_plan = dag_mod.optimize(chain, self.decoded_meta(fmt))
+        return self._place_and_estimate(
+            model, fmt, dag_plan, acc, self.decode_time(fmt), 1.0 / model.exec_throughput
+        )
+
+    def replan(
+        self,
+        plan: QueryPlan,
+        decode_time: float | None = None,
+        exec_throughput: float | None = None,
+        host_ops_per_sec: float | None = None,
+        device_ops_per_sec: float | None = None,
+    ) -> QueryPlan:
+        """Re-derive one plan's placement + estimate from fresher measurements.
+
+        The recalibration entry point (§6.3, adaptive): the runtime feeds
+        back measured stage throughputs and gets an updated host/device
+        split without regenerating the 𝒟 × ℱ space.
+        """
+        t_decode = decode_time if decode_time is not None else self.decode_time(plan.fmt)
+        t_dnn = 1.0 / (exec_throughput or plan.model.exec_throughput)
+        return self._place_and_estimate(
+            plan.model,
+            plan.fmt,
+            plan.dag_plan,
+            plan.estimate.accuracy,
+            t_decode,
+            t_dnn,
+            host_ops_per_sec=host_ops_per_sec,
+            device_ops_per_sec=device_ops_per_sec,
+        )
 
     def generate(self) -> list[QueryPlan]:
-        plans = []
-        for m in self.models:
-            for f in self.formats:
-                p = self._plan_one(m, f)
-                if p is not None:
-                    plans.append(p)
-        return plans
+        if self._generated is None:
+            plans = []
+            for m in self.models:
+                for f in self.formats:
+                    p = self._plan_one(m, f)
+                    if p is not None:
+                        plans.append(p)
+            self._generated = plans
+        return list(self._generated)
 
     def pareto(self) -> list[QueryPlan]:
         return pareto_frontier(

@@ -259,11 +259,13 @@ def _analyze_computation(lines: list[str]) -> ComputationCost:
             continue
 
         if op == "dot":
-            ops_m = re.search(r"dot\(%([\w.\-]+),\s*%([\w.\-]+)\)", rest)
+            # operands may appear bare ("dot(%a, %b)") or typed
+            # ("dot(f32[..] %a, f32[..] %b)") depending on the XLA version
+            dot_ops = _operand_names(rest, "dot")
             lc_m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", rest)
             contracted = 1
-            if ops_m and lc_m and ops_m.group(1) in shapes:
-                lhs_dtype, lhs_shape = shapes[ops_m.group(1)]
+            if dot_ops and lc_m and dot_ops[0] in shapes:
+                lhs_dtype, lhs_shape = shapes[dot_ops[0]]
                 for d in lc_m.group(1).split(","):
                     if d and int(d) < len(lhs_shape):
                         contracted *= lhs_shape[int(d)]
@@ -274,10 +276,10 @@ def _analyze_computation(lines: list[str]) -> ComputationCost:
             continue
 
         if op == "convolution":
-            ops_m = re.search(r"convolution\(%([\w.\-]+),\s*%([\w.\-]+)\)", rest)
+            conv_ops = _operand_names(rest, "convolution")
             kernel = 1
-            if ops_m and ops_m.group(2) in shapes:
-                _, rhs_shape = shapes[ops_m.group(2)]
+            if len(conv_ops) >= 2 and conv_ops[1] in shapes:
+                _, rhs_shape = shapes[conv_ops[1]]
                 if rhs_shape:
                     kernel = 1
                     for d in rhs_shape[:-1]:

@@ -14,13 +14,20 @@ from repro.distributed.sharding import MULTI_POD_RULES, SINGLE_POD_RULES
 CHIPS_PER_POD = 256
 
 
+def make_mesh(shape, axes):
+    """jax.make_mesh with Auto axis types where this jax version has them."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(shape, axes, axis_types=(axis_type.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 (data, model) single pod; 2x16x16 (pod, data, model) for two
     pods — 512 chips."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    axis_types = (jax.sharding.AxisType.Auto,) * len(axes)
-    return jax.make_mesh(shape, axes, axis_types=axis_types)
+    return make_mesh(shape, axes)
 
 
 def rules_for(multi_pod: bool) -> dict:
@@ -29,6 +36,4 @@ def rules_for(multi_pod: bool) -> dict:
 
 def make_host_mesh():
     """Degenerate 1x1 mesh for single-device tests/examples."""
-    return jax.make_mesh(
-        (1, 1), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,) * 2
-    )
+    return make_mesh((1, 1), ("data", "model"))

@@ -8,7 +8,6 @@ folded) with a training path that updates running statistics.
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
 
 import jax
 import jax.numpy as jnp

@@ -119,9 +119,6 @@ def mamba_step(params, x, ssm_state, conv_state, state: int):
     dt_ = x.dtype
     xz = x @ params["in_proj"].astype(dt_)
     xi, z = jnp.split(xz, 2, axis=-1)
-    d_in = xi.shape[-1]
-    conv = params["conv_w"].shape[0]
-
     window = jnp.concatenate([conv_state.astype(dt_), xi[:, None]], axis=1)  # (B, conv, D)
     w = params["conv_w"][:, 0, :].astype(jnp.float32)  # (conv, D)
     xc = jnp.einsum("bcd,cd->bd", window.astype(jnp.float32), w).astype(dt_)

@@ -21,7 +21,6 @@ DeepSeek-V2 inference scheme.
 
 from __future__ import annotations
 
-import dataclasses
 from typing import Any
 
 import jax

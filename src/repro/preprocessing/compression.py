@@ -1,0 +1,77 @@
+"""Entropy-coding backend shared by the SJPG/SPNG/SVID codecs.
+
+The codecs' bit-level entropy stage is zstd (whose FSE/Huffman stages are
+real entropy coders).  ``zstandard`` is an *optional* dependency
+(``pip install repro[compression]``): when it is absent, payloads are
+stored uncompressed behind the same framing, so every codec keeps
+round-tripping — only the compression ratio degrades.  Decoding a
+zstd-compressed stream without ``zstandard`` installed raises a clear
+error at the point of use, not at import time.
+
+Each payload is framed with a one-byte method tag so streams are
+self-describing across environments:
+
+    0x00  stored (raw bytes follow)
+    0x01  zstd frame follows
+"""
+
+from __future__ import annotations
+
+import threading as _threading
+
+try:
+    import zstandard as _zstd
+except ImportError:  # pragma: no cover - exercised on bare environments
+    _zstd = None
+
+STORED = 0x00
+ZSTD = 0x01
+
+# zstd contexts are NOT thread-safe; SMOL's engine decodes from a
+# producer pool -> thread-local contexts, keyed by compression level.
+_TLS = _threading.local()
+
+
+def have_zstd() -> bool:
+    return _zstd is not None
+
+
+def _cctx(level: int):
+    cache = getattr(_TLS, "cctx", None)
+    if cache is None:
+        cache = _TLS.cctx = {}
+    ctx = cache.get(level)
+    if ctx is None:
+        ctx = cache[level] = _zstd.ZstdCompressor(level=level)
+    return ctx
+
+
+def _dctx():
+    if not hasattr(_TLS, "dctx"):
+        _TLS.dctx = _zstd.ZstdDecompressor()
+    return _TLS.dctx
+
+
+def compress(raw: bytes, level: int = 3) -> bytes:
+    """Frame ``raw`` with the best available entropy coder."""
+    if _zstd is not None:
+        return bytes((ZSTD,)) + _cctx(level).compress(raw)
+    return bytes((STORED,)) + raw
+
+
+def decompress(blob: bytes) -> bytes:
+    """Inverse of :func:`compress`; raises if the method is unavailable."""
+    if len(blob) == 0:
+        raise ValueError("empty compressed payload")
+    method = blob[0]
+    payload = bytes(blob[1:])
+    if method == STORED:
+        return payload
+    if method == ZSTD:
+        if _zstd is None:
+            raise RuntimeError(
+                "stream is zstd-compressed but the 'zstandard' package is not "
+                "installed; install the [compression] extra to decode it"
+            )
+        return _dctx().decompress(payload)
+    raise ValueError(f"unknown compression method tag {method:#x}")

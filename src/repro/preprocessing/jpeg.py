@@ -32,32 +32,12 @@ import dataclasses
 import struct
 
 import numpy as np
-import zstandard
 
-from repro.preprocessing import dct
+from repro.preprocessing import compression, dct
 
 MAGIC = b"SJPG"
-VERSION = 1
+VERSION = 2  # v2: band payloads framed by preprocessing.compression method tags
 _HDR = struct.Struct("<4sBIIBBBBHH")  # magic, ver, h, w, ch, quality, subsample, band_rows, n_br, n_bc
-
-# zstd contexts are NOT thread-safe; SMOL's engine decodes from a
-# producer pool -> thread-local contexts.
-
-import threading as _threading
-
-_TLS = _threading.local()
-
-
-def _cctx():
-    if not hasattr(_TLS, "cctx"):
-        _TLS.cctx = zstandard.ZstdCompressor(level=3)
-    return _TLS.cctx
-
-
-def _dctx():
-    if not hasattr(_TLS, "dctx"):
-        _TLS.dctx = zstandard.ZstdDecompressor()
-    return _TLS.dctx
 
 
 
@@ -216,7 +196,7 @@ def encode(
         for zz_p, (r0, r1) in zip(zz_planes, ranges):
             rows = zz_p[r0:r1].reshape(-1, 64)
             raw_parts.append(_encode_rows_sparse(rows))
-        bands.append(_cctx().compress(b"".join(raw_parts)))
+        bands.append(compression.compress(b"".join(raw_parts), level=3))
 
     header = _HDR.pack(MAGIC, VERSION, h, w, channels, quality, int(subsample), band_rows, n_br, n_bc)
     offsets, cur = [], 0
@@ -245,7 +225,7 @@ def _decode_band_coeffs(data: bytes, hdr: JpegHeader, band: int) -> list[np.ndar
     end = hdr.payload_start + (
         hdr.band_offsets[band + 1] if band + 1 < hdr.n_bands else len(data) - hdr.payload_start
     )
-    raw = memoryview(_dctx().decompress(bytes(data[start:end])))
+    raw = memoryview(compression.decompress(data[start:end]))
     grids = _plane_grids(hdr)
     ranges = _band_plane_rows(hdr, band)
     out, off = [], 0

@@ -15,29 +15,12 @@ import dataclasses
 import struct
 
 import numpy as np
-import zstandard
+
+from repro.preprocessing import compression
 
 MAGIC = b"SPNG"
+VERSION = 2  # v2: band payloads framed by preprocessing.compression method tags
 _HDR = struct.Struct("<4sBIIBH")  # magic, version, h, w, channels, band_rows
-
-# zstd contexts are NOT thread-safe; SMOL's engine decodes from a
-# producer pool -> thread-local contexts.
-
-import threading as _threading
-
-_TLS = _threading.local()
-
-
-def _cctx():
-    if not hasattr(_TLS, "cctx"):
-        _TLS.cctx = zstandard.ZstdCompressor(level=6)
-    return _TLS.cctx
-
-
-def _dctx():
-    if not hasattr(_TLS, "dctx"):
-        _TLS.dctx = zstandard.ZstdDecompressor()
-    return _TLS.dctx
 
 
 
@@ -62,8 +45,8 @@ def encode(img: np.ndarray, band_rows: int = 32) -> bytes:
     filtered[1:] = img[1:] - img[:-1]  # uint8 wraparound = modular delta
     bands = []
     for r0 in range(0, h, band_rows):
-        bands.append(_cctx().compress(filtered[r0 : r0 + band_rows].tobytes()))
-    header = _HDR.pack(MAGIC, 1, h, w, c, band_rows)
+        bands.append(compression.compress(filtered[r0 : r0 + band_rows].tobytes(), level=6))
+    header = _HDR.pack(MAGIC, VERSION, h, w, c, band_rows)
     offsets, cur = [], 0
     for b in bands:
         offsets.append(cur)
@@ -74,7 +57,7 @@ def encode(img: np.ndarray, band_rows: int = 32) -> bytes:
 
 def peek_header(data: bytes) -> PngHeader:
     magic, ver, h, w, c, band_rows = _HDR.unpack_from(data, 0)
-    if magic != MAGIC or ver != 1:
+    if magic != MAGIC or ver != VERSION:
         raise ValueError("not an SPNG stream")
     off = _HDR.size
     (n_bands,) = struct.unpack_from("<I", data, off)
@@ -96,7 +79,7 @@ def decode(data: bytes, max_rows: int | None = None) -> np.ndarray:
             if band + 1 < len(hdr.band_offsets)
             else len(data)
         )
-        raw = _dctx().decompress(bytes(data[start:end]))
+        raw = compression.decompress(data[start:end])
         rows = min(hdr.band_rows, hdr.height - band * hdr.band_rows)
         chunks.append(
             np.frombuffer(raw, dtype=np.uint8).reshape(rows, hdr.width, hdr.channels)

@@ -23,32 +23,13 @@ import dataclasses
 import struct
 
 import numpy as np
-import zstandard
 
-from repro.preprocessing import dct
+from repro.preprocessing import compression, dct
 from repro.preprocessing.jpeg import _decode_rows_sparse, _encode_rows_sparse
 
 MAGIC = b"SVID"
+VERSION = 2  # v2: frame payloads framed by preprocessing.compression method tags
 _HDR = struct.Struct("<4sBIIIBBB")  # magic, ver, T, h, w, channels, quality, gop
-
-# zstd contexts are NOT thread-safe; SMOL's engine decodes from a
-# producer pool -> thread-local contexts.
-
-import threading as _threading
-
-_TLS = _threading.local()
-
-
-def _cctx():
-    if not hasattr(_TLS, "cctx"):
-        _TLS.cctx = zstandard.ZstdCompressor(level=3)
-    return _TLS.cctx
-
-
-def _dctx():
-    if not hasattr(_TLS, "dctx"):
-        _TLS.dctx = zstandard.ZstdDecompressor()
-    return _TLS.dctx
 
 
 I_FRAME, P_FRAME = 0, 1
@@ -140,9 +121,9 @@ def encode(frames: np.ndarray, quality: int = 75, gop: int = 8) -> bytes:
             recon = [r + rr for r, rr in zip(prev_recon, res_recon)]
             types.append(P_FRAME)
         prev_recon = recon
-        payloads.append(_cctx().compress(payload))
+        payloads.append(compression.compress(payload, level=3))
 
-    header = _HDR.pack(MAGIC, 1, t_total, h, w, 3, quality, gop)
+    header = _HDR.pack(MAGIC, VERSION, t_total, h, w, 3, quality, gop)
     offsets, cur = [], 0
     for p in payloads:
         offsets.append(cur)
@@ -153,7 +134,7 @@ def encode(frames: np.ndarray, quality: int = 75, gop: int = 8) -> bytes:
 
 def peek_header(data: bytes) -> VideoHeader:
     magic, ver, t_total, h, w, c, quality, gop = _HDR.unpack_from(data, 0)
-    if magic != MAGIC or ver != 1:
+    if magic != MAGIC or ver != VERSION:
         raise ValueError("not an SVID stream")
     off = _HDR.size
     (n,) = struct.unpack_from("<I", data, off)
@@ -172,7 +153,7 @@ def _frame_payload(data: bytes, hdr: VideoHeader, t: int) -> memoryview:
         if t + 1 < hdr.num_frames
         else len(data)
     )
-    return memoryview(_dctx().decompress(bytes(data[start:end])))
+    return memoryview(compression.decompress(data[start:end]))
 
 
 def decode(

@@ -1,0 +1,33 @@
+"""End-to-end SMOL query runtime: plan → place → pipeline → serve.
+
+:class:`SmolRuntime` is the facade every deployment path goes through —
+the batch API (``run(corpus)``), the request-level serving API
+(``submit()``/``drain()``), and the online recalibration loop that
+re-solves the host/device placement split from measured stage occupancy.
+"""
+
+from repro.runtime.facade import (
+    CompiledPlan,
+    RunReport,
+    RuntimeConfig,
+    SmolRuntime,
+)
+from repro.runtime.recalibration import (
+    RecalibrationEvent,
+    Recalibrator,
+    StageMeasurement,
+)
+from repro.runtime.scheduler import CompletedRequest, RequestScheduler, SchedulerStats
+
+__all__ = [
+    "CompiledPlan",
+    "CompletedRequest",
+    "RecalibrationEvent",
+    "Recalibrator",
+    "RequestScheduler",
+    "RunReport",
+    "RuntimeConfig",
+    "SchedulerStats",
+    "SmolRuntime",
+    "StageMeasurement",
+]

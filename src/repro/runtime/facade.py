@@ -1,0 +1,341 @@
+"""SmolRuntime — the end-to-end query runtime the paper describes.
+
+One object owns the whole vertical slice:
+
+    spec (𝒟 models, ℱ formats, constraints)
+      └─ plan      Planner.generate/select over 𝒟 × ℱ          (§3)
+      └─ place     choose_split: host ops vs device ops         (§6.3)
+      └─ compile   host_fn / device_fn for the chosen placement
+      └─ execute   PipelinedEngine batch run                    (§6.1)
+      └─ serve     RequestScheduler submit()/drain()
+      └─ adapt     Recalibrator re-solves the split from
+                   measured stage occupancy                     (§6.3, online)
+
+Model execution is supplied as ``model_fns[name] -> callable`` taking an
+(N, C, H, W) float32 batch; everything upstream of that call (decode,
+preprocessing, placement, batching, pipelining) is the runtime's job.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Mapping, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import planner as planner_mod
+from repro.core.engine import EngineStats, PipelinedEngine
+from repro.core.placement import DEFAULT_DEVICE_SPEEDUP, Placement
+from repro.core.planner import ModelSpec, Planner, QueryPlan
+from repro.preprocessing import ops as P
+from repro.preprocessing.formats import ImageFormat, StoredImage
+from repro.preprocessing.ops import TensorMeta
+from repro.runtime.recalibration import RecalibrationEvent, Recalibrator, StageMeasurement
+from repro.runtime.scheduler import CompletedRequest, RequestScheduler
+
+
+@dataclasses.dataclass
+class RuntimeConfig:
+    batch_size: int = 32
+    num_workers: int = 4
+    max_wait_ms: float = 5.0  # dynamic-batching latency knob (serving path)
+    min_accuracy: float | None = None
+    min_throughput: float | None = None
+    estimator: str = "smol"
+    host_ops_per_sec: float = 2.0e9
+    device_ops_per_sec: float | None = None
+    recalibrate_every: int = 0  # items between recalibrations in run(); 0 = off
+    recal_alpha: float = 0.5
+    recal_hysteresis: float = 0.1
+
+
+@dataclasses.dataclass
+class CompiledPlan:
+    plan: QueryPlan
+    placement: Placement
+    host_fn: Callable[[Any], np.ndarray]
+    device_fn: Callable[[Any], Any]
+    out_shape: tuple[int, ...]
+    out_dtype: Any
+    # Built lazily: only the batch path needs the engine's staging buffers;
+    # the serving path feeds the RequestScheduler directly.
+    engine: PipelinedEngine | None = None
+
+
+@dataclasses.dataclass
+class RunReport:
+    plan_key: str
+    stats: EngineStats
+    chunk_stats: list[EngineStats]
+    recalibrations: list[RecalibrationEvent]
+
+    @property
+    def throughput(self) -> float:
+        return self.stats.throughput
+
+
+class SmolRuntime:
+    """Facade wiring planner → placement → pipelined engine → serving."""
+
+    def __init__(
+        self,
+        models: Sequence[ModelSpec],
+        formats: Sequence[ImageFormat],
+        model_fns: Mapping[str, Callable],
+        calibration: Sequence[StoredImage],
+        config: RuntimeConfig | None = None,
+        decode_time: Callable[[ImageFormat], float] | None = None,
+    ):
+        if not calibration:
+            raise ValueError("need at least one calibration StoredImage")
+        missing = [m.name for m in models if m.name not in model_fns]
+        if missing:
+            raise ValueError(f"no model_fn for models: {missing}")
+        self.models = list(models)
+        self.formats = list(formats)
+        self.model_fns = dict(model_fns)
+        self.calibration = list(calibration)
+        self.config = config or RuntimeConfig()
+        self._decode_time_override = decode_time
+        self._decode_time_cache: dict[str, float] = {}
+        self._decoded_meta_cache: dict[str, TensorMeta] = {}
+        self._plan: QueryPlan | None = None
+        self._planner: Planner | None = None
+        self._compiled: CompiledPlan | None = None
+        self._recalibrator: Recalibrator | None = None
+        self._scheduler: RequestScheduler | None = None
+        self.recalibrations: list[RecalibrationEvent] = []
+
+    # ----------------------------------------------------------- calibration
+    def _decode_time(self, fmt: ImageFormat) -> float:
+        if self._decode_time_override is not None:
+            return self._decode_time_override(fmt)
+        if fmt.key not in self._decode_time_cache:
+            self._decode_time_cache[fmt.key] = planner_mod.measure_decode_time(
+                self.calibration, fmt
+            )
+        return self._decode_time_cache[fmt.key]
+
+    def _decoded_meta(self, fmt: ImageFormat) -> TensorMeta:
+        if fmt.key not in self._decoded_meta_cache:
+            sample = self.calibration[0].decode(fmt)
+            self._decoded_meta_cache[fmt.key] = TensorMeta(
+                tuple(sample.shape), str(sample.dtype), "HWC"
+            )
+        return self._decoded_meta_cache[fmt.key]
+
+    @staticmethod
+    def measure_exec_throughput(
+        model_fn: Callable, input_size: int, batch_size: int = 32, iters: int = 4
+    ) -> float:
+        """items/sec of one model_fn on synthetic batches (paper §4)."""
+        x = jnp.zeros((batch_size, 3, input_size, input_size), jnp.float32)
+        fn = jax.jit(model_fn)
+        jax.block_until_ready(fn(x))  # compile outside the clock
+        t0 = time.perf_counter()
+        out = None
+        for _ in range(iters):
+            out = fn(x)
+        jax.block_until_ready(out)
+        return batch_size * iters / (time.perf_counter() - t0)
+
+    # -------------------------------------------------------------- planning
+    def planner(self) -> Planner:
+        # one Planner per runtime: its inputs are fixed at construction and
+        # it memoizes 𝒟 × ℱ generation, so plan()/pareto() stay O(1) after
+        # the first call
+        if self._planner is None:
+            self._planner = Planner(
+                self.models,
+                self.formats,
+                decode_time=self._decode_time,
+                decoded_meta=self._decoded_meta,
+                host_ops_per_sec=self.config.host_ops_per_sec,
+                device_ops_per_sec=self.config.device_ops_per_sec,
+                estimator=self.config.estimator,
+            )
+        return self._planner
+
+    def plan(self, force: bool = False) -> QueryPlan:
+        if self._plan is None or force:
+            self._plan = self.planner().select(
+                min_accuracy=self.config.min_accuracy,
+                min_throughput=self.config.min_throughput,
+            )
+        return self._plan
+
+    def pareto(self) -> list[QueryPlan]:
+        return self.planner().pareto()
+
+    # ------------------------------------------------------------- compiling
+    def _stage_fns(self, plan: QueryPlan, placement: Placement):
+        fmt = plan.fmt
+        host_ops = list(placement.host_ops)
+        device_ops = list(placement.device_ops)
+        in_meta = self._decoded_meta(fmt)
+        out_meta = P.chain_out_meta(host_ops, in_meta)
+        out_shape, out_dtype = tuple(out_meta.shape), np.dtype(out_meta.dtype)
+        model_fn = self.model_fns[plan.model.name]
+
+        def host_fn(item):
+            x = item.decode(fmt) if hasattr(item, "decode") else item
+            x = P.apply_chain_host(host_ops, x)
+            x = np.asarray(x, dtype=out_dtype)
+            if x.shape != out_shape:
+                raise ValueError(
+                    f"host stage produced {x.shape}, expected {out_shape}; "
+                    "the corpus must be shape-uniform with the calibration set"
+                )
+            return x
+
+        def device_fn(batch):
+            x = batch
+            if device_ops:
+                x = jax.vmap(lambda im: P.apply_chain_device(device_ops, im))(x)
+            return model_fn(x)
+
+        return host_fn, device_fn, out_shape, out_dtype
+
+    def compile(self, plan: QueryPlan | None = None, force: bool = False) -> CompiledPlan:
+        if self._compiled is not None and plan is None and not force:
+            return self._compiled
+        plan = plan or self.plan()
+        compiled = self._compile_placement(plan, plan.placement)
+        device_rate = self.config.device_ops_per_sec or (
+            self.config.host_ops_per_sec * DEFAULT_DEVICE_SPEEDUP
+        )
+        self._recalibrator = Recalibrator(
+            plan.dag_plan.ops,
+            self._decoded_meta(plan.fmt),
+            host_decode_time=self._decode_time(plan.fmt),
+            dnn_device_time=1.0 / plan.model.exec_throughput,
+            host_ops_per_sec=self.config.host_ops_per_sec,
+            device_ops_per_sec=device_rate,
+            alpha=self.config.recal_alpha,
+            hysteresis=self.config.recal_hysteresis,
+        )
+        return compiled
+
+    def _compile_placement(self, plan: QueryPlan, placement: Placement) -> CompiledPlan:
+        host_fn, device_fn, out_shape, out_dtype = self._stage_fns(plan, placement)
+        self._compiled = CompiledPlan(plan, placement, host_fn, device_fn, out_shape, out_dtype)
+        return self._compiled
+
+    def engine(self) -> PipelinedEngine:
+        compiled = self.compile()
+        if compiled.engine is None:
+            compiled.engine = PipelinedEngine(
+                compiled.host_fn,
+                compiled.device_fn,
+                compiled.out_shape,
+                compiled.out_dtype,
+                batch_size=self.config.batch_size,
+                num_workers=self.config.num_workers,
+            )
+        return compiled.engine
+
+    # ---------------------------------------------------------- recalibrate
+    def recalibrate(self, measurement: StageMeasurement | EngineStats) -> bool:
+        """Feed one stage-occupancy observation back; returns True when the
+        split moved (in which case the plan was recompiled)."""
+        if self._compiled is None or self._recalibrator is None:
+            raise RuntimeError("compile() before recalibrate()")
+        if isinstance(measurement, EngineStats):
+            measurement = StageMeasurement.from_engine_stats(measurement)
+        placement, changed = self._recalibrator.update(self._compiled.placement, measurement)
+        self.recalibrations.append(self._recalibrator.events[-1])
+        if changed:
+            self._compile_placement(self._compiled.plan, placement)
+            if self._scheduler is not None:
+                # drains in-flight work, then swaps fns + staging signature
+                self._scheduler.rebind(
+                    self._compiled.host_fn,
+                    jax.jit(self._compiled.device_fn),
+                    out_shape=self._compiled.out_shape,
+                    out_dtype=self._compiled.out_dtype,
+                )
+        return changed
+
+    # --------------------------------------------------------------- running
+    def run(
+        self, corpus: Sequence[Any], return_outputs: bool = True
+    ) -> tuple[list[Any], RunReport]:
+        """Batch path: plan → place → pipeline the whole corpus.
+
+        With ``config.recalibrate_every = k > 0`` the corpus is processed in
+        k-item chunks and the split is re-solved between chunks from the
+        engine's measured stage occupancy (adaptive §6.3).
+        """
+        compiled = self.compile()
+        n_before = len(self.recalibrations)
+        chunk = self.config.recalibrate_every
+        if chunk <= 0 or chunk >= len(corpus):
+            outputs, stats = self.engine().run(corpus, return_outputs=return_outputs)
+            chunk_stats = [stats]
+        else:
+            outputs = []
+            chunk_stats = []
+            for lo in range(0, len(corpus), chunk):
+                part = corpus[lo : lo + chunk]
+                out, stats = self.engine().run(part, return_outputs=return_outputs)
+                outputs.extend(out)
+                chunk_stats.append(stats)
+                if lo + chunk < len(corpus):
+                    self.recalibrate(stats)
+            stats = EngineStats(
+                "pipelined",
+                sum(s.num_items for s in chunk_stats),
+                sum(s.wall_seconds for s in chunk_stats),
+                sum(s.batches for s in chunk_stats),
+                host_busy_seconds=sum(s.host_busy_seconds for s in chunk_stats),
+                device_busy_seconds=sum(s.device_busy_seconds for s in chunk_stats),
+            )
+        report = RunReport(
+            plan_key=compiled.plan.key,
+            stats=stats,
+            chunk_stats=chunk_stats,
+            recalibrations=self.recalibrations[n_before:],
+        )
+        return outputs, report
+
+    # --------------------------------------------------------------- serving
+    def start_serving(self) -> None:
+        compiled = self.compile()
+        if self._scheduler is None:
+            self._scheduler = RequestScheduler(
+                compiled.host_fn,
+                jax.jit(compiled.device_fn),  # same compilation the engine gets
+                compiled.out_shape,
+                compiled.out_dtype,
+                max_batch=self.config.batch_size,
+                num_workers=self.config.num_workers,
+                max_wait_ms=self.config.max_wait_ms,
+            )
+        self._scheduler.start()
+
+    def submit(self, item: Any) -> int:
+        if self._scheduler is None:
+            raise RuntimeError("start_serving() before submit()")
+        return self._scheduler.submit(item)
+
+    def drain(self, timeout: float | None = None) -> list[CompletedRequest]:
+        if self._scheduler is None:
+            raise RuntimeError("start_serving() before drain()")
+        return self._scheduler.drain(timeout=timeout)
+
+    def flush(self, timeout: float = 60.0) -> None:
+        if self._scheduler is not None:
+            self._scheduler.flush(timeout=timeout)
+
+    def stop_serving(self) -> None:
+        if self._scheduler is not None:
+            self._scheduler.stop()
+
+    def serving_recalibrate(self) -> bool:
+        """Recalibrate the split from the serving scheduler's measurements."""
+        if self._scheduler is None:
+            raise RuntimeError("start_serving() before serving_recalibrate()")
+        return self.recalibrate(self._scheduler.measurement())

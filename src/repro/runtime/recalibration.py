@@ -1,0 +1,185 @@
+"""Online re-solving of the host/device split point (adaptive §6.3).
+
+The placement optimizer picks a split from *a-priori* cost estimates
+(weighted op counts over assumed host/device op rates).  Those rates drift
+at runtime — host contention, accelerator batch effects, input mix — so the
+engine feeds measured stage occupancy (:class:`repro.core.engine.EngineStats`)
+back into a :class:`Recalibrator`, which
+
+1. decomposes the measured host time into decode + host-op components and
+   the measured device time into device-op + DNN components (attributing
+   proportionally to the current model's predictions),
+2. EWMA-updates the four underlying rate parameters, and
+3. re-runs :func:`repro.core.placement.choose_split` under the updated
+   rates, moving the split only when the predicted gain clears a
+   hysteresis margin (so measurement noise does not thrash recompiles).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+from repro.core import placement as placement_mod
+from repro.core.placement import Placement
+from repro.preprocessing.ops import PreprocOp, TensorMeta, chain_flops, chain_out_meta
+
+
+@dataclasses.dataclass(frozen=True)
+class StageMeasurement:
+    """One observation of pipeline stage occupancy, in seconds/item."""
+
+    host_seconds_per_item: float  # decode + host-placed preprocessing ops
+    device_seconds_per_item: float  # device-placed preprocessing ops + DNN
+
+    @classmethod
+    def from_engine_stats(cls, stats) -> "StageMeasurement":
+        return cls(
+            host_seconds_per_item=stats.host_seconds_per_item,
+            device_seconds_per_item=stats.device_seconds_per_item,
+        )
+
+
+@dataclasses.dataclass
+class RecalibrationEvent:
+    old_split: int
+    new_split: int
+    host_ops_per_sec: float
+    device_ops_per_sec: float
+    host_decode_time: float
+    dnn_device_time: float
+    predicted_throughput: float
+
+    @property
+    def changed(self) -> bool:
+        return self.new_split != self.old_split
+
+
+class Recalibrator:
+    """Tracks stage-rate estimates for one plan's preprocessing chain."""
+
+    def __init__(
+        self,
+        chain: Sequence[PreprocOp],
+        in_meta: TensorMeta,
+        host_decode_time: float,
+        dnn_device_time: float,
+        host_ops_per_sec: float,
+        device_ops_per_sec: float,
+        alpha: float = 0.5,
+        hysteresis: float = 0.1,
+    ):
+        self.chain = list(chain)
+        self.in_meta = in_meta
+        self.host_decode_time = host_decode_time
+        self.dnn_device_time = dnn_device_time
+        self.host_ops_per_sec = host_ops_per_sec
+        self.device_ops_per_sec = device_ops_per_sec
+        self.alpha = alpha  # EWMA weight of the newest observation
+        self.hysteresis = hysteresis
+        self.events: list[RecalibrationEvent] = []
+
+    # ------------------------------------------------------------- internals
+    def _split_metas(self, split: int) -> tuple[float, float]:
+        """(host-op flops, device-op flops) for a given split of the chain."""
+        host_ops, device_ops = self.chain[:split], self.chain[split:]
+        f_host = chain_flops(host_ops, self.in_meta)
+        mid = chain_out_meta(host_ops, self.in_meta)
+        f_dev = chain_flops(device_ops, mid)
+        return f_host, f_dev
+
+    def _ewma(self, old: float, new: float) -> float:
+        return (1.0 - self.alpha) * old + self.alpha * new
+
+    # --------------------------------------------------------------- updates
+    def observe(self, split: int, m: StageMeasurement) -> None:
+        """Fold one measurement into the rate model.
+
+        The measured host time covers decode + ops[:split]; the measured
+        device time covers ops[split:] + the DNN.  Each aggregate is
+        attributed to its components in proportion to the current model's
+        predictions, then each component parameter is EWMA-updated.
+        """
+        f_host, f_dev = self._split_metas(split)
+
+        if m.host_seconds_per_item > 0:
+            pred_ops = f_host / self.host_ops_per_sec
+            pred_total = self.host_decode_time + pred_ops
+            if pred_total <= 0:
+                self.host_decode_time = m.host_seconds_per_item
+            else:
+                decode_share = self.host_decode_time / pred_total
+                t_decode = m.host_seconds_per_item * decode_share
+                t_ops = m.host_seconds_per_item - t_decode
+                self.host_decode_time = self._ewma(self.host_decode_time, t_decode)
+                if f_host > 0 and t_ops > 0:
+                    self.host_ops_per_sec = self._ewma(self.host_ops_per_sec, f_host / t_ops)
+
+        if m.device_seconds_per_item > 0:
+            pred_ops = f_dev / self.device_ops_per_sec
+            pred_total = self.dnn_device_time + pred_ops
+            if pred_total <= 0:
+                self.dnn_device_time = m.device_seconds_per_item
+            else:
+                dnn_share = self.dnn_device_time / pred_total
+                t_dnn = m.device_seconds_per_item * dnn_share
+                t_ops = m.device_seconds_per_item - t_dnn
+                self.dnn_device_time = self._ewma(self.dnn_device_time, t_dnn)
+                if f_dev > 0 and t_ops > 0:
+                    self.device_ops_per_sec = self._ewma(self.device_ops_per_sec, f_dev / t_ops)
+
+    def resolve(self) -> Placement:
+        """Re-run the split search under the current rate estimates."""
+        return placement_mod.choose_split(
+            self.chain,
+            self.in_meta,
+            host_decode_time=self.host_decode_time,
+            dnn_device_time=self.dnn_device_time,
+            host_ops_per_sec=self.host_ops_per_sec,
+            device_ops_per_sec=self.device_ops_per_sec,
+        )
+
+    def update(self, current: Placement, m: StageMeasurement) -> tuple[Placement, bool]:
+        """observe + resolve with hysteresis.
+
+        Returns ``(placement, changed)``.  The split only moves when the
+        re-solved placement's predicted throughput beats the current
+        split's prediction (under the *updated* rates) by the hysteresis
+        margin.
+        """
+        self.observe(current.split, m)
+        best = self.resolve()
+        event = RecalibrationEvent(
+            old_split=current.split,
+            new_split=best.split,
+            host_ops_per_sec=self.host_ops_per_sec,
+            device_ops_per_sec=self.device_ops_per_sec,
+            host_decode_time=self.host_decode_time,
+            dnn_device_time=self.dnn_device_time,
+            predicted_throughput=best.est_throughput,
+        )
+        if best.split == current.split:
+            self.events.append(event)
+            return best, False
+        current_pred = self._predict_split(current.split)
+        if best.est_throughput < (1.0 + self.hysteresis) * current_pred:
+            event = dataclasses.replace(event, new_split=current.split)
+            self.events.append(event)
+            return self._placement_for(current.split), False
+        self.events.append(event)
+        return best, True
+
+    def _placement_for(self, split: int) -> Placement:
+        """The Placement object for a forced split under current rates."""
+        return placement_mod.placement_for_split(
+            self.chain,
+            self.in_meta,
+            split,
+            host_decode_time=self.host_decode_time,
+            dnn_device_time=self.dnn_device_time,
+            host_ops_per_sec=self.host_ops_per_sec,
+            device_ops_per_sec=self.device_ops_per_sec,
+        )
+
+    def _predict_split(self, split: int) -> float:
+        return self._placement_for(split).est_throughput

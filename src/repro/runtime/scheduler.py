@@ -1,0 +1,336 @@
+"""Request-level front end over a compiled plan: dynamic batching + reorder.
+
+The batch API (:meth:`repro.core.engine.PipelinedEngine.run`) assumes the
+whole corpus is present up front.  Serving gets items one at a time, so the
+scheduler adds the two pieces the paper's engine leaves to the server:
+
+* **dynamic batching** — a batcher thread collects host-stage outputs into
+  a device batch, dispatching when the batch fills *or* the oldest queued
+  request has waited ``max_wait_ms`` (latency/throughput knob);
+* **a reorder buffer** — device batches complete in dispatch order but
+  requests may finish host preprocessing out of order; :meth:`drain`
+  releases completed requests strictly in submission (uid) order.
+
+Host preprocessing runs on a worker pool exactly like the engine's
+producers.  The host/device stage functions can be swapped via
+:meth:`rebind` — the hook online recalibration uses to apply a new
+placement split.  A rebind *drains in-flight requests first* (it blocks
+briefly; recalibration events are rare) so no item preprocessed by the
+old host stage meets the new device stage or staging-buffer signature.
+
+A request whose host or device stage raises completes with its ``error``
+field set rather than killing the worker/batcher thread — serving keeps
+going, and the caller sees the failure on drain.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from typing import Any, Callable
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class CompletedRequest:
+    uid: int
+    output: Any  # None when error is set
+    submitted_at: float
+    completed_at: float
+    error: BaseException | None = None
+
+    @property
+    def latency(self) -> float:
+        return self.completed_at - self.submitted_at
+
+
+@dataclasses.dataclass
+class SchedulerStats:
+    submitted: int = 0
+    completed: int = 0
+    failed: int = 0
+    batches: int = 0
+    batch_items: int = 0
+    host_items: int = 0  # items through the host stage (>= completed)
+    host_busy_seconds: float = 0.0
+    device_busy_seconds: float = 0.0
+
+    @property
+    def mean_batch_size(self) -> float:
+        return self.batch_items / self.batches if self.batches else 0.0
+
+
+class RequestScheduler:
+    """Dynamic-batching executor for one compiled (host_fn, device_fn) plan."""
+
+    _STOP = object()
+
+    def __init__(
+        self,
+        host_fn: Callable[[Any], np.ndarray],
+        device_fn: Callable[[Any], Any],
+        out_shape: tuple[int, ...],
+        out_dtype: Any,
+        max_batch: int,
+        num_workers: int = 2,
+        max_wait_ms: float = 2.0,
+    ):
+        self._host_fn = host_fn
+        self._device_fn = device_fn
+        self.out_shape = tuple(out_shape)
+        self.out_dtype = out_dtype
+        self.max_batch = max_batch
+        self.num_workers = num_workers
+        self.max_wait_s = max_wait_ms / 1e3
+        self.stats = SchedulerStats()
+
+        self._ingress: queue.Queue = queue.Queue()
+        self._ready: queue.Queue = queue.Queue()
+        self._done: dict[int, CompletedRequest] = {}
+        self._done_lock = threading.Lock()
+        self._done_event = threading.Event()
+        self._rebind_lock = threading.Lock()
+        self._stats_lock = threading.Lock()
+        self._submit_lock = threading.Lock()
+        self._meas_snapshot = (0.0, 0, 0.0, 0)  # host_busy, host_items, dev_busy, completed
+        self._next_uid = 0
+        self._next_drain = 0
+        self._inflight = 0
+        self._inflight_lock = threading.Lock()
+        self._idle = threading.Event()
+        self._idle.set()
+        self._threads: list[threading.Thread] = []
+        self._running = False
+
+    # --------------------------------------------------------------- control
+    def start(self) -> None:
+        if self._running:
+            return
+        self._running = True
+        self._threads = [
+            threading.Thread(target=self._host_worker, daemon=True)
+            for _ in range(self.num_workers)
+        ]
+        self._threads.append(threading.Thread(target=self._batcher, daemon=True))
+        for t in self._threads:
+            t.start()
+
+    def stop(self, timeout: float = 60.0) -> None:
+        """Drain in-flight requests (best effort, bounded), then shut down.
+
+        Posting the stop sentinels immediately would let them overtake
+        host-worker outputs still headed for the batcher, silently dropping
+        those requests; draining first preserves the complete-or-error
+        contract.  A request stuck past ``timeout`` is abandoned.
+        """
+        if not self._running:
+            return
+        try:
+            self.flush(timeout=timeout)
+        except TimeoutError:
+            pass  # abandon whatever is stuck; shutdown must proceed
+        self._running = False
+        for _ in range(self.num_workers):
+            self._ingress.put(self._STOP)
+        self._ready.put(self._STOP)
+        for t in self._threads:
+            t.join()
+        self._threads = []
+
+    def rebind(
+        self,
+        host_fn: Callable,
+        device_fn: Callable,
+        out_shape: tuple[int, ...] | None = None,
+        out_dtype: Any = None,
+        timeout: float = 60.0,
+    ) -> None:
+        """Swap the stage functions (and host-stage output signature).
+
+        Drains in-flight requests first so no item preprocessed by the old
+        host_fn reaches the new device_fn, and so the batcher can safely
+        reallocate its staging buffer when the new placement changes the
+        host-stage output shape/dtype.  Rebinds are rare (recalibration
+        events), so the drain is cheap relative to a recompile.
+        """
+        self.flush(timeout=timeout)
+        with self._rebind_lock:
+            self._host_fn = host_fn
+            self._device_fn = device_fn
+            if out_shape is not None:
+                self.out_shape = tuple(out_shape)
+            if out_dtype is not None:
+                self.out_dtype = out_dtype
+
+    # ---------------------------------------------------------------- submit
+    def submit(self, item: Any) -> int:
+        if not self._running:
+            raise RuntimeError("scheduler is not running; call start() first")
+        with self._submit_lock:
+            uid = self._next_uid
+            self._next_uid += 1
+        with self._inflight_lock:
+            self._inflight += 1
+            self._idle.clear()
+        with self._stats_lock:
+            self.stats.submitted += 1
+        self._ingress.put((uid, item, time.perf_counter()))
+        return uid
+
+    def drain(self, timeout: float | None = None) -> list[CompletedRequest]:
+        """Completed requests in submission order (the contiguous prefix).
+
+        With ``timeout=None`` returns whatever has finished; with a timeout,
+        waits up to that long for at least one newly drainable request.
+        """
+        deadline = None if timeout is None else time.perf_counter() + timeout
+        while True:
+            out = []
+            with self._done_lock:
+                while self._next_drain in self._done:
+                    out.append(self._done.pop(self._next_drain))
+                    self._next_drain += 1
+                self._done_event.clear()
+            if out or deadline is None:
+                return out
+            remaining = deadline - time.perf_counter()
+            if remaining <= 0:
+                return []
+            self._done_event.wait(remaining)
+
+    def flush(self, timeout: float = 60.0) -> None:
+        """Block until every submitted request has completed."""
+        if not self._idle.wait(timeout):
+            raise TimeoutError(f"scheduler did not drain within {timeout}s")
+
+    # --------------------------------------------------------------- threads
+    def _host_worker(self) -> None:
+        while True:
+            msg = self._ingress.get()
+            if msg is self._STOP:
+                return
+            uid, item, t_submit = msg
+            with self._rebind_lock:  # pin the current stage fn, call outside
+                host_fn = self._host_fn
+            t_in = time.perf_counter()
+            try:
+                arr = host_fn(item)
+            except BaseException as e:  # noqa: BLE001 — delivered via drain()
+                self._complete_error(uid, t_submit, e)
+                continue
+            dt = time.perf_counter() - t_in
+            with self._stats_lock:
+                self.stats.host_busy_seconds += dt
+                self.stats.host_items += 1
+            self._ready.put((uid, arr, t_submit))
+
+    def _batcher(self) -> None:
+        buf = None
+        while True:
+            msg = self._ready.get()
+            if msg is self._STOP:
+                return
+            with self._rebind_lock:  # signature may change across rebinds
+                shape, dtype = (self.max_batch, *self.out_shape), self.out_dtype
+            if buf is None or buf.shape != shape or buf.dtype != dtype:
+                buf = np.zeros(shape, dtype=dtype)
+            metas: list[tuple[int, float]] = []
+            if self._stage(buf, metas, msg):
+                deadline = time.perf_counter() + self.max_wait_s
+                while len(metas) < self.max_batch:
+                    remaining = deadline - time.perf_counter()
+                    if remaining <= 0:
+                        break
+                    try:
+                        msg = self._ready.get(timeout=remaining)
+                    except queue.Empty:
+                        break
+                    if msg is self._STOP:
+                        self._dispatch(buf, metas)
+                        return
+                    self._stage(buf, metas, msg)
+            self._dispatch(buf, metas)
+
+    def _stage(self, buf: np.ndarray, metas: list, msg: tuple) -> bool:
+        """Copy one host output into the staging buffer; errors (e.g. an
+        item preprocessed under a pre-rebind signature) fail that request
+        instead of killing the batcher."""
+        uid, arr, t_submit = msg
+        try:
+            buf[len(metas)] = arr
+        except (ValueError, TypeError) as e:
+            self._complete_error(uid, t_submit, e)
+            return False
+        metas.append((uid, t_submit))
+        return True
+
+    def _dispatch(self, buf: np.ndarray, metas: list[tuple[int, float]]) -> None:
+        if not metas:
+            return
+        t_in = time.perf_counter()
+        with self._rebind_lock:
+            device_fn = self._device_fn
+        try:
+            out = np.asarray(device_fn(buf))  # blocks until device done
+        except BaseException as e:  # noqa: BLE001 — delivered via drain()
+            for uid, t_submit in metas:
+                self._complete_error(uid, t_submit, e)
+            return
+        dt = time.perf_counter() - t_in
+        now = time.perf_counter()
+        with self._stats_lock:
+            self.stats.device_busy_seconds += dt
+            self.stats.batches += 1
+            self.stats.batch_items += len(metas)
+            self.stats.completed += len(metas)
+        with self._done_lock:
+            for row, (uid, t_submit) in enumerate(metas):
+                self._done[uid] = CompletedRequest(uid, out[row], t_submit, now)
+            self._done_event.set()
+        with self._inflight_lock:
+            self._inflight -= len(metas)
+            if self._inflight == 0:
+                self._idle.set()
+
+    def _complete_error(self, uid: int, t_submit: float, exc: BaseException) -> None:
+        now = time.perf_counter()
+        with self._stats_lock:
+            self.stats.failed += 1
+        with self._done_lock:
+            self._done[uid] = CompletedRequest(uid, None, t_submit, now, error=exc)
+            self._done_event.set()
+        with self._inflight_lock:
+            self._inflight -= 1
+            if self._inflight == 0:
+                self._idle.set()
+
+    def measurement(self):
+        """Stage occupancy per item *since the previous call* (windowed, for
+        the recalibrator).
+
+        Host time is normalized by items that went through the host stage
+        and device time by completed items — dividing both by completions
+        would inflate the host figure whenever requests are still in flight.
+        Lifetime averages would bury a recent throughput shift under old
+        history, so each call consumes the window since the last one.
+        """
+        from repro.runtime.recalibration import StageMeasurement
+
+        with self._stats_lock:
+            cur = (
+                self.stats.host_busy_seconds,
+                self.stats.host_items,
+                self.stats.device_busy_seconds,
+                self.stats.completed,
+            )
+            prev = self._meas_snapshot
+            self._meas_snapshot = cur
+        host_busy, host_items = cur[0] - prev[0], cur[1] - prev[1]
+        dev_busy, completed = cur[2] - prev[2], cur[3] - prev[3]
+        return StageMeasurement(
+            host_seconds_per_item=host_busy / max(1, host_items),
+            device_seconds_per_item=dev_busy / max(1, completed),
+        )

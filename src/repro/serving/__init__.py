@@ -1,1 +1,3 @@
-"""Serving substrate: KV-cache policy, serve steps, batched engine."""
+"""Serving substrate: KV-cache policy, serve steps, batched engine, and the
+vision request path routed through the SMOL query runtime
+(:mod:`repro.serving.vision`)."""

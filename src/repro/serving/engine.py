@@ -17,7 +17,6 @@ import dataclasses
 import queue
 import threading
 import time
-from typing import Callable
 
 import jax
 import jax.numpy as jnp

@@ -1,0 +1,111 @@
+"""Vision request serving, routed through the SMOL query runtime.
+
+Before this module, vision serving meant hand-wiring decode → preprocess →
+model per deployment.  Now every vision request goes through
+:class:`repro.runtime.SmolRuntime`: the planner picks the (model, format)
+plan, the placement optimizer splits preprocessing across host/device, the
+request scheduler dynamically batches, and the recalibration loop keeps the
+split matched to observed stage occupancy while the server runs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Mapping, Sequence
+
+import numpy as np
+
+from repro.core.planner import ModelSpec
+from repro.preprocessing.formats import ImageFormat, StoredImage
+from repro.runtime import CompletedRequest, RuntimeConfig, SmolRuntime
+
+
+@dataclasses.dataclass
+class VisionResponse:
+    uid: int
+    prediction: int  # -1 when the request failed
+    scores: np.ndarray
+    latency: float
+    error: BaseException | None = None
+
+
+class VisionServingEngine:
+    """Request-level vision inference server on top of SmolRuntime.
+
+    ``recalibrate_every`` requests, the engine feeds the scheduler's
+    measured stage occupancy back into the runtime, which may move the
+    host/device split and atomically rebind the stage functions.
+    """
+
+    def __init__(
+        self,
+        models: Sequence[ModelSpec],
+        formats: Sequence[ImageFormat],
+        model_fns: Mapping[str, Callable],
+        calibration: Sequence[StoredImage],
+        config: RuntimeConfig | None = None,
+        recalibrate_every: int = 0,
+        decode_time: Callable[[ImageFormat], float] | None = None,
+    ):
+        self.runtime = SmolRuntime(
+            models, formats, model_fns, calibration, config=config, decode_time=decode_time
+        )
+        self.recalibrate_every = recalibrate_every
+        self._since_recal = 0
+        self._started = False
+
+    # --------------------------------------------------------------- control
+    def start(self) -> None:
+        self.runtime.start_serving()
+        self._started = True
+
+    def stop(self) -> None:
+        self.runtime.stop_serving()
+        self._started = False
+
+    def __enter__(self) -> "VisionServingEngine":
+        self.start()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    # --------------------------------------------------------------- serving
+    def submit(self, image: StoredImage | np.ndarray) -> int:
+        if not self._started:
+            raise RuntimeError("start() the engine before submitting requests")
+        uid = self.runtime.submit(image)
+        self._since_recal += 1
+        if self.recalibrate_every and self._since_recal >= self.recalibrate_every:
+            self._since_recal = 0
+            self.runtime.serving_recalibrate()
+        return uid
+
+    def drain(self, timeout: float | None = None) -> list[VisionResponse]:
+        return [self._to_response(r) for r in self.runtime.drain(timeout=timeout)]
+
+    def serve_batch(self, images: Sequence[StoredImage | np.ndarray]) -> list[VisionResponse]:
+        """Convenience: submit all, wait, return responses in request order."""
+        for img in images:
+            self.submit(img)
+        self.runtime.flush()
+        return self.drain()
+
+    @property
+    def plan_key(self) -> str:
+        return self.runtime.plan().key
+
+    @property
+    def split(self) -> int:
+        return self.runtime.compile().placement.split
+
+    @staticmethod
+    def _to_response(r: CompletedRequest) -> VisionResponse:
+        # Raising here would discard the other requests runtime.drain()
+        # already released from the reorder buffer, so failures travel as
+        # data: callers check response.error.
+        if r.error is not None:
+            return VisionResponse(r.uid, -1, np.empty(0), r.latency, error=r.error)
+        scores = np.asarray(r.output)
+        pred = int(np.argmax(scores)) if scores.ndim else int(scores)
+        return VisionResponse(r.uid, pred, scores, r.latency)

@@ -10,10 +10,9 @@ we dry-run is what we train.
 from __future__ import annotations
 
 import dataclasses
-import functools
 import logging
 import time
-from typing import Any, Callable
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

@@ -1,0 +1,29 @@
+"""Thin ``hypothesis`` shim so tier-1 collection works on bare environments.
+
+When ``hypothesis`` is installed this module re-exports the real API.  When
+it is missing, property-based tests are *skipped* (not silently weakened)
+while the rest of the module keeps collecting and running.
+"""
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategies:
+        """Accepts any strategy constructor call; values are never drawn."""
+
+        def __getattr__(self, name):
+            return lambda *args, **kwargs: None
+
+    st = _Strategies()
+
+    def settings(*args, **kwargs):
+        return lambda fn: fn
+
+    def given(*args, **kwargs):
+        return lambda fn: pytest.mark.skip(reason="hypothesis not installed")(fn)

@@ -1,0 +1,47 @@
+"""Optional-zstandard entropy backend: framing, fallback, error paths."""
+
+import numpy as np
+import pytest
+
+from conftest import smooth_image
+from repro.preprocessing import compression, jpeg, png
+
+
+def test_roundtrip_bytes():
+    raw = b"smol" * 1000 + b"\x00\xff"
+    assert compression.decompress(compression.compress(raw)) == raw
+    assert compression.decompress(compression.compress(b"")) == b""
+
+
+def test_frame_is_tagged():
+    blob = compression.compress(b"payload")
+    expected = compression.ZSTD if compression.have_zstd() else compression.STORED
+    assert blob[0] == expected
+
+
+def test_stored_frames_always_decodable():
+    # stored frames must decode regardless of whether zstandard is present
+    raw = b"x" * 257
+    assert compression.decompress(bytes((compression.STORED,)) + raw) == raw
+
+
+def test_unknown_method_rejected():
+    with pytest.raises(ValueError):
+        compression.decompress(b"\x7fjunk")
+    with pytest.raises(ValueError):
+        compression.decompress(b"")
+
+
+@pytest.mark.skipif(compression.have_zstd(), reason="only meaningful without zstandard")
+def test_zstd_stream_without_backend_raises_clearly():
+    with pytest.raises(RuntimeError, match="compression"):
+        compression.decompress(bytes((compression.ZSTD,)) + b"\x28\xb5\x2f\xfd...")
+
+
+def test_codecs_roundtrip_through_backend(rng):
+    # end-to-end through the codecs that sit on the backend
+    img = smooth_image(rng, 96, 80)
+    assert np.array_equal(png.decode(png.encode(img)), img)
+    out = jpeg.decode(jpeg.encode(img, quality=90))
+    assert out.shape == img.shape
+    assert np.abs(out.astype(int) - img.astype(int)).mean() < 3.0

@@ -2,7 +2,6 @@
 collectives, sharding rules."""
 
 import os
-import shutil
 import tempfile
 
 import jax
@@ -161,8 +160,9 @@ def test_param_rules_cover_transformer():
 
 
 def test_zero_pspecs_add_data_axis():
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_mesh
+
+    mesh = make_mesh((1, 1), ("data", "model"))
     params = {"w": jnp.zeros((8, 4))}
     specs = {"w": P(None, "model")}
     with sharding.use_rules(sharding.SINGLE_POD_RULES):

@@ -1,16 +1,14 @@
 """SMOL pipelined engine + LM serving engine + data pipeline."""
 
-import jax.numpy as jnp
 import numpy as np
 
-from conftest import smooth_image
 from repro.core.engine import PipelinedEngine, measure_plan
 from repro.data.pipeline import PrefetchIterator, ShardedBatchSource, synthetic_lm_batch_fn
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
 from repro.serving import tokenizer as tok
 from repro.serving.engine import Request, ServingEngine
-from repro.serving.kv_cache import CachePolicy, cache_bytes, choose_cache_policy
+from repro.serving.kv_cache import cache_bytes, choose_cache_policy
 
 
 def test_pipelined_engine_outputs_correct(rng):

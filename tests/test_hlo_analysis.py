@@ -100,8 +100,8 @@ _SHARDED = textwrap.dedent(
     from jax.sharding import PartitionSpec as P, NamedSharding
     from repro.launch import hlo_analysis as H
 
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((2, 4), ("data", "model"))
 
     def g(x, w):
         h = x @ w

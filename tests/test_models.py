@@ -3,7 +3,6 @@ architecture family in the pool."""
 
 import jax
 import jax.numpy as jnp
-import pytest
 
 from repro.models import decode as D
 from repro.models import transformer as T

@@ -4,7 +4,7 @@ import numpy as np
 import pytest
 
 from conftest import smooth_image
-from repro.preprocessing import png, video
+from repro.preprocessing import compression, png, video
 from repro.preprocessing.formats import StoredVideo, VideoFormat
 
 
@@ -20,6 +20,7 @@ def test_png_early_stop(rng):
         assert np.array_equal(png.decode(blob, max_rows=rows), img[:rows])
 
 
+@pytest.mark.skipif(not compression.have_zstd(), reason="zstandard not installed")
 def test_png_compresses_smooth_images(rng):
     img = smooth_image(rng, 128, 128)
     assert img.size / len(png.encode(img)) > 5

@@ -1,7 +1,7 @@
 """Preprocessing operators: host/device parity, fusion correctness."""
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from conftest import smooth_image
 from repro.preprocessing import ops as P

@@ -1,0 +1,348 @@
+"""SmolRuntime end-to-end: plan selection under constraints, host/device
+split recalibration after a throughput shift, request-level submit/drain
+ordering, and engine stage-occupancy feedback."""
+
+import jax
+import numpy as np
+import pytest
+
+from conftest import smooth_image
+from repro.core.engine import PipelinedEngine
+from repro.core.planner import ModelSpec, standard_chain
+from repro.preprocessing.formats import ImageFormat, StoredImage
+from repro.preprocessing.ops import TensorMeta
+from repro.runtime import Recalibrator, RuntimeConfig, SmolRuntime, StageMeasurement
+from repro.serving.vision import VisionServingEngine
+
+INPUT = 32  # tiny DNN input so tests stay fast
+
+FMT_FULL = ImageFormat("jpeg", None, 95)
+FMT_THUMB = ImageFormat("jpeg", 48, 75)
+FORMATS = [FMT_FULL, FMT_THUMB]
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    rng = np.random.default_rng(3)
+    return [
+        StoredImage.from_array(smooth_image(rng, 80, 80), FORMATS) for _ in range(20)
+    ]
+
+
+def _linear_model(seed=0, classes=7):
+    w = np.asarray(
+        jax.random.normal(jax.random.PRNGKey(seed), (3 * INPUT * INPUT, classes)) * 0.02
+    )
+
+    def fn(x):
+        return x.reshape(x.shape[0], -1) @ w
+
+    return fn
+
+
+def _models():
+    # fast model: accurate only on full-res; slow model: accurate everywhere
+    fast = ModelSpec(
+        "fast", INPUT, exec_throughput=10_000.0,
+        accuracy_by_format={FMT_FULL.key: 0.95, FMT_THUMB.key: 0.70},
+    )
+    slow = ModelSpec(
+        "slow", INPUT, exec_throughput=500.0,
+        accuracy_by_format={FMT_FULL.key: 0.97, FMT_THUMB.key: 0.92},
+    )
+    return [fast, slow]
+
+
+def _runtime(corpus, **cfg_kwargs):
+    cfg = RuntimeConfig(batch_size=4, num_workers=2, **cfg_kwargs)
+    return SmolRuntime(
+        _models(),
+        FORMATS,
+        {"fast": _linear_model(0), "slow": _linear_model(1)},
+        calibration=corpus[:3],
+        config=cfg,
+        decode_time=lambda fmt: 1e-4 if fmt.short_side else 2e-3,
+    )
+
+
+# -------------------------------------------------------------- plan selection
+def test_plan_selection_unconstrained_picks_throughput(corpus):
+    rt = _runtime(corpus)
+    plan = rt.plan()
+    # fast model on the cheap thumbnail format dominates on throughput
+    assert plan.model.name == "fast"
+    assert plan.fmt.key == FMT_THUMB.key
+
+
+def test_plan_selection_respects_accuracy_floor(corpus):
+    rt = _runtime(corpus, min_accuracy=0.9)
+    plan = rt.plan()
+    # fast@thumb (0.70) violates the floor; fast@full (0.95) is the fastest
+    # plan that clears it
+    assert plan.estimate.accuracy >= 0.9
+    assert (plan.model.name, plan.fmt.key) == ("fast", FMT_FULL.key)
+
+    rt_hi = _runtime(corpus, min_accuracy=0.96)
+    assert rt_hi.plan().model.name == "slow"
+
+
+def test_infeasible_constraint_raises(corpus):
+    rt = _runtime(corpus, min_accuracy=0.999)
+    with pytest.raises(ValueError):
+        rt.plan()
+
+
+# --------------------------------------------------------------- recalibration
+def _recalibrator(**kw):
+    chain = standard_chain(64)
+    in_meta = TensorMeta((128, 128, 3), "uint8", "HWC")
+    defaults = dict(
+        host_decode_time=1e-4,
+        dnn_device_time=1e-3,
+        host_ops_per_sec=2e8,
+        device_ops_per_sec=4e9,
+        alpha=1.0,  # trust the newest measurement fully: deterministic tests
+        hysteresis=0.0,
+    )
+    defaults.update(kw)
+    return Recalibrator(chain, in_meta, **defaults)
+
+
+def test_recalibration_moves_split_after_throughput_shift():
+    r = _recalibrator()
+    initial = r.resolve()
+    assert 0 < initial.split <= len(r.chain)
+
+    # Simulate the host stage collapsing (e.g. CPU contention): measured
+    # host time is 50x the prediction, device unchanged.  The solver must
+    # shed host work — split moves toward the device.
+    slow_host = StageMeasurement(
+        host_seconds_per_item=50.0 * (1.0 / initial.est_host_throughput),
+        device_seconds_per_item=1.0 / initial.est_device_throughput,
+    )
+    placement, changed = r.update(initial, slow_host)
+    assert changed
+    assert placement.split < initial.split
+    assert placement.split == 0  # with a 50x slower host, everything moves off it
+
+
+def test_recalibration_hysteresis_blocks_marginal_moves():
+    r = _recalibrator(hysteresis=10.0)  # require an 11x predicted win to move
+    initial = r.resolve()
+    slightly_slow = StageMeasurement(
+        host_seconds_per_item=1.5 * (1.0 / initial.est_host_throughput),
+        device_seconds_per_item=1.0 / initial.est_device_throughput,
+    )
+    placement, changed = r.update(initial, slightly_slow)
+    assert not changed
+    assert placement.split == initial.split
+
+
+def test_facade_recalibration_rebuilds_engine(corpus):
+    rt = _runtime(corpus)
+    rt.compile()
+    old_split = rt._compiled.placement.split
+    # simulated shift: host became ~100x slower than planned
+    shifted = StageMeasurement(host_seconds_per_item=0.5, device_seconds_per_item=1e-4)
+    changed = rt.recalibrate(shifted)
+    new_split = rt._compiled.placement.split
+    assert rt.recalibrations, "recalibration event must be recorded"
+    if changed:
+        assert new_split != old_split
+        # the recompiled engine must still produce correct outputs
+        outs, report = rt.run(corpus[:8])
+        assert len(outs) == 8
+    else:
+        assert new_split == old_split
+
+
+def test_planner_replan_moves_split_with_measurements(corpus):
+    rt = _runtime(corpus)
+    planner = rt.planner()
+    plan = rt.plan()
+    # feed back a 1000x slower host: the re-derived placement must not keep
+    # more work on the host, and the plan identity must be unchanged
+    slow = planner.replan(plan, host_ops_per_sec=rt.config.host_ops_per_sec / 1000.0)
+    assert (slow.model.name, slow.fmt.key) == (plan.model.name, plan.fmt.key)
+    assert slow.placement.split <= plan.placement.split
+    assert slow.estimate.accuracy == plan.estimate.accuracy
+
+
+def test_engine_propagates_host_stage_errors():
+    def host_fn(i):
+        if i == 3:
+            raise ValueError("bad item 3")
+        return np.zeros((4,), np.float32)
+
+    eng = PipelinedEngine(host_fn, lambda b: b, (4,), np.float32, batch_size=2, num_workers=2)
+    with pytest.raises(ValueError, match="bad item 3"):
+        eng.run(list(range(8)))
+
+
+# ------------------------------------------------------------- batch execution
+def test_run_end_to_end_and_stats(corpus):
+    rt = _runtime(corpus)
+    outs, report = rt.run(corpus)
+    assert len(outs) == len(corpus)
+    assert all(o.shape == (7,) for o in outs)
+    assert report.stats.num_items == len(corpus)
+    assert report.stats.host_busy_seconds > 0
+    assert report.stats.device_busy_seconds > 0
+    assert report.plan_key == rt.plan().key
+
+
+def test_run_with_periodic_recalibration(corpus):
+    rt = _runtime(corpus, recalibrate_every=8)
+    outs, report = rt.run(corpus)
+    assert len(outs) == len(corpus)
+    assert len(report.chunk_stats) == 3  # 8 + 8 + 4
+    assert len(report.recalibrations) == 2  # between chunks
+
+
+# ------------------------------------------------------------ submit/drain API
+def test_submit_drain_preserves_submission_order(corpus):
+    rt = _runtime(corpus, max_wait_ms=1.0)
+    batch_outs, _ = rt.run(corpus)
+
+    rt.start_serving()
+    try:
+        uids = [rt.submit(s) for s in corpus]
+        assert uids == list(range(len(corpus)))
+        rt.flush()
+        done = rt.drain()
+    finally:
+        rt.stop_serving()
+
+    assert [d.uid for d in done] == list(range(len(corpus)))
+    # request path must agree with the batch path bit-for-bit-ish
+    for d in done:
+        np.testing.assert_allclose(d.output, batch_outs[d.uid], atol=1e-5)
+
+
+def test_drain_releases_only_contiguous_prefix(corpus):
+    rt = _runtime(corpus)
+    rt.start_serving()
+    try:
+        for s in corpus[:6]:
+            rt.submit(s)
+        rt.flush()
+        first = rt.drain()
+        assert [d.uid for d in first] == [0, 1, 2, 3, 4, 5]
+        assert rt.drain() == []  # nothing left
+    finally:
+        rt.stop_serving()
+
+
+def test_serving_survives_recalibration_split_change(corpus):
+    # Device-bound plan (slow DNN) so the planner starts with ops on the
+    # host; alpha=1 / no hysteresis so one catastrophic-host observation
+    # deterministically moves the split — which changes the host-stage
+    # output signature the scheduler batches with.
+    slow_dnn = ModelSpec("slow-dnn", INPUT, exec_throughput=300.0,
+                         accuracy_by_format={FMT_FULL.key: 0.9})
+    rt = SmolRuntime(
+        [slow_dnn],
+        [FMT_FULL],
+        {"slow-dnn": _linear_model(2)},
+        calibration=corpus[:3],
+        config=RuntimeConfig(
+            batch_size=4, num_workers=2, max_wait_ms=1.0,
+            host_ops_per_sec=2e8, recal_alpha=1.0, recal_hysteresis=0.0,
+        ),
+        decode_time=lambda fmt: 1e-4,
+    )
+    batch_outs, _ = rt.run(corpus)
+    old = rt.compile()
+    assert old.placement.split > 0, "need host-placed ops for the split to shed"
+    rt.start_serving()
+    try:
+        for s in corpus[:5]:
+            rt.submit(s)
+        rt.flush()
+        changed = rt.recalibrate(
+            StageMeasurement(host_seconds_per_item=1.0, device_seconds_per_item=1e-5)
+        )
+        for s in corpus[5:10]:
+            rt.submit(s)
+        rt.flush()
+        done = rt.drain()
+    finally:
+        rt.stop_serving()
+    assert changed
+    new = rt.compile()
+    assert new.placement.split < old.placement.split
+    assert (new.out_shape, new.out_dtype) != (old.out_shape, old.out_dtype)
+    assert [d.uid for d in done] == list(range(10))
+    # outputs before AND after the rebind must match the batch path
+    for d in done:
+        np.testing.assert_allclose(d.output, batch_outs[d.uid], atol=1e-3)
+
+
+def test_serving_completes_bad_requests_with_error(corpus):
+    rt = _runtime(corpus, max_wait_ms=1.0)
+    rt.start_serving()
+    try:
+        rt.submit(corpus[0])
+        # decoded shape differs from calibration -> host stage raises; the
+        # request must complete with error instead of hanging the pool
+        bad = StoredImage.from_array(smooth_image(np.random.default_rng(9), 40, 40), FORMATS)
+        rt.submit(bad)
+        rt.submit(corpus[1])
+        rt.flush(timeout=30.0)  # must not hit the timeout
+        done = rt.drain()
+    finally:
+        rt.stop_serving()
+    assert [d.uid for d in done] == [0, 1, 2]
+    assert done[0].error is None and done[2].error is None
+    assert isinstance(done[1].error, ValueError)
+    assert done[1].output is None
+
+
+def test_stop_without_flush_drains_inflight(corpus):
+    rt = _runtime(corpus, max_wait_ms=1.0)
+    rt.start_serving()
+    for s in corpus[:8]:
+        rt.submit(s)
+    rt.stop_serving()  # no flush first: stop must drain, not drop
+    done = rt.drain()
+    assert [d.uid for d in done] == list(range(8))
+
+
+def test_vision_drain_keeps_successes_around_a_failure(corpus):
+    engine = VisionServingEngine(
+        _models(),
+        FORMATS,
+        {"fast": _linear_model(0), "slow": _linear_model(1)},
+        calibration=corpus[:3],
+        config=RuntimeConfig(batch_size=4, num_workers=2, max_wait_ms=1.0),
+        decode_time=lambda fmt: 1e-4 if fmt.short_side else 2e-3,
+    )
+    bad = StoredImage.from_array(smooth_image(np.random.default_rng(11), 40, 40), FORMATS)
+    with engine:
+        engine.submit(corpus[0])
+        engine.submit(bad)
+        engine.submit(corpus[1])
+        engine.runtime.flush()
+        responses = engine.drain()
+    assert [r.uid for r in responses] == [0, 1, 2]
+    assert responses[0].error is None and responses[2].error is None
+    assert isinstance(responses[1].error, ValueError)
+    assert responses[1].prediction == -1
+
+
+def test_vision_serving_engine_routes_through_runtime(corpus):
+    engine = VisionServingEngine(
+        _models(),
+        FORMATS,
+        {"fast": _linear_model(0), "slow": _linear_model(1)},
+        calibration=corpus[:3],
+        config=RuntimeConfig(batch_size=4, num_workers=2),
+        recalibrate_every=10,
+        decode_time=lambda fmt: 1e-4 if fmt.short_side else 2e-3,
+    )
+    with engine:
+        responses = engine.serve_batch(corpus[:9])
+    assert [r.uid for r in responses] == list(range(9))
+    assert all(0 <= r.prediction < 7 for r in responses)
+    assert all(r.latency >= 0 for r in responses)
+    assert engine.plan_key == "fast@" + FMT_THUMB.key
