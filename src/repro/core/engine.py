@@ -9,14 +9,19 @@ per core, and overlap comes from *async dispatch* — `jitted_fn(batch)`
 returns a future-like Array immediately while the host goes on preparing
 the next batch.  So:
 
-* producer threads (``num_workers``) run the host stage (entropy decode +
-  host-placed preprocessing ops) and feed a bounded MPMC queue,
-* the consumer assembles batches into a small ring of **preallocated,
-  reused staging buffers** (the pinned-memory analogue; device side uses
-  ``donate_argnums`` so XLA reuses the device allocation too),
-* device dispatch is asynchronous; we only synchronize when the ring
-  wraps — by which time the previous batch has typically drained, giving
-  the pipelining the paper gets from CUDA streams.
+* the host stage (entropy decode + host-placed preprocessing ops) runs on
+  a :class:`~repro.runtime.workers.WorkerPool` — work-stealing producer
+  threads feeding a bounded backpressure queue,
+* the consumer assembles batches into **leased staging buffers** drawn
+  from a :class:`~repro.runtime.memory.BufferPool` (the pinned-memory
+  analogue; device side uses ``donate_argnums`` so XLA reuses the device
+  allocation too) and releases each lease when its batch retires,
+* an optional :class:`~repro.runtime.memory.MemoryBudget` bounds total
+  in-flight decoded bytes: producers admit before decoding, the consumer
+  releases after staging,
+* device dispatch is asynchronous; we only synchronize when ``ring_slots``
+  batches are in flight — by which time the previous batch has typically
+  drained, giving the pipelining the paper gets from CUDA streams.
 
 ``mode='preproc_only' | 'exec_only' | 'pipelined'`` reproduces the paper's
 measurement protocol (§8.2, Table 3).
@@ -26,7 +31,6 @@ from __future__ import annotations
 
 import dataclasses
 import queue
-import threading
 import time
 from typing import Any, Callable, Sequence
 
@@ -47,6 +51,10 @@ class EngineStats:
     # dispatch->completion intervals are merged, not double-counted).
     host_busy_seconds: float = 0.0
     device_busy_seconds: float = 0.0
+    # Memory-subsystem occupancy at the end of the run: a PoolStats /
+    # BudgetStats snapshot (None when pooling / the budget is disabled).
+    pool_stats: Any = None
+    budget_stats: Any = None
 
     @property
     def throughput(self) -> float:
@@ -70,20 +78,26 @@ class PipelinedEngine:
 
     Args:
       host_fn: item -> np.ndarray of fixed shape/dtype (host stage: decode +
-        host-placed preprocessing).
+        host-placed preprocessing).  With ``worker_state_factory`` set it is
+        called as ``host_fn(item, state)`` with that worker's private state.
       device_fn: (batch np/jax array) -> device outputs.  Wrapped in jit
         with input donation by the constructor unless ``jit=False``.
       out_shape/out_dtype: per-item output of host_fn.
       batch_size: device batch.
-      num_workers: producer threads (paper heuristic: ~#cores).
+      num_workers: producer threads (paper heuristic: ~#cores).  Mutable —
+        online recalibration retunes it between runs.
       queue_depth: bounded MPMC queue size, in items (over-allocated so
         producers never contend on the consumer — §6.1).
-      ring_slots: number of reused staging buffers.
+      ring_slots: max async-dispatched batches in flight (staging leases
+        outstanding).
+      memory: MemoryConfig governing staging-buffer pooling and the
+        in-flight decoded-bytes budget.  Defaults to pooling on, no budget.
+      worker_state_factory: per-producer-thread codec/scratch state.
     """
 
     def __init__(
         self,
-        host_fn: Callable[[Any], np.ndarray],
+        host_fn: Callable[..., np.ndarray],
         device_fn: Callable[[Any], Any],
         out_shape: tuple[int, ...],
         out_dtype: Any,
@@ -92,34 +106,85 @@ class PipelinedEngine:
         queue_depth: int | None = None,
         ring_slots: int = 3,
         jit: bool = True,
+        memory: Any = None,
+        worker_state_factory: Callable[[], Any] | None = None,
     ):
+        # Deferred: repro.core must stay importable without repro.runtime
+        # (runtime's facade imports this module at package-init time).
+        from repro.runtime import memory as memory_mod
+
         self.host_fn = host_fn
         self.batch_size = batch_size
         self.num_workers = num_workers
         self.queue_depth = queue_depth or 4 * batch_size
+        self.ring_slots = ring_slots
         self.out_shape = tuple(out_shape)
         self.out_dtype = out_dtype
-        # Reused staging buffers — the pinned-buffer pool of Appendix A.
-        self._staging = [
-            np.zeros((batch_size, *self.out_shape), dtype=out_dtype) for _ in range(ring_slots)
-        ]
+        self.worker_state_factory = worker_state_factory
+        self.memory = memory or memory_mod.MemoryConfig()
+        # Leased, reused staging buffers — the pinned-buffer pool of
+        # Appendix A.  pooling=False keeps the allocate-per-batch baseline
+        # (what the bench sweeps against).
+        self._pool = self.memory.build_pool()
+        self._budget = self.memory.build_budget()
+        self._item_nbytes = int(np.prod(self.out_shape, dtype=np.int64)) * np.dtype(
+            out_dtype
+        ).itemsize
         if jit:
             self.device_fn = jax.jit(device_fn)
         else:
             self.device_fn = device_fn
         self._warmed = False
 
+    # ------------------------------------------------------------- memory API
+    def _acquire_staging(self):
+        """One batch staging buffer: a pool lease, or a fresh allocation in
+        the unpooled baseline.  Returns (array, lease-or-None)."""
+        shape = (self.batch_size, *self.out_shape)
+        if self._pool is not None:
+            lease = self._pool.lease(shape, self.out_dtype)
+            return lease.array, lease
+        return np.zeros(shape, dtype=self.out_dtype), None
+
+    def _make_worker_pool(self):
+        from repro.runtime.workers import WorkerPool
+
+        return WorkerPool(
+            self.host_fn,
+            num_workers=self.num_workers,
+            queue_depth=self.queue_depth,
+            worker_state_factory=self.worker_state_factory,
+            budget=self._budget,
+            item_nbytes=self._item_nbytes,
+        )
+
+    def pool_stats(self):
+        return self._pool.stats() if self._pool is not None else None
+
+    def budget_stats(self):
+        return self._budget.stats() if self._budget is not None else None
+
     # ---------------------------------------------------------------- modes
     def run_preproc_only(self, items: Sequence[Any]) -> EngineStats:
         """Producer-pool throughput with the device leg disabled."""
         t0 = time.perf_counter()
-        host_busy = self._drain_producers(items, sink=lambda idx, arr: None)
+        stream = self._make_worker_pool().process(items)
+        try:
+            while stream.get() is not None:
+                stream.release_item()
+        finally:
+            stream.cancel()
+            stream.wait()  # joins threads + reconciles leaked admissions
+        if stream.errors:
+            raise stream.errors[0]
         return EngineStats(
             "preproc_only",
             len(items),
             time.perf_counter() - t0,
             0,
-            host_busy_seconds=host_busy,
+            host_busy_seconds=stream.host_busy_seconds,
+            pool_stats=self.pool_stats(),
+            budget_stats=self.budget_stats(),
         )
 
     def run_exec_only(self, num_items: int) -> EngineStats:
@@ -149,61 +214,33 @@ class PipelinedEngine:
         if not self._warmed:
             # Warm up the compiled graph outside the measured window (once
             # per engine — chunked callers reuse the compilation).
-            jax.block_until_ready(self.device_fn(self._staging[0]))
+            warm = np.zeros((self.batch_size, *self.out_shape), dtype=self.out_dtype)
+            jax.block_until_ready(self.device_fn(warm))
             self._warmed = True
 
-        q: queue.Queue = queue.Queue(maxsize=self.queue_depth)
-        stop = object()
-        host_lock = threading.Lock()
         clock = _DeviceClock()
-        host_busy = 0.0
-        errors: list[BaseException] = []
-
-        def producer(worker_id: int):
-            nonlocal host_busy
-            busy = 0.0
-            try:
-                for idx in range(worker_id, n, self.num_workers):
-                    t_in = time.perf_counter()
-                    arr = self.host_fn(items[idx])
-                    busy += time.perf_counter() - t_in
-                    q.put((idx, arr))
-            except BaseException as e:  # noqa: BLE001 — re-raised to caller
-                with host_lock:
-                    errors.append(e)
-            finally:
-                with host_lock:
-                    host_busy += busy
-                q.put((None, stop))  # always release the consumer
-
         t0 = time.perf_counter()
-        threads = [
-            threading.Thread(target=producer, args=(w,), daemon=True)
-            for w in range(self.num_workers)
-        ]
-        for t in threads:
-            t.start()
+        stream = self._make_worker_pool().process(items)
 
         outputs: list[Any] = [None] * n if return_outputs else []
-        in_flight: list[tuple[list[int], Any, float]] = []
-        done_workers = 0
-        slot = 0
+        # in-flight entries: (row->item indices, device output, dispatch
+        # time, staging lease to release at retirement)
+        in_flight: list[tuple[list[int], Any, float, Any]] = []
         batch_idx: list[int] = []
-        buf = self._staging[slot]
+        buf, lease = self._acquire_staging()
         n_batches = 0
 
         def flush(count: int):
-            nonlocal slot, buf, batch_idx, n_batches
+            nonlocal buf, lease, batch_idx, n_batches
             if count == 0:
                 return
             dispatch_t = time.perf_counter()
             dev_out = self.device_fn(buf)  # async dispatch
-            in_flight.append((list(batch_idx[:count]), dev_out, dispatch_t))
+            in_flight.append((list(batch_idx[:count]), dev_out, dispatch_t, lease))
             n_batches += 1
-            if len(in_flight) >= len(self._staging):
+            if len(in_flight) >= self.ring_slots:
                 self._retire(in_flight.pop(0), outputs, return_outputs, clock)
-            slot = (slot + 1) % len(self._staging)
-            buf = self._staging[slot]
+            buf, lease = self._acquire_staging()
             batch_idx = []
 
         def retire_ready():
@@ -215,89 +252,59 @@ class PipelinedEngine:
             while in_flight and _array_is_ready(in_flight[0][1]):
                 self._retire(in_flight.pop(0), outputs, return_outputs, clock)
 
-        while done_workers < self.num_workers:
-            retire_ready()
-            try:
-                # short timeout so completions are noticed (and timed) even
-                # when the host stage starves the queue
-                idx, arr = q.get(timeout=0.002 if in_flight else None)
-            except queue.Empty:
-                continue
-            if arr is stop:
-                done_workers += 1
-                continue
-            buf[len(batch_idx)] = arr
-            batch_idx.append(idx)
-            if len(batch_idx) == self.batch_size:
-                flush(self.batch_size)
-        if batch_idx:  # ragged tail: pad (padding rows already zeroed-ish; fine)
-            flush(len(batch_idx))
-        while in_flight:
-            self._retire(in_flight.pop(0), outputs, return_outputs, clock)
+        try:
+            while True:
+                retire_ready()
+                try:
+                    # short timeout so completions are noticed (and timed)
+                    # even when the host stage starves the queue
+                    msg = stream.get(timeout=0.002 if in_flight else None)
+                except queue.Empty:
+                    continue
+                if msg is None:
+                    break
+                idx, arr = msg
+                buf[len(batch_idx)] = arr
+                stream.release_item()  # staged: decoded bytes retire
+                batch_idx.append(idx)
+                if len(batch_idx) == self.batch_size:
+                    flush(self.batch_size)
+            if batch_idx:  # ragged tail: pad (padding rows are stale; fine)
+                flush(len(batch_idx))
+            while in_flight:
+                self._retire(in_flight.pop(0), outputs, return_outputs, clock)
+        finally:
+            if lease is not None:
+                lease.release()  # the partially-filled buffer never dispatched
+            stream.cancel()
+            stream.wait()  # joins threads + reconciles leaked admissions
         dt = time.perf_counter() - t0
-        for t in threads:
-            t.join()
-        if errors:
-            raise errors[0]
+        if stream.errors:
+            raise stream.errors[0]
         return outputs, EngineStats(
             "pipelined",
             n,
             dt,
             n_batches,
-            host_busy_seconds=host_busy,
+            host_busy_seconds=stream.host_busy_seconds,
             device_busy_seconds=clock.busy,
+            pool_stats=self.pool_stats(),
+            budget_stats=self.budget_stats(),
         )
 
     # -------------------------------------------------------------- helpers
     def _retire(self, entry, outputs, return_outputs: bool, clock: "_DeviceClock | None" = None):
-        idxs, dev_out, dispatch_t = entry
+        idxs, dev_out, dispatch_t, lease = entry
         if return_outputs:
             host_out = np.asarray(dev_out)
             for row, idx in enumerate(idxs):
                 outputs[idx] = host_out[row]
         else:
             jax.block_until_ready(dev_out)
+        if lease is not None:
+            lease.release()  # staging buffer back to the pool
         if clock is not None:
             clock.retire(dispatch_t)
-
-    def _drain_producers(self, items: Sequence[Any], sink) -> float:
-        """Run the producer pool to completion; returns summed host_fn time."""
-        n = len(items)
-        done = threading.Event()
-        counter = {"n": 0, "busy": 0.0}
-        errors: list[BaseException] = []
-        lock = threading.Lock()
-
-        def producer(worker_id: int):
-            busy = 0.0
-            try:
-                for idx in range(worker_id, n, self.num_workers):
-                    t_in = time.perf_counter()
-                    arr = self.host_fn(items[idx])
-                    busy += time.perf_counter() - t_in
-                    sink(idx, arr)
-            except BaseException as e:  # noqa: BLE001 — surfaced to caller
-                with lock:
-                    errors.append(e)
-            finally:
-                with lock:
-                    counter["n"] += 1
-                    counter["busy"] += busy
-                    if counter["n"] == self.num_workers:
-                        done.set()
-
-        threads = [
-            threading.Thread(target=producer, args=(w,), daemon=True)
-            for w in range(self.num_workers)
-        ]
-        for t in threads:
-            t.start()
-        done.wait()
-        for t in threads:
-            t.join()
-        if errors:
-            raise errors[0]
-        return counter["busy"]
 
 
 def _array_is_ready(x) -> bool:

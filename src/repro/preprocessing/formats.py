@@ -19,7 +19,12 @@ from repro.preprocessing.ops import ResizeShortSide
 
 @dataclasses.dataclass(frozen=True)
 class ImageFormat:
-    codec: str  # "jpeg" | "png"
+    # "jpeg" | "png" — the repo's own codecs with partial decoding (§6.4);
+    # "pjpeg" — real libjpeg via Pillow.  The C decoder releases the GIL,
+    # which is what lets the runtime's multi-worker host stage actually
+    # scale decode throughput across producer threads (numpy-codec decode
+    # serializes on the GIL).  Production analogue of the entropy stage.
+    codec: str
     short_side: int | None = None  # None = native resolution
     quality: int | None = None  # jpeg only
 
@@ -61,10 +66,19 @@ class StoredImage:
         variants: dict[ImageFormat, bytes] = {}
         for fmt in formats:
             src = img
-            if fmt.short_side is not None and fmt.short_side < min(img.shape[:2]):
+            # pjpeg stores native resolution: its short_side is a *decode-time*
+            # scaled-IDCT target (libjpeg draft), the paper's §6.4
+            # multi-resolution partial decode, not a stored thumbnail.
+            if (
+                fmt.codec != "pjpeg"
+                and fmt.short_side is not None
+                and fmt.short_side < min(img.shape[:2])
+            ):
                 src = ResizeShortSide(fmt.short_side).apply_host(img)
             if fmt.codec == "jpeg":
                 variants[fmt] = jpeg.encode(src, quality=fmt.quality or 75)
+            elif fmt.codec == "pjpeg":
+                variants[fmt] = _pil_jpeg_encode(src, quality=fmt.quality or 75)
             elif fmt.codec == "png":
                 variants[fmt] = png.encode(src)
             else:
@@ -87,6 +101,10 @@ class StoredImage:
         data = self.variants[fmt]
         if fmt.codec == "jpeg":
             return jpeg.decode(data, roi=roi, max_rows=max_rows, dc_only=dc_only)
+        if fmt.codec == "pjpeg":
+            return _pil_jpeg_decode(
+                data, roi=roi, max_rows=max_rows, dc_only=dc_only, short_side=fmt.short_side
+            )
         if roi is not None or dc_only:
             # PNG-analog supports early stopping only (paper Table 4).
             out = png.decode(data, max_rows=None if roi is None else roi[2])
@@ -101,6 +119,55 @@ class StoredImage:
         if fmt.codec != "jpeg":
             raise ValueError("split decode requires a JPEG variant")
         return jpeg.decode_to_coefficients(self.variants[fmt], **kw)
+
+
+def _pil_jpeg_encode(img: np.ndarray, quality: int) -> bytes:
+    import io
+
+    from PIL import Image
+
+    buf = io.BytesIO()
+    Image.fromarray(img).save(buf, "JPEG", quality=quality)
+    return buf.getvalue()
+
+
+def _pil_jpeg_decode(
+    data: bytes,
+    roi: tuple[int, int, int, int] | None = None,
+    max_rows: int | None = None,
+    dc_only: bool = False,
+    short_side: int | None = None,
+) -> np.ndarray:
+    import io
+
+    from PIL import Image
+
+    im = Image.open(io.BytesIO(data))
+    native_h = im.height
+    if dc_only:
+        # libjpeg's scaled IDCT decode: the real DC-only / progressive
+        # first-scan fast path (mirrors jpeg.decode(dc_only=True))
+        im.draft("RGB", (max(1, im.width // 8), max(1, im.height // 8)))
+    elif short_side is not None:
+        # multi-resolution partial decode (§6.4): entropy-decode the full
+        # stream but run the IDCT at the 1/2^k scale that still covers the
+        # target short side — draft never undershoots the requested size
+        scale = max(1, min(im.width, im.height) // short_side)
+        im.draft("RGB", (max(1, im.width // scale), max(1, im.height // scale)))
+    out = np.asarray(im.convert("RGB"))
+    # roi/max_rows arrive in native full-resolution coordinates (same
+    # contract as jpeg.decode / planner.central_roi); map them onto the
+    # post-draft grid before slicing
+    s = out.shape[0] / native_h
+    if roi is not None and not dc_only:
+        y0, x0, y1, x1 = roi
+        out = out[
+            int(np.floor(y0 * s)) : int(np.ceil(y1 * s)),
+            int(np.floor(x0 * s)) : int(np.ceil(x1 * s)),
+        ]
+    if max_rows is not None:
+        out = out[: max(1, int(np.ceil(max_rows * s)))]
+    return out
 
 
 @dataclasses.dataclass(frozen=True)

@@ -3,7 +3,11 @@
 :class:`SmolRuntime` is the facade every deployment path goes through —
 the batch API (``run(corpus)``), the request-level serving API
 (``submit()``/``drain()``), and the online recalibration loop that
-re-solves the host/device placement split from measured stage occupancy.
+re-solves the host/device placement split (and the producer-pool size)
+from measured stage occupancy.  The memory subsystem (:mod:`.memory`)
+owns the allocation story — pooled staging buffers, a frame arena, and an
+in-flight-bytes admission budget — and :mod:`.workers` owns host-stage
+threading (work stealing + bounded backpressure).
 """
 
 from repro.runtime.facade import (
@@ -12,22 +16,53 @@ from repro.runtime.facade import (
     RuntimeConfig,
     SmolRuntime,
 )
+from repro.runtime.memory import (
+    ArenaStats,
+    BudgetStats,
+    BufferLease,
+    BufferPool,
+    FrameArena,
+    MemoryBudget,
+    MemoryConfig,
+    PoolStats,
+)
 from repro.runtime.recalibration import (
     RecalibrationEvent,
     Recalibrator,
     StageMeasurement,
+    WorkerRecalibrationEvent,
+    WorkerRecalibrator,
 )
-from repro.runtime.scheduler import CompletedRequest, RequestScheduler, SchedulerStats
+from repro.runtime.scheduler import (
+    CompletedRequest,
+    RequestScheduler,
+    SchedulerSaturated,
+    SchedulerStats,
+)
+from repro.runtime.workers import HostStream, WorkerPool
 
 __all__ = [
+    "ArenaStats",
+    "BudgetStats",
+    "BufferLease",
+    "BufferPool",
     "CompiledPlan",
     "CompletedRequest",
+    "FrameArena",
+    "HostStream",
+    "MemoryBudget",
+    "MemoryConfig",
+    "PoolStats",
     "RecalibrationEvent",
     "Recalibrator",
     "RequestScheduler",
     "RunReport",
     "RuntimeConfig",
+    "SchedulerSaturated",
     "SchedulerStats",
     "SmolRuntime",
     "StageMeasurement",
+    "WorkerPool",
+    "WorkerRecalibrationEvent",
+    "WorkerRecalibrator",
 ]

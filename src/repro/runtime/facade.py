@@ -33,7 +33,14 @@ from repro.core.planner import ModelSpec, Planner, QueryPlan
 from repro.preprocessing import ops as P
 from repro.preprocessing.formats import ImageFormat, StoredImage
 from repro.preprocessing.ops import TensorMeta
-from repro.runtime.recalibration import RecalibrationEvent, Recalibrator, StageMeasurement
+from repro.runtime.memory import MemoryConfig
+from repro.runtime.recalibration import (
+    RecalibrationEvent,
+    Recalibrator,
+    StageMeasurement,
+    WorkerRecalibrationEvent,
+    WorkerRecalibrator,
+)
 from repro.runtime.scheduler import CompletedRequest, RequestScheduler
 
 
@@ -50,6 +57,12 @@ class RuntimeConfig:
     recalibrate_every: int = 0  # items between recalibrations in run(); 0 = off
     recal_alpha: float = 0.5
     recal_hysteresis: float = 0.1
+    # memory & threading subsystem: staging-buffer pooling, in-flight byte
+    # budget, scheduler admission policy
+    memory: MemoryConfig = dataclasses.field(default_factory=MemoryConfig)
+    # worker-count recalibration knob (next to the host/device split)
+    recal_workers: bool = True
+    max_recal_workers: int = 16
 
 
 @dataclasses.dataclass
@@ -108,6 +121,11 @@ class SmolRuntime:
         self._recalibrator: Recalibrator | None = None
         self._scheduler: RequestScheduler | None = None
         self.recalibrations: list[RecalibrationEvent] = []
+        # live producer-pool size; starts at config and tracks the worker-
+        # count recalibration knob
+        self._num_workers = self.config.num_workers
+        self._worker_recal: WorkerRecalibrator | None = None
+        self.worker_recalibrations: list[WorkerRecalibrationEvent] = []
 
     # ----------------------------------------------------------- calibration
     def _decode_time(self, fmt: ImageFormat) -> float:
@@ -217,6 +235,12 @@ class SmolRuntime:
             alpha=self.config.recal_alpha,
             hysteresis=self.config.recal_hysteresis,
         )
+        if self._worker_recal is None:
+            self._worker_recal = WorkerRecalibrator(
+                num_workers=self._num_workers,
+                max_workers=max(self.config.max_recal_workers, self._num_workers),
+                alpha=self.config.recal_alpha,
+            )
         return compiled
 
     def _compile_placement(self, plan: QueryPlan, placement: Placement) -> CompiledPlan:
@@ -233,8 +257,10 @@ class SmolRuntime:
                 compiled.out_shape,
                 compiled.out_dtype,
                 batch_size=self.config.batch_size,
-                num_workers=self.config.num_workers,
+                num_workers=self._num_workers,
+                memory=self.config.memory,
             )
+        compiled.engine.num_workers = self._num_workers
         return compiled.engine
 
     # ---------------------------------------------------------- recalibrate
@@ -257,6 +283,18 @@ class SmolRuntime:
                     out_shape=self._compiled.out_shape,
                     out_dtype=self._compiled.out_dtype,
                 )
+        # second knob: resize the producer pool from the same measurement
+        # (no recompile — the engine reads num_workers per run, the
+        # scheduler grows/drains its thread set online)
+        if self.config.recal_workers and self._worker_recal is not None:
+            new_workers, workers_changed = self._worker_recal.update(measurement)
+            self.worker_recalibrations.append(self._worker_recal.events[-1])
+            if workers_changed:
+                self._num_workers = new_workers
+                if self._compiled is not None and self._compiled.engine is not None:
+                    self._compiled.engine.num_workers = new_workers
+                if self._scheduler is not None:
+                    self._scheduler.resize_workers(new_workers)
         return changed
 
     # --------------------------------------------------------------- running
@@ -305,14 +343,19 @@ class SmolRuntime:
     def start_serving(self) -> None:
         compiled = self.compile()
         if self._scheduler is None:
+            mem = self.config.memory
             self._scheduler = RequestScheduler(
                 compiled.host_fn,
                 jax.jit(compiled.device_fn),  # same compilation the engine gets
                 compiled.out_shape,
                 compiled.out_dtype,
                 max_batch=self.config.batch_size,
-                num_workers=self.config.num_workers,
+                num_workers=self._num_workers,
                 max_wait_ms=self.config.max_wait_ms,
+                max_pending=mem.max_pending,
+                admission=mem.admission,
+                admission_timeout_s=mem.admission_timeout_s,
+                budget=mem.build_budget(),
             )
         self._scheduler.start()
 
@@ -339,3 +382,31 @@ class SmolRuntime:
         if self._scheduler is None:
             raise RuntimeError("start_serving() before serving_recalibrate()")
         return self.recalibrate(self._scheduler.measurement())
+
+    # ----------------------------------------------------------------- stats
+    @property
+    def num_workers(self) -> int:
+        """Live producer-pool size (tracks the recalibration knob)."""
+        return self._num_workers
+
+    def stats(self) -> dict[str, Any]:
+        """Memory/threading occupancy across the runtime's hot paths.
+
+        Keys: ``num_workers``; ``engine`` with pool/budget snapshots from
+        the batch path (None until a batch engine ran with pooling on);
+        ``scheduler`` with request counters and the serving-side budget.
+        """
+        out: dict[str, Any] = {"num_workers": self._num_workers, "engine": None, "scheduler": None}
+        engine = self._compiled.engine if self._compiled is not None else None
+        if engine is not None:
+            out["engine"] = {
+                "pool": engine.pool_stats(),
+                "budget": engine.budget_stats(),
+            }
+        if self._scheduler is not None:
+            sched = self._scheduler
+            out["scheduler"] = {
+                "stats": dataclasses.replace(sched.stats),
+                "budget": sched.budget.stats() if sched.budget is not None else None,
+            }
+        return out

@@ -1,0 +1,398 @@
+"""High-throughput memory subsystem for the pipelined engine (paper §6.1 (c)).
+
+The paper's engine "efficiently manages memory and threading for high
+throughput execution": buffers are preallocated, pinned, and reused rather
+than allocated per item.  "Beyond Inference" (AbouElhamayed et al., 2024)
+measures why that matters — at serving rates, allocator traffic and copies
+on the host side routinely dominate end-to-end latency.  This module is the
+allocation story for every hot path (decode → resize → stage → batch →
+device):
+
+* :class:`BufferPool` — size-bucketed pool of reusable fixed-shape buffers
+  with strict lease/release semantics (a buffer backs at most one live
+  lease; double release raises).  The engine draws its batch staging
+  buffers here, the pinned-memory analogue on CPU/TPU hosts.
+* :class:`FrameArena` — block arena for *variable-size* intermediates
+  (decoded frames whose dims vary per item).  Allocation is a bump-pointer
+  slice; blocks recycle when their last slice is released, so steady-state
+  traffic never touches the system allocator.
+* :class:`MemoryBudget` — admission controller bounding total in-flight
+  decoded bytes.  Producers admit before decoding; consumers release after
+  staging.  Under pressure, admission blocks (backpressure) or fails fast
+  (load shedding), instead of queueing without bound.
+* :class:`MemoryConfig` — one config object the runtime threads through
+  engine, scheduler, and facade.
+
+Everything is thread-safe; the pool and arena are shared by all producer
+workers and the consumer.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Any
+
+import numpy as np
+
+
+def _round_up_pow2(n: int, floor: int) -> int:
+    b = max(int(n), 1, int(floor))
+    return 1 << (b - 1).bit_length()
+
+
+# --------------------------------------------------------------------- config
+@dataclasses.dataclass
+class MemoryConfig:
+    """Memory-and-threading policy, threaded through the whole runtime.
+
+    ``pooling=False`` reproduces the naive allocate-per-batch baseline (the
+    bench sweeps both to keep the pooled path honest).
+    """
+
+    pooling: bool = True
+    bucket_min_bytes: int = 4096  # smallest pool bucket (pow-2 rounding floor)
+    max_buffers_per_bucket: int = 8  # release beyond this frees instead of hoards
+    arena_block_bytes: int = 1 << 20
+    budget_bytes: int | None = None  # cap on in-flight decoded bytes; None = off
+    max_pending: int | None = None  # scheduler admission: max in-flight requests
+    admission: str = "block"  # "block" (backpressure) | "reject" (shed load)
+    admission_timeout_s: float = 30.0
+
+    def __post_init__(self):
+        if self.admission not in ("block", "reject"):
+            raise ValueError(f"admission must be 'block' or 'reject', got {self.admission!r}")
+
+    def build_pool(self) -> "BufferPool | None":
+        return (
+            BufferPool(
+                bucket_min_bytes=self.bucket_min_bytes,
+                max_buffers_per_bucket=self.max_buffers_per_bucket,
+            )
+            if self.pooling
+            else None
+        )
+
+    def build_budget(self) -> "MemoryBudget | None":
+        return MemoryBudget(self.budget_bytes) if self.budget_bytes else None
+
+
+# ----------------------------------------------------------------------- pool
+@dataclasses.dataclass(frozen=True)
+class PoolStats:
+    """Occupancy snapshot; the zero-net-growth invariant is checked on these."""
+
+    buffers_allocated: int  # system allocations ever made (growth must plateau)
+    bytes_allocated: int
+    leases_issued: int
+    leases_active: int
+    leases_reused: int  # issued minus fresh allocations
+    bytes_in_use: int
+    high_water_bytes: int
+
+    @property
+    def reuse_rate(self) -> float:
+        return self.leases_reused / self.leases_issued if self.leases_issued else 0.0
+
+
+class BufferLease:
+    """One checked-out buffer.  Release exactly once (context manager works)."""
+
+    __slots__ = ("array", "_pool", "_bucket", "_raw", "_released")
+
+    def __init__(self, array: np.ndarray, pool: "BufferPool", bucket: int, raw: np.ndarray):
+        self.array = array
+        self._pool = pool
+        self._bucket = bucket
+        self._raw = raw
+        self._released = False
+
+    def release(self) -> None:
+        if self._released:
+            raise RuntimeError("buffer lease released twice")
+        self._released = True
+        self._pool._give_back(self._bucket, self._raw)
+
+    def __enter__(self) -> np.ndarray:
+        return self.array
+
+    def __exit__(self, *exc) -> None:
+        self.release()
+
+
+class BufferPool:
+    """Size-bucketed pool of reusable buffers with lease/release semantics.
+
+    Buckets are power-of-two byte sizes; a lease carves a typed view of the
+    requested shape out of a flat uint8 buffer.  A buffer backs at most one
+    live lease — it leaves the free list on lease and only re-enters it on
+    release — so double-issue is structurally impossible; the invariant is
+    additionally asserted.
+    """
+
+    def __init__(self, bucket_min_bytes: int = 4096, max_buffers_per_bucket: int = 8):
+        self.bucket_min_bytes = bucket_min_bytes
+        self.max_buffers_per_bucket = max_buffers_per_bucket
+        self._free: dict[int, list[np.ndarray]] = {}
+        self._live: set[int] = set()  # id(raw) of checked-out buffers
+        self._lock = threading.Lock()
+        self._buffers_allocated = 0
+        self._bytes_allocated = 0
+        self._leases_issued = 0
+        self._leases_reused = 0
+        self._bytes_in_use = 0
+        self._high_water = 0
+
+    def lease(self, shape: tuple[int, ...], dtype: Any) -> BufferLease:
+        dtype = np.dtype(dtype)
+        nbytes = int(np.prod(shape, dtype=np.int64)) * dtype.itemsize
+        bucket = _round_up_pow2(nbytes, self.bucket_min_bytes)
+        with self._lock:
+            free = self._free.setdefault(bucket, [])
+            if free:
+                raw = free.pop()
+                self._leases_reused += 1
+            else:
+                raw = np.empty(bucket, dtype=np.uint8)
+                self._buffers_allocated += 1
+                self._bytes_allocated += bucket
+            if id(raw) in self._live:  # pragma: no cover - structurally unreachable
+                raise RuntimeError("buffer double-issued: still backing a live lease")
+            self._live.add(id(raw))
+            self._leases_issued += 1
+            self._bytes_in_use += bucket
+            self._high_water = max(self._high_water, self._bytes_in_use)
+        view = raw[:nbytes].view(dtype).reshape(shape)
+        return BufferLease(view, self, bucket, raw)
+
+    def _give_back(self, bucket: int, raw: np.ndarray) -> None:
+        with self._lock:
+            self._live.discard(id(raw))
+            self._bytes_in_use -= bucket
+            free = self._free.setdefault(bucket, [])
+            if len(free) < self.max_buffers_per_bucket:
+                free.append(raw)
+            else:  # beyond the hoard cap: let the allocator have it back
+                self._buffers_allocated -= 1
+                self._bytes_allocated -= bucket
+
+    def stats(self) -> PoolStats:
+        with self._lock:
+            return PoolStats(
+                buffers_allocated=self._buffers_allocated,
+                bytes_allocated=self._bytes_allocated,
+                leases_issued=self._leases_issued,
+                leases_active=len(self._live),
+                leases_reused=self._leases_reused,
+                bytes_in_use=self._bytes_in_use,
+                high_water_bytes=self._high_water,
+            )
+
+
+# ---------------------------------------------------------------------- arena
+@dataclasses.dataclass(frozen=True)
+class ArenaStats:
+    blocks_allocated: int  # must plateau under steady-state reuse
+    blocks_free: int
+    bytes_in_use: int
+    high_water_bytes: int
+
+
+class ArenaSlice:
+    """One arena allocation; ``array`` is a uint8 view, release recycles."""
+
+    __slots__ = ("array", "_arena", "_block", "_released")
+
+    def __init__(self, array: np.ndarray, arena: "FrameArena", block: "_ArenaBlock"):
+        self.array = array
+        self._arena = arena
+        self._block = block
+        self._released = False
+
+    def release(self) -> None:
+        if self._released:
+            raise RuntimeError("arena slice released twice")
+        self._released = True
+        self._arena._release(self._block, self.array.nbytes)
+
+
+class _ArenaBlock:
+    __slots__ = ("buf", "offset", "refs")
+
+    def __init__(self, nbytes: int):
+        self.buf = np.empty(nbytes, dtype=np.uint8)
+        self.offset = 0
+        self.refs = 0
+
+
+class FrameArena:
+    """Bump-pointer block arena for variable-size decoded frames.
+
+    Slices bump within the current block; each block counts its live
+    slices and returns to the free list when the last one is released and
+    the arena has moved on.  Oversize requests (> block size) get a
+    dedicated block that is freed, not recycled.
+    """
+
+    def __init__(self, block_bytes: int = 1 << 20, max_free_blocks: int = 8):
+        self.block_bytes = block_bytes
+        self.max_free_blocks = max_free_blocks
+        self._current: _ArenaBlock | None = None
+        self._free: list[_ArenaBlock] = []
+        self._lock = threading.Lock()
+        self._blocks_allocated = 0
+        self._bytes_in_use = 0
+        self._high_water = 0
+
+    def alloc(self, nbytes: int) -> ArenaSlice:
+        nbytes = int(nbytes)
+        with self._lock:
+            if nbytes > self.block_bytes:
+                block = _ArenaBlock(nbytes)  # dedicated, freed on release
+                self._blocks_allocated += 1
+                block.offset = nbytes
+                block.refs = 1
+                view = block.buf[:nbytes]
+            else:
+                cur = self._current
+                if cur is None or cur.offset + nbytes > self.block_bytes:
+                    self._retire_current()
+                    cur = self._take_block()
+                    self._current = cur
+                view = cur.buf[cur.offset : cur.offset + nbytes]
+                cur.offset += nbytes
+                cur.refs += 1
+                block = cur
+            self._bytes_in_use += nbytes
+            self._high_water = max(self._high_water, self._bytes_in_use)
+        return ArenaSlice(view, self, block)
+
+    def _take_block(self) -> _ArenaBlock:
+        if self._free:
+            block = self._free.pop()
+            block.offset = 0
+            block.refs = 0
+            return block
+        self._blocks_allocated += 1
+        return _ArenaBlock(self.block_bytes)
+
+    def _retire_current(self) -> None:
+        # caller holds the lock; a full current block with no live refs can
+        # recycle immediately, otherwise its last release recycles it
+        cur = self._current
+        self._current = None
+        if cur is not None and cur.refs == 0:
+            self._recycle(cur)
+
+    def _recycle(self, block: _ArenaBlock) -> None:
+        if len(self._free) < self.max_free_blocks:
+            self._free.append(block)
+        else:
+            self._blocks_allocated -= 1
+
+    def _release(self, block: _ArenaBlock, nbytes: int) -> None:
+        with self._lock:
+            self._bytes_in_use -= nbytes
+            block.refs -= 1
+            if block.refs == 0 and block is not self._current:
+                if block.buf.nbytes != self.block_bytes:  # oversize: free outright
+                    self._blocks_allocated -= 1
+                else:
+                    self._recycle(block)
+
+    def stats(self) -> ArenaStats:
+        with self._lock:
+            return ArenaStats(
+                blocks_allocated=self._blocks_allocated,
+                blocks_free=len(self._free),
+                bytes_in_use=self._bytes_in_use,
+                high_water_bytes=self._high_water,
+            )
+
+
+# --------------------------------------------------------------------- budget
+@dataclasses.dataclass(frozen=True)
+class BudgetStats:
+    max_bytes: int
+    in_flight_bytes: int
+    high_water_bytes: int
+    admitted: int
+    rejected: int
+    blocked_seconds: float
+
+
+class MemoryBudget:
+    """Bounds total in-flight decoded bytes across producers.
+
+    ``admit`` blocks until the bytes fit (backpressure); ``try_admit``
+    fails fast (load shedding).  A single request larger than the whole
+    budget is admitted when nothing else is in flight, so oversized items
+    degrade to serial execution instead of deadlocking the pipeline.
+    """
+
+    def __init__(self, max_bytes: int):
+        if max_bytes <= 0:
+            raise ValueError("budget max_bytes must be positive")
+        self.max_bytes = int(max_bytes)
+        self._in_flight = 0
+        self._cond = threading.Condition()
+        self._admitted = 0
+        self._rejected = 0
+        self._blocked_seconds = 0.0
+        self._high_water = 0
+
+    def _fits(self, nbytes: int) -> bool:
+        return self._in_flight + nbytes <= self.max_bytes or (
+            self._in_flight == 0 and nbytes > self.max_bytes
+        )
+
+    def try_admit(self, nbytes: int) -> bool:
+        with self._cond:
+            if self._fits(nbytes):
+                self._in_flight += nbytes
+                self._high_water = max(self._high_water, self._in_flight)
+                self._admitted += 1
+                return True
+            self._rejected += 1
+            return False
+
+    def admit(self, nbytes: int, timeout: float | None = None) -> bool:
+        import time
+
+        t0 = time.perf_counter()
+        with self._cond:
+            ok = self._cond.wait_for(lambda: self._fits(nbytes), timeout)
+            self._blocked_seconds += time.perf_counter() - t0
+            if not ok:
+                # a timed-out blocking admit is backpressure, not load
+                # shedding — callers polling in slices would otherwise
+                # inflate `rejected` by orders of magnitude.  Only
+                # try_admit (the shedding path) counts rejections.
+                return False
+            self._in_flight += nbytes
+            self._high_water = max(self._high_water, self._in_flight)
+            self._admitted += 1
+            return True
+
+    def release(self, nbytes: int) -> None:
+        with self._cond:
+            self._in_flight -= nbytes
+            if self._in_flight < 0:
+                raise RuntimeError("budget released more bytes than admitted")
+            self._cond.notify_all()
+
+    @property
+    def in_flight_bytes(self) -> int:
+        with self._cond:
+            return self._in_flight
+
+    def stats(self) -> BudgetStats:
+        with self._cond:
+            return BudgetStats(
+                max_bytes=self.max_bytes,
+                in_flight_bytes=self._in_flight,
+                high_water_bytes=self._high_water,
+                admitted=self._admitted,
+                rejected=self._rejected,
+                blocked_seconds=self._blocked_seconds,
+            )

@@ -13,6 +13,13 @@ back into a :class:`Recalibrator`, which
 3. re-runs :func:`repro.core.placement.choose_split` under the updated
    rates, moving the split only when the predicted gain clears a
    hysteresis margin (so measurement noise does not thrash recompiles).
+
+Next to the split there is a second knob: the **host worker count**.
+:class:`WorkerRecalibrator` sizes the producer pool from the same stage
+measurements — the host stage needs roughly ``host_time / device_time``
+concurrent workers to keep the accelerator fed — with EWMA smoothing, a
+dead band, and one-step moves so the count cannot oscillate between
+adjacent values on noisy windows.
 """
 
 from __future__ import annotations
@@ -53,6 +60,77 @@ class RecalibrationEvent:
     @property
     def changed(self) -> bool:
         return self.new_split != self.old_split
+
+
+@dataclasses.dataclass
+class WorkerRecalibrationEvent:
+    old_workers: int
+    new_workers: int
+    ideal_workers: float  # smoothed host/device occupancy ratio
+
+    @property
+    def changed(self) -> bool:
+        return self.new_workers != self.old_workers
+
+
+class WorkerRecalibrator:
+    """Online tuner for the host producer-pool size.
+
+    One device stream is saturated when ``num_workers * device_spi >=
+    host_spi`` (each worker contributes one item per ``host_spi`` seconds;
+    the device consumes one per ``device_spi``).  The ideal count is the
+    ratio; measured ratios are EWMA-smoothed, and the count only moves when
+    the smoothed ideal leaves a ±dead-band around the current value — and
+    then by one worker at a time — so a window straddling a boundary can't
+    flap between adjacent counts (oscillation damping).
+    """
+
+    def __init__(
+        self,
+        num_workers: int,
+        min_workers: int = 1,
+        max_workers: int = 16,
+        alpha: float = 0.5,
+        dead_band: float = 0.5,
+    ):
+        if not (min_workers <= num_workers <= max_workers):
+            raise ValueError(
+                f"need min_workers <= num_workers <= max_workers, "
+                f"got {min_workers} <= {num_workers} <= {max_workers}"
+            )
+        self.num_workers = num_workers
+        self.min_workers = min_workers
+        self.max_workers = max_workers
+        self.alpha = alpha
+        self.dead_band = dead_band
+        self._smoothed: float | None = None
+        self.events: list[WorkerRecalibrationEvent] = []
+
+    def update(self, m: StageMeasurement) -> tuple[int, bool]:
+        """Fold one stage measurement in; returns (num_workers, changed)."""
+        old = self.num_workers
+        if m.device_seconds_per_item <= 0 or m.host_seconds_per_item <= 0:
+            # degenerate window (e.g. zero measured host busy-time, or no
+            # completions): hold rather than steer on garbage
+            self.events.append(WorkerRecalibrationEvent(old, old, self._smoothed or float(old)))
+            return old, False
+        ideal = m.host_seconds_per_item / m.device_seconds_per_item
+        if self._smoothed is None:
+            self._smoothed = ideal
+        else:
+            self._smoothed = (1.0 - self.alpha) * self._smoothed + self.alpha * ideal
+        # grow when the current pool is clearly starving the device; shrink
+        # only when one fewer worker would still over-provision by the same
+        # margin — the asymmetric band is the anti-flap hysteresis
+        new = old
+        if self._smoothed > old + self.dead_band:
+            new = old + 1
+        elif self._smoothed < old - 1.0 - self.dead_band:
+            new = old - 1
+        new = max(self.min_workers, min(self.max_workers, new))
+        self.num_workers = new
+        self.events.append(WorkerRecalibrationEvent(old, new, self._smoothed))
+        return new, new != old
 
 
 class Recalibrator:

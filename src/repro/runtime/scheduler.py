@@ -21,6 +21,17 @@ old host stage meets the new device stage or staging-buffer signature.
 A request whose host or device stage raises completes with its ``error``
 field set rather than killing the worker/batcher thread — serving keeps
 going, and the caller sees the failure on drain.
+
+**Admission control** (paper §6.1(c) resource governance): without it,
+:meth:`submit` accepts requests indefinitely and decoded frames pile up in
+the ready queue.  Two gates bound that:
+
+* ``max_pending`` caps in-flight requests — excess submits either block
+  (``admission='block'``, backpressure on the caller) or raise
+  :class:`SchedulerSaturated` (``admission='reject'``, load shedding);
+* an optional :class:`~repro.runtime.memory.MemoryBudget` bounds in-flight
+  *bytes*: each admitted request reserves its staged-item footprint and
+  releases it on completion (success or error).
 """
 
 from __future__ import annotations
@@ -32,6 +43,12 @@ import time
 from typing import Any, Callable
 
 import numpy as np
+
+from repro.runtime.memory import MemoryBudget
+
+
+class SchedulerSaturated(RuntimeError):
+    """submit() rejected: the scheduler is at max_pending / memory budget."""
 
 
 @dataclasses.dataclass
@@ -52,11 +69,13 @@ class SchedulerStats:
     submitted: int = 0
     completed: int = 0
     failed: int = 0
+    rejected: int = 0  # admission-control rejections (never entered the pipe)
     batches: int = 0
     batch_items: int = 0
     host_items: int = 0  # items through the host stage (>= completed)
     host_busy_seconds: float = 0.0
     device_busy_seconds: float = 0.0
+    admission_blocked_seconds: float = 0.0  # time submit() spent backpressured
 
     @property
     def mean_batch_size(self) -> float:
@@ -77,7 +96,13 @@ class RequestScheduler:
         max_batch: int,
         num_workers: int = 2,
         max_wait_ms: float = 2.0,
+        max_pending: int | None = None,
+        admission: str = "block",
+        admission_timeout_s: float = 30.0,
+        budget: MemoryBudget | None = None,
     ):
+        if admission not in ("block", "reject"):
+            raise ValueError(f"admission must be 'block' or 'reject', got {admission!r}")
         self._host_fn = host_fn
         self._device_fn = device_fn
         self.out_shape = tuple(out_shape)
@@ -85,6 +110,15 @@ class RequestScheduler:
         self.max_batch = max_batch
         self.num_workers = num_workers
         self.max_wait_s = max_wait_ms / 1e3
+        self.max_pending = max_pending
+        self.admission = admission
+        self.admission_timeout_s = admission_timeout_s
+        self.budget = budget
+        # per-request reservation against the byte budget: the staged host-
+        # stage output footprint (refreshed on rebind)
+        self._item_nbytes = int(np.prod(self.out_shape, dtype=np.int64)) * np.dtype(
+            out_dtype
+        ).itemsize
         self.stats = SchedulerStats()
 
         self._ingress: queue.Queue = queue.Queue()
@@ -99,7 +133,9 @@ class RequestScheduler:
         self._next_uid = 0
         self._next_drain = 0
         self._inflight = 0
-        self._inflight_lock = threading.Lock()
+        # Condition (not a bare lock): admission blocks on it until
+        # completions notify pending-count headroom.
+        self._inflight_lock = threading.Condition()
         self._idle = threading.Event()
         self._idle.set()
         self._threads: list[threading.Thread] = []
@@ -133,6 +169,8 @@ class RequestScheduler:
         except TimeoutError:
             pass  # abandon whatever is stuck; shutdown must proceed
         self._running = False
+        with self._inflight_lock:
+            self._inflight_lock.notify_all()  # wake submitters blocked on admission
         for _ in range(self.num_workers):
             self._ingress.put(self._STOP)
         self._ready.put(self._STOP)
@@ -164,17 +202,117 @@ class RequestScheduler:
                 self.out_shape = tuple(out_shape)
             if out_dtype is not None:
                 self.out_dtype = out_dtype
+            # safe to retarget the budget reservation size: flush() left
+            # zero requests admitted under the old footprint
+            self._item_nbytes = int(np.prod(self.out_shape, dtype=np.int64)) * np.dtype(
+                self.out_dtype
+            ).itemsize
+
+    def resize_workers(self, num_workers: int) -> None:
+        """Retune the host-worker count online (the recalibration knob).
+
+        Growing spawns threads immediately; shrinking posts one stop
+        sentinel per surplus worker — the ingress queue is FIFO, so each
+        sentinel retires exactly one worker after the work queued ahead of
+        it, without stalling live traffic.  No-op when the count is
+        unchanged or the scheduler is stopped.
+        """
+        num_workers = max(1, int(num_workers))
+        if not self._running or num_workers == self.num_workers:
+            self.num_workers = num_workers
+            return
+        delta = num_workers - self.num_workers
+        if delta > 0:
+            fresh = [
+                threading.Thread(target=self._host_worker, daemon=True) for _ in range(delta)
+            ]
+            self._threads.extend(fresh)
+            for t in fresh:
+                t.start()
+        else:
+            for _ in range(-delta):
+                self._ingress.put(self._STOP)
+            # retiring workers exit asynchronously; drop already-dead
+            # threads so the list doesn't grow across repeated resizes
+            self._threads = [t for t in self._threads if t.is_alive()]
+        self.num_workers = num_workers
 
     # ---------------------------------------------------------------- submit
+    def _admit(self) -> None:
+        """Admission control: bound pending requests and in-flight bytes."""
+        t0 = time.perf_counter()
+        blocked = 0.0
+        with self._inflight_lock:
+            if self.max_pending is not None and self._inflight >= self.max_pending:
+                if self.admission == "reject":
+                    with self._stats_lock:
+                        self.stats.rejected += 1
+                    raise SchedulerSaturated(
+                        f"{self._inflight} requests pending >= max_pending={self.max_pending}"
+                    )
+                ok = self._inflight_lock.wait_for(
+                    lambda: self._inflight < self.max_pending or not self._running,
+                    self.admission_timeout_s,
+                )
+                blocked = time.perf_counter() - t0
+                if not self._running:
+                    raise RuntimeError("scheduler stopped while submit() was blocked")
+                if not ok:
+                    with self._stats_lock:
+                        self.stats.rejected += 1
+                    raise TimeoutError(
+                        f"submit() blocked > {self.admission_timeout_s}s at "
+                        f"max_pending={self.max_pending}"
+                    )
+            self._inflight += 1
+            self._idle.clear()
+        if self.budget is not None and self._item_nbytes:
+            if self.admission == "reject":
+                admitted = self.budget.try_admit(self._item_nbytes)
+            else:
+                # poll in short slices so a stop() during the wait is
+                # noticed instead of blocking the full admission timeout
+                t1 = time.perf_counter()
+                deadline = t1 + self.admission_timeout_s
+                admitted = False
+                while self._running:
+                    remaining = deadline - time.perf_counter()
+                    if remaining <= 0:
+                        break
+                    if self.budget.admit(self._item_nbytes, timeout=min(0.05, remaining)):
+                        admitted = True
+                        break
+                blocked += time.perf_counter() - t1
+            if admitted and not self._running:
+                # stopped while we were blocked: the ingress queue already
+                # holds the STOP sentinels, this request would never run
+                self.budget.release(self._item_nbytes)
+                admitted = False
+            if not admitted:
+                with self._inflight_lock:
+                    self._inflight -= 1
+                    if self._inflight == 0:
+                        self._idle.set()
+                    self._inflight_lock.notify_all()
+                if not self._running:
+                    raise RuntimeError("scheduler stopped while submit() was blocked")
+                with self._stats_lock:
+                    self.stats.rejected += 1
+                raise SchedulerSaturated(
+                    f"memory budget exhausted ({self.budget.in_flight_bytes}B in flight, "
+                    f"request needs {self._item_nbytes}B)"
+                )
+        if blocked:
+            with self._stats_lock:
+                self.stats.admission_blocked_seconds += blocked
+
     def submit(self, item: Any) -> int:
         if not self._running:
             raise RuntimeError("scheduler is not running; call start() first")
+        self._admit()
         with self._submit_lock:
             uid = self._next_uid
             self._next_uid += 1
-        with self._inflight_lock:
-            self._inflight += 1
-            self._idle.clear()
         with self._stats_lock:
             self.stats.submitted += 1
         self._ingress.put((uid, item, time.perf_counter()))
@@ -290,10 +428,7 @@ class RequestScheduler:
             for row, (uid, t_submit) in enumerate(metas):
                 self._done[uid] = CompletedRequest(uid, out[row], t_submit, now)
             self._done_event.set()
-        with self._inflight_lock:
-            self._inflight -= len(metas)
-            if self._inflight == 0:
-                self._idle.set()
+        self._retire_admissions(len(metas))
 
     def _complete_error(self, uid: int, t_submit: float, exc: BaseException) -> None:
         now = time.perf_counter()
@@ -302,10 +437,19 @@ class RequestScheduler:
         with self._done_lock:
             self._done[uid] = CompletedRequest(uid, None, t_submit, now, error=exc)
             self._done_event.set()
+        self._retire_admissions(1)
+
+    def _retire_admissions(self, count: int) -> None:
+        """Return ``count`` completed requests' admission: pending slots and
+        budget bytes (waking any blocked submitters)."""
+        if self.budget is not None and self._item_nbytes:
+            for _ in range(count):
+                self.budget.release(self._item_nbytes)
         with self._inflight_lock:
-            self._inflight -= 1
+            self._inflight -= count
             if self._inflight == 0:
                 self._idle.set()
+            self._inflight_lock.notify_all()
 
     def measurement(self):
         """Stage occupancy per item *since the previous call* (windowed, for

@@ -5,7 +5,16 @@ model per deployment.  Now every vision request goes through
 :class:`repro.runtime.SmolRuntime`: the planner picks the (model, format)
 plan, the placement optimizer splits preprocessing across host/device, the
 request scheduler dynamically batches, and the recalibration loop keeps the
-split matched to observed stage occupancy while the server runs.
+split (and the host worker count) matched to observed stage occupancy while
+the server runs.
+
+Resource governance comes from the runtime's memory subsystem
+(``RuntimeConfig.memory``): with ``max_pending`` / ``budget_bytes`` set,
+an overloaded server backpressures or sheds load at :meth:`submit` —
+``admission='reject'`` surfaces as :class:`repro.runtime.SchedulerSaturated`
+to the caller, which is the signal to return HTTP 429 upstream.
+:meth:`VisionServingEngine.stats` exposes pool/budget/queue occupancy for
+dashboards.
 """
 
 from __future__ import annotations
@@ -98,6 +107,15 @@ class VisionServingEngine:
     @property
     def split(self) -> int:
         return self.runtime.compile().placement.split
+
+    @property
+    def num_workers(self) -> int:
+        """Live host worker count (moves under worker recalibration)."""
+        return self.runtime.num_workers
+
+    def stats(self) -> dict:
+        """Memory/threading occupancy (pool, budget, admission counters)."""
+        return self.runtime.stats()
 
     @staticmethod
     def _to_response(r: CompletedRequest) -> VisionResponse:

@@ -108,3 +108,69 @@ def test_partial_decode_is_cheaper(rng):
         jpeg.decode(blob, roi=(0, 0, 64, 64))
     t_roi = time.perf_counter() - t0
     assert t_roi < t_full * 0.7
+
+
+# ------------------------------------------------------------- pjpeg (libjpeg)
+def test_pjpeg_roundtrip_and_formats(rng):
+    """The Pillow-backed codec: roundtrip fidelity + StoredImage plumbing."""
+    from repro.preprocessing.formats import ImageFormat, StoredImage
+
+    img = smooth_image(rng, 120, 150)
+    fmt = ImageFormat("pjpeg", None, 95)
+    stored = StoredImage.from_array(img, [fmt])
+    out = stored.decode(fmt)
+    assert out.shape == img.shape and out.dtype == np.uint8
+    assert np.abs(out.astype(int) - img.astype(int)).mean() < 4.0
+
+
+def test_pjpeg_scaled_decode_is_partial(rng):
+    """short_side on pjpeg = decode-time scaled IDCT (stored stays native):
+    the output covers the target short side at a 1/2^k scale and decoding
+    it is cheaper than the full-resolution decode."""
+    import time
+
+    from repro.preprocessing.formats import ImageFormat, StoredImage
+
+    img = smooth_image(rng, 512, 512)
+    full = ImageFormat("pjpeg", None, 90)
+    scaled = ImageFormat("pjpeg", 64, 90)
+    stored = StoredImage.from_array(img, [full, scaled])
+    # same stored bytes: short_side never creates a resized variant
+    assert stored.nbytes(full) == stored.nbytes(scaled)
+    out = stored.decode(scaled)
+    assert min(out.shape[:2]) == 64  # 512 / 8, never undershooting 64
+    assert stored.decode(full).shape == img.shape
+
+    t0 = time.perf_counter()
+    for _ in range(5):
+        stored.decode(full)
+    t_full = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    for _ in range(5):
+        stored.decode(scaled)
+    t_scaled = time.perf_counter() - t0
+    assert t_scaled < t_full
+
+
+def test_pjpeg_scaled_decode_roi_in_native_coords(rng):
+    """roi stays in native full-resolution coordinates (the contract shared
+    with jpeg.decode / planner.central_roi) even under scaled decode."""
+    from repro.preprocessing.formats import ImageFormat, StoredImage
+
+    img = smooth_image(rng, 512, 512)
+    scaled = ImageFormat("pjpeg", 64, 90)
+    stored = StoredImage.from_array(img, [scaled])
+    out = stored.decode(scaled, roi=(128, 128, 384, 384))
+    assert out.shape[:2] == (32, 32)  # a 256-px native window at 1/8 scale
+    whole = stored.decode(scaled)
+    np.testing.assert_array_equal(out, whole[16:48, 16:48])
+
+
+def test_pjpeg_dc_only_matches_eighth_scale(rng):
+    from repro.preprocessing.formats import ImageFormat, StoredImage
+
+    img = smooth_image(rng, 256, 256)
+    fmt = ImageFormat("pjpeg", None, 90)
+    stored = StoredImage.from_array(img, [fmt])
+    dc = stored.decode(fmt, dc_only=True)
+    assert dc.shape[:2] == (32, 32)

@@ -168,6 +168,80 @@ def test_planner_replan_moves_split_with_measurements(corpus):
     assert slow.estimate.accuracy == plan.estimate.accuracy
 
 
+def test_recalibration_zero_host_busy_time_holds_rates():
+    # a window where the host never ran (all-device placement, or an empty
+    # measurement) must not corrupt the rate model or move the split
+    r = _recalibrator()
+    initial = r.resolve()
+    rates_before = (r.host_ops_per_sec, r.host_decode_time)
+    placement, changed = r.update(
+        initial, StageMeasurement(host_seconds_per_item=0.0, device_seconds_per_item=1e-3)
+    )
+    assert not changed
+    assert placement.split == initial.split
+    assert (r.host_ops_per_sec, r.host_decode_time) == rates_before
+
+
+def test_recalibration_zero_measurement_is_a_noop():
+    r = _recalibrator()
+    initial = r.resolve()
+    state = (r.host_ops_per_sec, r.device_ops_per_sec, r.host_decode_time, r.dnn_device_time)
+    placement, changed = r.update(initial, StageMeasurement(0.0, 0.0))
+    assert not changed and placement.split == initial.split
+    assert state == (
+        r.host_ops_per_sec, r.device_ops_per_sec, r.host_decode_time, r.dnn_device_time,
+    )
+
+
+def test_recalibration_single_sample_window_from_scheduler():
+    # one request through the scheduler: the windowed measurement must be
+    # finite and usable, and an *empty* follow-up window must be a no-op
+    from repro.runtime import RequestScheduler
+
+    sched = RequestScheduler(
+        lambda item: np.full((4,), float(item), np.float32),
+        lambda b: b,
+        (4,),
+        np.float32,
+        max_batch=2,
+        num_workers=1,
+        max_wait_ms=1.0,
+    )
+    sched.start()
+    try:
+        sched.submit(7)
+        sched.flush(timeout=30.0)
+        m = sched.measurement()
+        assert m.host_seconds_per_item >= 0.0 and np.isfinite(m.host_seconds_per_item)
+        assert m.device_seconds_per_item >= 0.0 and np.isfinite(m.device_seconds_per_item)
+        empty = sched.measurement()  # no items since the last window
+        assert empty.host_seconds_per_item == 0.0
+        assert empty.device_seconds_per_item == 0.0
+        r = _recalibrator()
+        initial = r.resolve()
+        _, changed = r.update(initial, empty)
+        assert not changed
+    finally:
+        sched.stop()
+
+
+def test_recalibration_oscillation_damped_by_hysteresis():
+    # alternating host-slow / host-fast windows: with hysteresis the split
+    # must not flip back and forth on every observation
+    r = _recalibrator(alpha=0.5, hysteresis=0.5)
+    placement = r.resolve()
+    base_host = 1.0 / placement.est_host_throughput
+    base_dev = 1.0 / placement.est_device_throughput
+    flips = 0
+    for i in range(10):
+        factor = 8.0 if i % 2 == 0 else 0.125
+        placement, changed = r.update(
+            placement, StageMeasurement(factor * base_host, base_dev)
+        )
+        flips += int(changed)
+    assert flips <= 2, f"split thrashed {flips} times under alternating noise"
+
+
 def test_engine_propagates_host_stage_errors():
     def host_fn(i):
         if i == 3:
