@@ -94,6 +94,13 @@ def main():
         f"placement: {plan.placement.split} host op(s), "
         f"{len(plan.placement.device_ops)} device op(s)"
     )
+    program = runtime.compile().device_program
+    print(
+        f"device program: backend={program.backend} impl={program.impl} "
+        f"fused={program.fused} ({program.dispatches_per_batch} dispatch/batch)"
+    )
+    if program.stages:
+        print(f"  lowering: {' -> '.join(program.stages)}")
 
     outputs, report = runtime.run(stored)
     preds = [int(np.argmax(o)) for o in outputs]

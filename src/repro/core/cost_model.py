@@ -67,6 +67,24 @@ def estimate_smol(
     return min(preproc_throughput, t_exec)
 
 
+def device_stage_seconds(
+    total_flops: float,
+    n_dispatch_groups: int,
+    device_ops_per_sec: float,
+    dispatch_overhead_s: float = 0.0,
+) -> float:
+    """Seconds/item of device-side preprocessing under the fusion model.
+
+    The device compiler lowers each fusion group into one program stage, so
+    a fused group costs ONE dispatch overhead — not a per-op sum.  "Beyond
+    Inference" (AbouElhamayed et al., 2024) measures exactly this term
+    dominating at serving rates; with ``dispatch_overhead_s`` calibrated,
+    fusing a suffix shifts the optimal split device-ward because k extra
+    device ops no longer cost k extra dispatches.
+    """
+    return n_dispatch_groups * dispatch_overhead_s + total_flops / device_ops_per_sec
+
+
 ESTIMATORS: dict[str, Callable[..., float]] = {
     "blazeit": estimate_blazeit,
     "tahoma": estimate_tahoma,

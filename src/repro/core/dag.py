@@ -19,6 +19,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+from typing import Sequence
 
 from repro.preprocessing import ops as P
 from repro.preprocessing.ops import PreprocOp, TensorMeta
@@ -56,6 +57,11 @@ class CenterCropFraction(PreprocOp):
 
     def spec(self):
         return ("CenterCropFraction", round(self.frac, 6))
+
+    def lowering_spec(self, m: TensorMeta) -> P.LoweringSpec:
+        h, w = m.spatial
+        s = self._size(h, w)
+        return P.LoweringSpec("crop", crop=((h - s) // 2, (w - s) // 2, s, s))
 
 
 @dataclasses.dataclass
@@ -171,6 +177,44 @@ def fuse_elementwise(chain: list[PreprocOp]) -> list[PreprocOp]:
             out.append(op)
     flush()
     return out
+
+
+def device_fusion_groups(
+    ops: Sequence[PreprocOp], in_meta: TensorMeta
+) -> list[list[PreprocOp]]:
+    """Partition a device-op suffix into maximal device-fusible groups.
+
+    The device compiler (core/device_compiler.py) lowers one group into one
+    fused program stage — a single device dispatch.  A group is a maximal
+    run of ops whose :meth:`~repro.preprocessing.ops.PreprocOp.lowering_spec`
+    is non-None, containing at most one resize (a second resample needs its
+    own interpolation pass and starts a new group).  Opaque ops are
+    singleton groups: they execute via the per-op ``apply_device`` path.
+
+    The group count is what the placement cost model charges per-dispatch
+    overhead on: a fused group is ONE dispatch, not a sum of op dispatches.
+    """
+    groups: list[list[PreprocOp]] = []
+    run: list[PreprocOp] = []
+    run_has_resize = False
+    m = in_meta
+    for op in ops:
+        spec = op.lowering_spec(m)
+        if spec is None:
+            if run:
+                groups.append(run)
+                run, run_has_resize = [], False
+            groups.append([op])
+        else:
+            if spec.kind == "resize" and run_has_resize:
+                groups.append(run)
+                run, run_has_resize = [], False
+            run.append(op)
+            run_has_resize = run_has_resize or spec.kind == "resize"
+        m = op.out_meta(m)
+    if run:
+        groups.append(run)
+    return groups
 
 
 def _violates_pruning(plan: list[PreprocOp], in_meta: TensorMeta) -> bool:

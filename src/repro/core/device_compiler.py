@@ -1,0 +1,472 @@
+"""Device preprocessing compiler: Placement suffix -> ONE compiled program.
+
+The placement optimizer (core/placement.py) splits a preprocessing chain at
+k: ops[:k] run on host workers, ops[k:] on the accelerator.  Before this
+module, the device half executed as a fold of per-op ``apply_device`` calls
+vmapped under one jit — correct, but structured as an interpretive chain:
+every op materializes an intermediate, the resample is a gather, and the
+elementwise tail runs as separate passes.  This compiler *lowers* the
+device suffix instead (paper §6.2's fusion, pushed device-side):
+
+* the suffix is partitioned into fusion groups (core/dag.py
+  ``device_fusion_groups``) via each op's ``lowering_spec()`` protocol;
+* a single-group suffix matching ``[crop?] resize? [crop?] affine* layout?``
+  lowers to ONE fused resample+affine stage — on TPU the
+  ``kernels/fused_preproc`` Pallas kernel (matmul bilinear against
+  precomputed interpolation matrices, folded ToFloat/Normalize riding in
+  the same VMEM pass), on CPU/interpret a gather lowering that matches the
+  host chain's arithmetic bit-for-bit;
+* crops fold into the interpolation matrices (a crop after resize is a row
+  slice of R_y and a column slice of R_x — zero cost), and the
+  ChannelsFirst layout change is absorbed structurally because the fused
+  stage computes in planar CHW throughout;
+* non-fusible suffixes fall back to the per-op reference chain, still
+  traced into the same jitted program;
+* the DNN apply-fn is fused into the same XLA program, so preproc + DNN is
+  exactly one device dispatch per batch (donated input on accelerators).
+
+:func:`compile_coeff_program` extends the lowering upstream of pixels: the
+host stops after the entropy stage (``jpeg.decode_to_coefficients``) and
+the program runs dequantize+IDCT on the ``kernels/idct`` MXU kernel, JFIF
+color conversion, then the fused preprocessing stage and the DNN — the
+paper's §6.4 split-decode placement, compiled instead of interpreted.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Any, Callable, MutableMapping, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dag as dag_mod
+from repro.kernels.fused_preproc.ops import bilinear_matrix, fused_resize_affine
+from repro.kernels.idct.ops import dequant_idct
+from repro.preprocessing import ops as P
+from repro.preprocessing.ops import PreprocOp, TensorMeta
+
+
+def resolve_impl(impl: str = "auto") -> str:
+    """Pick the fused-stage implementation: 'pallas' (TPU, or forced via the
+    REPRO_FUSED_IMPL env var — the CI interpret leg) or 'jnp'."""
+    if impl != "auto":
+        return impl
+    env = os.environ.get("REPRO_FUSED_IMPL", "").strip().lower()
+    if env in ("pallas", "jnp"):
+        return env
+    return "pallas" if jax.default_backend() == "tpu" else "jnp"
+
+
+def default_interpret() -> bool:
+    """Pallas interpret mode everywhere but real TPU."""
+    return jax.default_backend() != "tpu"
+
+
+# ------------------------------------------------------------------- lowering
+@dataclasses.dataclass(frozen=True)
+class Lowering:
+    """Fused-stage plan for one device suffix: static geometry + folded affine."""
+
+    in_meta: TensorMeta
+    out_meta: TensorMeta
+    pre_crop: tuple[int, int, int, int] | None  # (top, left, h, w) before resize
+    resize: tuple[int, int] | None  # (oh, ow) resample target
+    post_crop: tuple[int, int, int, int] | None  # (top, left, h, w) after resize
+    round_uint8: bool  # resample re-quantizes to the integer pixel grid
+    scale: tuple[float, ...]  # per-channel folded multiplier
+    bias: tuple[float, ...]  # per-channel folded offset
+    stages: tuple[str, ...]  # human-readable lowering description
+
+
+def _compose_crop(first, second):
+    """second applied after first: offsets accumulate, extent is second's."""
+    if first is None:
+        return second
+    ft, fl, _, _ = first
+    st, sl, sh, sw = second
+    return (ft + st, fl + sl, sh, sw)
+
+
+def lower_device_ops(device_ops: Sequence[PreprocOp], in_meta: TensorMeta) -> Lowering | None:
+    """Pattern-match a device suffix into one fused stage, or None.
+
+    Accepts any single fusion group (``dag.device_fusion_groups``): at most
+    one resize, crops on either side of it (composed when repeated), any
+    number of affine/layout ops anywhere — bilinear resampling is affine-
+    invariant (weights sum to 1), so folded scale/bias commute past it.
+    """
+    if not device_ops:
+        return None
+    groups = dag_mod.device_fusion_groups(device_ops, in_meta)
+    if len(groups) != 1:
+        return None  # opaque op or second resample: reference chain fallback
+    m = in_meta
+    pre_crop = resize = post_crop = None
+    round_uint8 = False
+    affine_ops: list[PreprocOp] = []
+    stages: list[str] = []
+    for op in device_ops:
+        spec = op.lowering_spec(m)
+        assert spec is not None  # single group => every op lowered
+        if spec.kind == "resize":
+            resize = spec.out_hw
+            round_uint8 = m.dtype == "uint8"
+            stages.append(f"resize{m.spatial}->{spec.out_hw}" + ("+requant" if round_uint8 else ""))
+        elif spec.kind == "crop":
+            if resize is None:
+                pre_crop = _compose_crop(pre_crop, spec.crop)
+                stages.append(f"crop{spec.crop}")
+            else:
+                post_crop = _compose_crop(post_crop, spec.crop)
+                stages.append(f"crop{spec.crop}<-folded-into-resize")
+        elif spec.kind == "affine":
+            affine_ops.append(op)
+            stages.append(op.name)
+        elif spec.kind == "layout":
+            stages.append("chw")
+        m = op.out_meta(m)
+    scale, bias, _ = P.fold_affine(affine_ops, in_meta.channels)
+    return Lowering(
+        in_meta=in_meta,
+        out_meta=m,
+        pre_crop=pre_crop,
+        resize=resize,
+        post_crop=post_crop,
+        round_uint8=round_uint8,
+        scale=tuple(float(s) for s in scale),
+        bias=tuple(float(b) for b in bias),
+        stages=tuple(stages),
+    )
+
+
+# ------------------------------------------------------------ stage builders
+def _resize_affine_jnp(x, out_h, out_w, row_win, col_win, scale, bias, round_uint8):
+    """Gather-based fused resample+affine on planar (N, C, H, W) input.
+
+    Per-element arithmetic mirrors ``preprocessing.ops._bilinear_resize``
+    exactly (same expression tree), so the fused program is bit-compatible
+    with the host/reference chain even at uint8 re-quantization boundaries.
+    Only the output window ``(row_win, col_win)`` is computed — a crop after
+    resize costs nothing.
+    """
+    h, w = x.shape[2], x.shape[3]
+    r0, rows = row_win
+    c0, cols = col_win
+    y0, y1, wy = (v[r0 : r0 + rows] for v in P.bilinear_coords(h, out_h, jnp))
+    x0, x1, wx = (v[c0 : c0 + cols] for v in P.bilinear_coords(w, out_w, jnp))
+    wy = wy[:, None]
+    wx = wx[None, :]
+    a = x[:, :, y0][:, :, :, x0]
+    b = x[:, :, y0][:, :, :, x1]
+    c = x[:, :, y1][:, :, :, x0]
+    d = x[:, :, y1][:, :, :, x1]
+    top = a + (b - a) * wx
+    bot = c + (d - c) * wx
+    out = top + (bot - top) * wy
+    if round_uint8:
+        out = jnp.clip(jnp.round(out), 0.0, 255.0)
+    return out * scale[None, :, None, None] + bias[None, :, None, None]
+
+
+def build_fused_stage(
+    low: Lowering,
+    impl: str,
+    interpret: bool,
+    input_planar: bool = False,
+) -> Callable[[Any], jnp.ndarray]:
+    """The lowered preprocessing stage: (N, *in_meta.shape) -> out_meta batch.
+
+    All geometry is static (shapes come from the calibration meta), so the
+    whole stage traces into whatever program calls it.
+    """
+    channels = low.in_meta.channels
+    scale = jnp.asarray(np.asarray(low.scale, np.float32))
+    bias = jnp.asarray(np.asarray(low.bias, np.float32))
+
+    def stage(batch):
+        x = jnp.asarray(batch).astype(jnp.float32)
+        if not input_planar and low.in_meta.layout == "HWC":
+            x = jnp.transpose(x, (0, 3, 1, 2))  # planar CHW compute layout
+        n = x.shape[0]
+        if low.pre_crop is not None:
+            t, l, ch, cw = low.pre_crop
+            x = x[:, :, t : t + ch, l : l + cw]
+        if low.resize is not None:
+            oh, ow = low.resize
+            h, w = x.shape[2], x.shape[3]
+            t, l, rows, cols = low.post_crop if low.post_crop is not None else (0, 0, oh, ow)
+            if impl == "pallas":
+                ry = bilinear_matrix(h, oh)[t : t + rows]
+                rxt = np.ascontiguousarray(bilinear_matrix(w, ow)[l : l + cols].T)
+                y = fused_resize_affine(
+                    x.reshape(n * channels, h, w),
+                    ry,
+                    rxt,
+                    jnp.tile(scale, n),
+                    jnp.tile(bias, n),
+                    round_uint8=low.round_uint8,
+                    interpret=interpret,
+                )
+                y = y.reshape(n, channels, rows, cols)
+            else:
+                y = _resize_affine_jnp(
+                    x, oh, ow, (t, rows), (l, cols), scale, bias, low.round_uint8
+                )
+        else:
+            y = x * scale[None, :, None, None] + bias[None, :, None, None]
+        if low.out_meta.layout == "HWC":
+            y = jnp.transpose(y, (0, 2, 3, 1))
+        if low.out_meta.dtype == "uint8":
+            y = jnp.clip(jnp.round(y), 0, 255).astype(jnp.uint8)
+        elif low.out_meta.dtype != "float32":
+            y = y.astype(low.out_meta.dtype)
+        return y
+
+    return stage
+
+
+def _build_chain_stage(device_ops: Sequence[PreprocOp]) -> Callable[[Any], jnp.ndarray]:
+    """Reference fallback: per-op apply_device fold, vmapped over the batch
+    (still traced into the surrounding jitted program — one dispatch)."""
+    ops = list(device_ops)
+
+    def stage(batch):
+        return jax.vmap(lambda im: P.apply_chain_device(ops, im))(batch)
+
+    return stage
+
+
+# ------------------------------------------------------------------ programs
+@dataclasses.dataclass
+class DevicePreprocProgram:
+    """One compiled, donated, jitted device program: preproc suffix + DNN.
+
+    Calling the program dispatches the whole batch once; ``dispatch_count``
+    tracks Python-side dispatches so tests (and the engine) can assert the
+    one-dispatch-per-batch contract.
+    """
+
+    fn: Callable[[Any], Any]  # jitted (batch,) -> model outputs
+    backend: str  # "fused" | "reference"
+    impl: str  # "pallas" | "jnp" | "chain" | "model-only"
+    fused: bool  # True when the lowered resample+affine stage engaged
+    stages: tuple[str, ...]
+    key: tuple
+    in_meta: TensorMeta
+    out_meta: TensorMeta  # preprocessing output (the DNN's input)
+    dispatch_count: int = 0
+
+    @property
+    def dispatches_per_batch(self) -> int:
+        return 1  # the whole suffix + DNN is one XLA program
+
+    def __call__(self, batch):
+        self.dispatch_count += 1
+        return self.fn(batch)
+
+    def lower(self, batch):
+        """Lower (without executing) — for HLO inspection tooling."""
+        return self.fn.lower(batch)
+
+
+def _jit(raw: Callable, donate: bool) -> Callable:
+    # donation lets XLA reuse the staged batch's device allocation; the CPU
+    # backend can't honor it and warns, so only donate on accelerators
+    if donate and jax.default_backend() != "cpu":
+        return jax.jit(raw, donate_argnums=(0,))
+    return jax.jit(raw)
+
+
+def program_cache_key(
+    device_ops: Sequence[PreprocOp],
+    in_meta: TensorMeta,
+    batch_size: int,
+    backend: str,
+    impl: str,
+    model_key: str = "",
+    interpret: bool = True,
+    donate: bool = True,
+) -> tuple:
+    """Compile-cache identity: op specs + input meta + batch + backend +
+    the compile-mode flags that change the emitted program."""
+    return (
+        tuple(op.spec() for op in device_ops),
+        in_meta.shape,
+        in_meta.dtype,
+        in_meta.layout,
+        batch_size,
+        backend,
+        impl,
+        model_key,
+        interpret,
+        donate,
+    )
+
+
+def compile_device_program(
+    device_ops: Sequence[PreprocOp],
+    in_meta: TensorMeta,
+    model_fn: Callable,
+    batch_size: int,
+    backend: str = "fused",
+    impl: str = "auto",
+    interpret: bool | None = None,
+    donate: bool = True,
+    model_key: str = "",
+    cache: MutableMapping[tuple, "DevicePreprocProgram"] | None = None,
+) -> DevicePreprocProgram:
+    """Lower ``device_ops`` + ``model_fn`` into one jitted device program.
+
+    ``backend='fused'`` engages the lowering (Pallas or host-matched jnp per
+    ``impl``); ``'reference'`` keeps the per-op apply_device chain.  Either
+    way the result is ONE program / one dispatch per batch; the backends
+    differ in how the preprocessing *inside* it is structured.  ``cache``
+    (keyed by :func:`program_cache_key`) makes recompiles after placement
+    moves free when the split returns to a previously-seen point.
+    """
+    if backend not in ("fused", "reference"):
+        raise ValueError(f"device_backend must be 'fused' or 'reference', got {backend!r}")
+    impl = resolve_impl(impl) if backend == "fused" else "chain"
+    if interpret is None:
+        interpret = default_interpret()
+    key = program_cache_key(
+        device_ops, in_meta, batch_size, backend, impl, model_key, interpret, donate
+    )
+    if cache is not None and key in cache:
+        return cache[key]
+
+    low = lower_device_ops(device_ops, in_meta) if backend == "fused" else None
+    if low is not None:
+        stage = build_fused_stage(low, impl, interpret)
+        fused, stages, out_meta = True, low.stages, low.out_meta
+    elif device_ops:
+        stage = _build_chain_stage(device_ops)
+        impl, fused = "chain", False
+        stages = tuple(op.name for op in device_ops)
+        out_meta = P.chain_out_meta(list(device_ops), in_meta)
+    else:
+        stage, impl, fused, stages, out_meta = None, "model-only", False, (), in_meta
+
+    def raw(batch):
+        x = stage(batch) if stage is not None else jnp.asarray(batch)
+        return model_fn(x)
+
+    program = DevicePreprocProgram(
+        fn=_jit(raw, donate),
+        backend=backend,
+        impl=impl,
+        fused=fused,
+        stages=stages,
+        key=key,
+        in_meta=in_meta,
+        out_meta=out_meta,
+    )
+    if cache is not None:
+        cache[key] = program
+    return program
+
+
+# ------------------------------------------------- split-decode (DCT) program
+_YCBCR_TO_RGB = np.array(
+    # rows: R, G, B; cols: Y, Cb-128, Cr-128 (JFIF, matches dct.ycbcr_to_rgb)
+    [[1.0, 0.0, 1.402], [1.0, -0.344136, -0.714136], [1.0, 1.772, 0.0]],
+    dtype=np.float32,
+)
+
+
+def compile_coeff_program(
+    header: Any,  # jpeg.JpegHeader from a calibration sample
+    device_ops: Sequence[PreprocOp],
+    model_fn: Callable,
+    batch_size: int,
+    impl: str = "auto",
+    interpret: bool | None = None,
+    donate: bool = True,
+    model_key: str = "",
+    cache: MutableMapping[tuple, "DevicePreprocProgram"] | None = None,
+) -> DevicePreprocProgram:
+    """Split-decode program: quantized DCT coefficients in, predictions out.
+
+    The host stops after the entropy stage (``jpeg.decode_to_coefficients``)
+    and stages ``(C, n_br, n_bc, 64)`` int16 zigzag blocks; this program
+    runs the dense remainder on the accelerator in ONE dispatch:
+    unzigzag -> fused dequantize+IDCT (``kernels/idct`` MXU kernel, one per
+    quant table) -> unblockify -> JFIF color conversion -> the fused
+    resize/normalize stage -> DNN.  4:2:0-subsampled streams are rejected
+    (chroma planes are ragged; the pixel path handles them).
+    """
+    from repro.preprocessing import dct as dct_np
+    from repro.preprocessing import jpeg as jpeg_mod
+
+    if header.subsample:
+        raise ValueError("split-decode program requires 4:4:4 (no chroma subsampling)")
+    if header.channels != 3:
+        raise ValueError("split-decode program supports 3-channel streams")
+    if interpret is None:
+        interpret = default_interpret()
+    impl = resolve_impl(impl)
+    n_br, n_bc = header.n_br, header.n_bc
+    height, width = header.height, header.width
+    qtables = jpeg_mod._qtables(header.quality, header.channels)
+    pixel_meta = TensorMeta((height, width, 3), "uint8", "HWC")
+    key = (
+        ("CoeffDecode", header.quality, n_br, n_bc, height, width),
+        program_cache_key(
+            device_ops, pixel_meta, batch_size, "fused", impl, model_key, interpret, donate
+        ),
+    )
+    if cache is not None and key in cache:
+        return cache[key]
+
+    unzigzag = np.asarray(dct_np.UNZIGZAG)
+    rgb_mat = jnp.asarray(_YCBCR_TO_RGB)
+    low = lower_device_ops(device_ops, pixel_meta)
+    if low is not None:
+        preproc = build_fused_stage(low, impl, interpret, input_planar=True)
+        fused, out_meta = True, low.out_meta
+        pre_stages = low.stages
+    else:
+        chain = _build_chain_stage(device_ops)
+        # the chain fallback must see the same uint8 pixel grid the pixel
+        # path stages (ops.Resize only re-quantizes uint8 inputs): cast the
+        # already clip/rounded RGB down before applying the per-op chain
+        preproc = lambda x: chain(  # noqa: E731
+            jnp.transpose(x, (0, 2, 3, 1)).astype(jnp.uint8)
+        )
+        fused = False
+        out_meta = P.chain_out_meta(list(device_ops), pixel_meta)
+        pre_stages = tuple(op.name for op in device_ops)
+
+    def raw(batch):  # (N, 3, n_br, n_bc, 64) int16 zigzag coefficients
+        n = batch.shape[0]
+        zz = jnp.asarray(batch)
+        nat = zz[..., unzigzag].reshape(n, 3, n_br, n_bc, 8, 8)
+        # one fused dequant+IDCT kernel call per quant table (luma / chroma)
+        luma = dequant_idct(nat[:, 0].reshape(-1, 8, 8), qtables[0], interpret=interpret)
+        chroma = dequant_idct(nat[:, 1:].reshape(-1, 8, 8), qtables[1], interpret=interpret)
+        blocks = jnp.concatenate(
+            [luma.reshape(n, 1, n_br, n_bc, 8, 8), chroma.reshape(n, 2, n_br, n_bc, 8, 8)],
+            axis=1,
+        )
+        planes = blocks.transpose(0, 1, 2, 4, 3, 5).reshape(n, 3, n_br * 8, n_bc * 8)
+        ycc = planes[:, :, :height, :width] + 128.0
+        rgb = jnp.einsum("rc,nchw->nrhw", rgb_mat, ycc - jnp.asarray([0.0, 128.0, 128.0])[:, None, None])
+        rgb = jnp.clip(jnp.round(rgb), 0.0, 255.0)  # the decoded uint8 pixel grid
+        return model_fn(preproc(rgb))
+
+    program = DevicePreprocProgram(
+        fn=_jit(raw, donate),
+        backend="fused",
+        impl=impl,
+        fused=fused,
+        stages=("unzigzag", "dequant_idct[mxu]", "unblockify", "ycbcr->rgb") + pre_stages,
+        key=key,
+        in_meta=TensorMeta((3, n_br, n_bc, 64), "int16", "CHW"),
+        out_meta=out_meta,
+    )
+    if cache is not None:
+        cache[key] = program
+    return program

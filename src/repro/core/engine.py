@@ -80,8 +80,11 @@ class PipelinedEngine:
       host_fn: item -> np.ndarray of fixed shape/dtype (host stage: decode +
         host-placed preprocessing).  With ``worker_state_factory`` set it is
         called as ``host_fn(item, state)`` with that worker's private state.
-      device_fn: (batch np/jax array) -> device outputs.  Wrapped in jit
-        with input donation by the constructor unless ``jit=False``.
+      device_fn: either a compiled
+        :class:`repro.core.device_compiler.DevicePreprocProgram` (used as-is
+        — already one jitted, donated program covering device preprocessing
+        + DNN, one dispatch per batch), or a bare (batch) -> outputs
+        callable which is wrapped in jit unless ``jit=False``.
       out_shape/out_dtype: per-item output of host_fn.
       batch_size: device batch.
       num_workers: producer threads (paper heuristic: ~#cores).  Mutable —
@@ -111,6 +114,7 @@ class PipelinedEngine:
     ):
         # Deferred: repro.core must stay importable without repro.runtime
         # (runtime's facade imports this module at package-init time).
+        from repro.core.device_compiler import DevicePreprocProgram
         from repro.runtime import memory as memory_mod
 
         self.host_fn = host_fn
@@ -130,7 +134,12 @@ class PipelinedEngine:
         self._item_nbytes = int(np.prod(self.out_shape, dtype=np.int64)) * np.dtype(
             out_dtype
         ).itemsize
-        if jit:
+        self.device_program = None
+        if isinstance(device_fn, DevicePreprocProgram):
+            # compiled program: jit/donation already applied by the compiler
+            self.device_program = device_fn
+            self.device_fn = device_fn
+        elif jit:
             self.device_fn = jax.jit(device_fn)
         else:
             self.device_fn = device_fn

@@ -24,6 +24,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Sequence
 
+from repro.core.cost_model import device_stage_seconds
 from repro.preprocessing.ops import PreprocOp, TensorMeta, chain_out_meta
 
 # Throughput ratio of the accelerator over one host worker for the same
@@ -79,6 +80,28 @@ def _per_op_times(
     return host_times, device_times
 
 
+def _suffix_groups_at(
+    chain: Sequence[PreprocOp], in_meta: TensorMeta, split: int, fused: bool
+) -> int:
+    """Device dispatch-group count of the suffix ops[split:].
+
+    With the device compiler (``fused=True``) a suffix lowers into fusion
+    groups (core/dag.py) — one dispatch each; the legacy interpretive path
+    dispatches per op.  Deferred import: dag is a sibling that imports the
+    same op library."""
+    suffix = list(chain[split:])
+    if not suffix:
+        return 0
+    if not fused:
+        return len(suffix)
+    from repro.core import dag as dag_mod
+
+    m = in_meta
+    for op in chain[:split]:
+        m = op.out_meta(m)
+    return len(dag_mod.device_fusion_groups(suffix, m))
+
+
 def _split_candidate(
     chain: Sequence[PreprocOp],
     split: int,
@@ -86,9 +109,18 @@ def _split_candidate(
     dnn_device_time: float,
     host_times: Sequence[float],
     device_times: Sequence[float],
+    device_groups: int = 0,
+    device_dispatch_overhead_s: float = 0.0,
 ) -> Placement:
     t_host = host_decode_time + sum(host_times[:split])
-    t_dev = sum(device_times[split:]) + dnn_device_time
+    # per-op times are already seconds, so the rate argument is 1.0 and the
+    # fusion model only adds the per-dispatch-group overhead term
+    t_dev = (
+        device_stage_seconds(
+            sum(device_times[split:]), device_groups, 1.0, device_dispatch_overhead_s
+        )
+        + dnn_device_time
+    )
     tput_host = 1.0 / t_host if t_host > 0 else float("inf")
     tput_dev = 1.0 / t_dev if t_dev > 0 else float("inf")
     return Placement(
@@ -109,6 +141,8 @@ def placement_for_split(
     dnn_device_time: float,
     host_ops_per_sec: float = 2.0e9,
     device_ops_per_sec: float | None = None,
+    device_dispatch_overhead_s: float = 0.0,
+    device_fused: bool = True,
 ) -> Placement:
     """The Placement (with estimates) for one *forced* split point.
 
@@ -119,7 +153,15 @@ def placement_for_split(
     if device_ops_per_sec is None:
         device_ops_per_sec = host_ops_per_sec * DEFAULT_DEVICE_SPEEDUP
     host_times, device_times = _per_op_times(chain, in_meta, host_ops_per_sec, device_ops_per_sec)
-    return _split_candidate(chain, split, host_decode_time, dnn_device_time, host_times, device_times)
+    groups = (
+        _suffix_groups_at(chain, in_meta, split, device_fused)
+        if device_dispatch_overhead_s > 0.0
+        else 0
+    )
+    return _split_candidate(
+        chain, split, host_decode_time, dnn_device_time, host_times, device_times,
+        device_groups=groups, device_dispatch_overhead_s=device_dispatch_overhead_s,
+    )
 
 
 def choose_split(
@@ -131,6 +173,8 @@ def choose_split(
     device_ops_per_sec: float | None = None,
     measured_host_times: Sequence[float] | None = None,
     measured_device_times: Sequence[float] | None = None,
+    device_dispatch_overhead_s: float = 0.0,
+    device_fused: bool = True,
 ) -> Placement:
     """Pick the throughput-maximizing split point.
 
@@ -138,6 +182,12 @@ def choose_split(
     ``dnn_device_time`` — seconds/item of DNN execution on the accelerator.
     Per-op times may be *measured* (preferred; what the engine calibrates)
     or estimated from weighted op counts.
+
+    ``device_dispatch_overhead_s`` charges each device dispatch *group* a
+    fixed launch cost.  Under the device compiler (``device_fused=True``) a
+    fusible suffix is one group — one dispatch — so pushing ops to the
+    device gets cheaper than the legacy per-op-dispatch model and the
+    optimal split can move device-ward.
     """
     if device_ops_per_sec is None:
         device_ops_per_sec = host_ops_per_sec * DEFAULT_DEVICE_SPEEDUP
@@ -145,10 +195,17 @@ def choose_split(
         chain, in_meta, host_ops_per_sec, device_ops_per_sec,
         measured_host_times, measured_device_times,
     )
+    group_counts = (
+        [_suffix_groups_at(chain, in_meta, k, device_fused) for k in range(len(chain) + 1)]
+        if device_dispatch_overhead_s > 0.0
+        else [0] * (len(chain) + 1)
+    )
     best: Placement | None = None
     for split in range(len(chain) + 1):
         cand = _split_candidate(
-            chain, split, host_decode_time, dnn_device_time, host_times, device_times
+            chain, split, host_decode_time, dnn_device_time, host_times, device_times,
+            device_groups=group_counts[split],
+            device_dispatch_overhead_s=device_dispatch_overhead_s,
         )
         if best is None or cand.est_throughput > best.est_throughput:
             best = cand

@@ -114,6 +114,8 @@ class Planner:
         device_ops_per_sec: float | None = None,
         use_roi_decode: bool = False,
         estimator: str = "smol",
+        device_dispatch_overhead_s: float = 0.0,
+        device_fused: bool = True,
     ):
         self.models = list(models)
         self.formats = list(formats)
@@ -123,6 +125,11 @@ class Planner:
         self.device_ops_per_sec = device_ops_per_sec
         self.use_roi_decode = use_roi_decode
         self.estimator = estimator
+        # fused-dispatch cost model (§6.2 x §6.3): per-dispatch-group launch
+        # overhead; device_fused says whether the device compiler's fusion
+        # groups apply (one group = one dispatch) or the per-op legacy model
+        self.device_dispatch_overhead_s = device_dispatch_overhead_s
+        self.device_fused = device_fused
         self._generated: list[QueryPlan] | None = None  # inputs are immutable
 
     def _place_and_estimate(
@@ -144,6 +151,8 @@ class Planner:
             dnn_device_time=t_dnn,
             host_ops_per_sec=host_ops_per_sec or self.host_ops_per_sec,
             device_ops_per_sec=device_ops_per_sec or self.device_ops_per_sec,
+            device_dispatch_overhead_s=self.device_dispatch_overhead_s,
+            device_fused=self.device_fused,
         )
         stages = StageThroughputs(
             preproc=placement.est_host_throughput,

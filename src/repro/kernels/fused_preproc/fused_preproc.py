@@ -36,7 +36,18 @@ def _kernel(x_ref, ry_ref, rxt_ref, scale_ref, bias_ref, o_ref):
     o_ref[0] = z * scale_ref[0, 0] + bias_ref[0, 0]
 
 
-@functools.partial(jax.jit, static_argnames=("tile_oh", "interpret"))
+def _kernel_round(x_ref, ry_ref, rxt_ref, scale_ref, bias_ref, o_ref):
+    # uint8-chain variant: the reference chain resizes *before* ToFloat, so
+    # the resample result re-quantizes to the integer pixel grid before the
+    # folded affine applies (ops.Resize rounds uint8 inputs back to uint8).
+    xc = x_ref[0]
+    y = jnp.dot(ry_ref[...], xc, preferred_element_type=jnp.float32)
+    z = jnp.dot(y, rxt_ref[...], preferred_element_type=jnp.float32)
+    z = jnp.clip(jnp.round(z), 0.0, 255.0)
+    o_ref[0] = z * scale_ref[0, 0] + bias_ref[0, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("tile_oh", "interpret", "round_uint8"))
 def fused_resize_normalize_planar(
     x: jnp.ndarray,  # (C, H, W) float32
     ry: jnp.ndarray,  # (OH_padded, H) float32
@@ -45,6 +56,7 @@ def fused_resize_normalize_planar(
     bias: jnp.ndarray,  # (1, C) float32
     tile_oh: int = DEFAULT_TILE_OH,
     interpret: bool = False,
+    round_uint8: bool = False,
 ) -> jnp.ndarray:
     c, h, w = x.shape
     oh_pad = ry.shape[0]
@@ -52,7 +64,7 @@ def fused_resize_normalize_planar(
     assert oh_pad % tile_oh == 0, (oh_pad, tile_oh)
     grid = (c, oh_pad // tile_oh)
     return pl.pallas_call(
-        _kernel,
+        _kernel_round if round_uint8 else _kernel,
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, h, w), lambda ci, oi: (ci, 0, 0)),

@@ -368,6 +368,14 @@ class HloSummary:
         }
 
 
+def count_entry_modules(text: str) -> int:
+    """Number of ENTRY computations — i.e. compiled XLA programs — in an
+    HLO dump.  The device preprocessing compiler's contract is that the
+    whole preproc+DNN batch program is ONE module (one device dispatch);
+    tests assert it through this helper."""
+    return len(re.findall(r"^\s*ENTRY\s", text, re.MULTILINE))
+
+
 def analyze(text: str) -> HloSummary:
     comps = _split_computations(text)
     costs = {name: _analyze_computation(lines) for name, lines in comps.items()}

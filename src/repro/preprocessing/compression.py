@@ -59,6 +59,64 @@ def compress(raw: bytes, level: int = 3) -> bytes:
     return bytes((STORED,)) + raw
 
 
+def decompressed_size(blob) -> int | None:
+    """Decoded payload size in bytes, or None when not cheaply knowable.
+
+    STORED frames know it exactly; zstd frames carry a content-size field
+    when the compressor wrote one (``zstandard.frame_content_size``).
+    Callers use this to pre-size arena scratch for :func:`decompress_into`.
+    """
+    if len(blob) == 0:
+        raise ValueError("empty compressed payload")
+    method = blob[0]
+    if method == STORED:
+        return len(blob) - 1
+    if method == ZSTD and _zstd is not None:
+        probe = getattr(_zstd, "frame_content_size", None)
+        if probe is not None:
+            size = probe(bytes(memoryview(blob)[1:]))
+            return int(size) if size is not None and size >= 0 else None
+    return None
+
+
+def decompress_into(blob, out) -> int:
+    """Decode ``blob`` into the caller-provided buffer ``out`` (a writable
+    uint8 ndarray/memoryview of at least :func:`decompressed_size` bytes).
+    Returns the number of bytes written.
+
+    This is the allocation-free path for arena-backed codec scratch
+    (preprocessing/scratch.py): STORED frames copy straight into the arena
+    slice; zstd frames decode via ``decompress_into`` when the installed
+    ``zstandard`` exposes it, else decode-then-copy (one transient bytes
+    object — still no per-band numpy allocation downstream).
+    """
+    import numpy as _np
+
+    if len(blob) == 0:
+        raise ValueError("empty compressed payload")
+    method = blob[0]
+    payload = memoryview(blob)[1:]
+    dest = _np.frombuffer(memoryview(out), dtype=_np.uint8) if not isinstance(out, _np.ndarray) else out
+    if method == STORED:
+        n = len(payload)
+        dest[:n] = _np.frombuffer(payload, dtype=_np.uint8)
+        return n
+    if method == ZSTD:
+        if _zstd is None:
+            raise RuntimeError(
+                "stream is zstd-compressed but the 'zstandard' package is not "
+                "installed; install the [compression] extra to decode it"
+            )
+        # decode-then-copy: zstandard's zero-copy decompress_into varies
+        # across versions, and the transient bytes object is the zstd
+        # library's own buffer either way — the win here is removing the
+        # per-band *numpy* allocations downstream
+        data = _dctx().decompress(bytes(payload))
+        dest[: len(data)] = _np.frombuffer(data, dtype=_np.uint8)
+        return len(data)
+    raise ValueError(f"unknown compression method tag {method:#x}")
+
+
 def decompress(blob: bytes) -> bytes:
     """Inverse of :func:`compress`; raises if the method is unavailable."""
     if len(blob) == 0:

@@ -33,7 +33,7 @@ import struct
 
 import numpy as np
 
-from repro.preprocessing import compression, dct
+from repro.preprocessing import compression, dct, scratch as scratch_mod
 
 MAGIC = b"SJPG"
 VERSION = 2  # v2: band payloads framed by preprocessing.compression method tags
@@ -126,8 +126,13 @@ def _encode_rows_sparse(zz_rows: np.ndarray) -> bytes:
     return b"".join(parts)
 
 
-def _decode_rows_sparse(buf: memoryview, off: int) -> tuple[np.ndarray, int]:
-    """Inverse of :func:`_encode_rows_sparse`; returns (n_blocks, 64) int16."""
+def _decode_rows_sparse(
+    buf, off: int, scratch: "scratch_mod.BandScratch | None" = None
+) -> tuple[np.ndarray, int]:
+    """Inverse of :func:`_encode_rows_sparse`; returns (n_blocks, 64) int16.
+
+    With ``scratch`` the coefficient buffer is an arena slice (released by
+    the caller's band_scratch scope) instead of a fresh allocation."""
     (n_blocks,) = struct.unpack_from("<I", buf, off)
     off += 4
     dc = np.frombuffer(buf, dtype="<i2", count=n_blocks, offset=off)
@@ -139,7 +144,10 @@ def _decode_rows_sparse(buf: memoryview, off: int) -> tuple[np.ndarray, int]:
     off += nnz
     vals = np.frombuffer(buf, dtype="<i2", count=nnz, offset=off)
     off += 2 * nnz
-    zz = np.zeros((n_blocks, 64), dtype=np.int16)
+    if scratch is not None:
+        zz = scratch.alloc((n_blocks, 64), np.int16)
+    else:
+        zz = np.zeros((n_blocks, 64), dtype=np.int16)
     zz[:, 0] = dc
     blk_idx = np.repeat(np.arange(n_blocks), counts)
     zz[blk_idx, pos.astype(np.int64)] = vals
@@ -219,18 +227,35 @@ def peek_header(data: bytes) -> JpegHeader:
     return JpegHeader(h, w, ch, q, bool(sub), band_rows, n_br, n_bc, tuple(band_offsets), off)
 
 
-def _decode_band_coeffs(data: bytes, hdr: JpegHeader, band: int) -> list[np.ndarray]:
-    """Entropy-decode one band -> per-plane zigzagged (rows, n_bc, 64) int16."""
+def _decode_band_coeffs(
+    data: bytes,
+    hdr: JpegHeader,
+    band: int,
+    scratch: "scratch_mod.BandScratch | None" = None,
+) -> list[np.ndarray]:
+    """Entropy-decode one band -> per-plane zigzagged (rows, n_bc, 64) int16.
+
+    With ``scratch`` both the decompressed payload and the coefficient
+    buffers come from the caller's arena scope (no per-band allocations)."""
     start = hdr.payload_start + hdr.band_offsets[band]
     end = hdr.payload_start + (
         hdr.band_offsets[band + 1] if band + 1 < hdr.n_bands else len(data) - hdr.payload_start
     )
-    raw = memoryview(compression.decompress(data[start:end]))
+    blob = memoryview(data)[start:end]
+    raw = None
+    if scratch is not None:
+        size = compression.decompressed_size(blob)
+        if size is not None:
+            buf = scratch.alloc_bytes(size)
+            n = compression.decompress_into(blob, buf)
+            raw = buf[:n]
+    if raw is None:
+        raw = memoryview(compression.decompress(bytes(blob)))
     grids = _plane_grids(hdr)
     ranges = _band_plane_rows(hdr, band)
     out, off = [], 0
     for (n_br_p, n_bc_p), (r0, r1) in zip(grids, ranges):
-        zz, off = _decode_rows_sparse(raw, off)
+        zz, off = _decode_rows_sparse(raw, off, scratch=scratch)
         out.append(zz.reshape(r1 - r0, n_bc_p, 64))
     return out
 
@@ -265,17 +290,22 @@ def decode_to_coefficients(
 
     per_plane: list[list[np.ndarray]] = [[] for _ in _plane_grids(hdr)]
     plane_ranges: list[list[int]] = [[1 << 30, 0] for _ in per_plane]
-    for band in range(lo_band, hi_band):
-        coeffs = _decode_band_coeffs(data, hdr, band)
-        ranges = _band_plane_rows(hdr, band)
-        for p, (c, (r0, r1)) in enumerate(zip(coeffs, ranges)):
-            per_plane[p].append(c)
-            plane_ranges[p][0] = min(plane_ranges[p][0], r0)
-            plane_ranges[p][1] = max(plane_ranges[p][1], r1)
-    planes_zz = [
-        np.concatenate(chunks, axis=0) if chunks else np.zeros((0, g[1], 64), np.int16)
-        for chunks, g in zip(per_plane, _plane_grids(hdr))
-    ]
+    # per-band payload + coefficient scratch lives in the thread-local
+    # FrameArena for the duration of the loop: steady-state decode makes
+    # zero per-band system allocations (only the concatenated result below
+    # is caller-owned memory)
+    with scratch_mod.band_scratch() as scratch:
+        for band in range(lo_band, hi_band):
+            coeffs = _decode_band_coeffs(data, hdr, band, scratch=scratch)
+            ranges = _band_plane_rows(hdr, band)
+            for p, (c, (r0, r1)) in enumerate(zip(coeffs, ranges)):
+                per_plane[p].append(c)
+                plane_ranges[p][0] = min(plane_ranges[p][0], r0)
+                plane_ranges[p][1] = max(plane_ranges[p][1], r1)
+        planes_zz = [
+            np.concatenate(chunks, axis=0) if chunks else np.zeros((0, g[1], 64), np.int16)
+            for chunks, g in zip(per_plane, _plane_grids(hdr))
+        ]
     qtables = _qtables(hdr.quality, hdr.channels)
     row_ranges = [tuple(r) for r in plane_ranges]
     return hdr, planes_zz, qtables, row_ranges

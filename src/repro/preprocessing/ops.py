@@ -14,12 +14,37 @@ consumes (C, H, W) float ("CHW").
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
+from typing import Any, Sequence
 
 import jax.numpy as jnp
 import numpy as np
 
 _DTYPE_WEIGHT = {"uint8": 1.0, "int16": 2.0, "float16": 2.0, "bfloat16": 2.0, "float32": 4.0}
+
+
+@dataclasses.dataclass(frozen=True)
+class LoweringSpec:
+    """How one op lowers into the device preprocessing compiler's fused
+    program (core/device_compiler.py).
+
+    ``kind``:
+      * ``"resize"`` — bilinear resample to ``out_hw`` (static, derived from
+        the incoming TensorMeta);
+      * ``"crop"`` — static slice ``crop = (top, left, height, width)``;
+      * ``"affine"`` — folds into the per-channel ``x * scale + bias`` FMA
+        (ToFloat/Normalize and their fusion products);
+      * ``"layout"`` — HWC -> CHW, absorbed structurally (the fused program
+        computes in planar CHW throughout).
+
+    Ops that return ``None`` from :meth:`PreprocOp.lowering_spec` are opaque
+    to the compiler: they break fusion groups and execute via the per-op
+    ``apply_device`` reference chain (still inside one jitted program).
+    """
+
+    kind: str
+    out_hw: tuple[int, int] | None = None  # resize target
+    crop: tuple[int, int, int, int] | None = None  # top, left, height, width
+    to_chw: bool = False  # affine product that also permutes layout
 
 
 @dataclasses.dataclass(frozen=True)
@@ -41,22 +66,34 @@ class TensorMeta:
         return int(np.prod(self.shape))
 
 
+def bilinear_coords(in_dim: int, out_dim: int, xp=np):
+    """Half-pixel-center bilinear sample coordinates for one axis:
+    ``(i0, i1, w1)`` — int32 neighbor indices and the float32 weight of
+    ``i1`` (so a sample is ``v[i0] * (1 - w1) + v[i1] * w1``).
+
+    This is THE source of the resampling arithmetic.  The host/device
+    resize below, the kernel interpolation matrices
+    (``kernels/fused_preproc/ops.bilinear_matrix``) and the device
+    compiler's gather lowering all build from it; keeping one copy is what
+    keeps the fused program bit-compatible with the reference chain.
+    """
+    s = (xp.arange(out_dim, dtype=xp.float32) + 0.5) * (in_dim / out_dim) - 0.5
+    s = xp.clip(s, 0.0, in_dim - 1.0)
+    i0 = xp.floor(s).astype(xp.int32)
+    i1 = xp.minimum(i0 + 1, in_dim - 1)
+    return i0, i1, s - i0
+
+
 def _bilinear_resize(x, out_h: int, out_w: int, xp):
     """Half-pixel-center bilinear resize; identical math for numpy and jnp.
 
     Operates on (H, W, C) float arrays.
     """
     h, w = x.shape[0], x.shape[1]
-    ys = (xp.arange(out_h, dtype=xp.float32) + 0.5) * (h / out_h) - 0.5
-    xs = (xp.arange(out_w, dtype=xp.float32) + 0.5) * (w / out_w) - 0.5
-    ys = xp.clip(ys, 0.0, h - 1.0)
-    xs = xp.clip(xs, 0.0, w - 1.0)
-    y0 = xp.floor(ys).astype(xp.int32)
-    x0 = xp.floor(xs).astype(xp.int32)
-    y1 = xp.minimum(y0 + 1, h - 1)
-    x1 = xp.minimum(x0 + 1, w - 1)
-    wy = (ys - y0)[:, None, None]
-    wx = (xs - x0)[None, :, None]
+    y0, y1, wy = bilinear_coords(h, out_h, xp)
+    x0, x1, wx = bilinear_coords(w, out_w, xp)
+    wy = wy[:, None, None]
+    wx = wx[None, :, None]
     a = x[y0][:, x0]
     b = x[y0][:, x1]
     c = x[y1][:, x0]
@@ -88,6 +125,15 @@ class PreprocOp:
     def spec(self) -> tuple[Any, ...]:
         """Hashable identity for plan caching."""
         return (type(self).__name__,)
+
+    def lowering_spec(self, m: TensorMeta) -> "LoweringSpec | None":
+        """Fusion-eligibility protocol for the device compiler.
+
+        Returns a :class:`LoweringSpec` describing how this op folds into a
+        single fused device program, or ``None`` when the op is opaque
+        (not fusible — the compiler falls back to ``apply_device``).
+        """
+        return None
 
     def __repr__(self) -> str:
         return f"{type(self).__name__}{self.spec()[1:]}"
@@ -132,6 +178,9 @@ class ResizeShortSide(PreprocOp):
     def spec(self):
         return ("ResizeShortSide", self.target)
 
+    def lowering_spec(self, m: TensorMeta) -> LoweringSpec:
+        return LoweringSpec("resize", out_hw=self._out_hw(*m.spatial))
+
 
 @dataclasses.dataclass(frozen=True, repr=False)
 class Resize(PreprocOp):
@@ -164,6 +213,9 @@ class Resize(PreprocOp):
     def spec(self):
         return ("Resize", self.height, self.width)
 
+    def lowering_spec(self, m: TensorMeta) -> LoweringSpec:
+        return LoweringSpec("resize", out_hw=(self.height, self.width))
+
 
 @dataclasses.dataclass(frozen=True, repr=False)
 class CenterCrop(PreprocOp):
@@ -191,6 +243,10 @@ class CenterCrop(PreprocOp):
     def spec(self):
         return ("CenterCrop", self.size)
 
+    def lowering_spec(self, m: TensorMeta) -> LoweringSpec:
+        t, l = self._offsets(*m.spatial)
+        return LoweringSpec("crop", crop=(t, l, self.size, self.size))
+
 
 @dataclasses.dataclass(frozen=True, repr=False)
 class ToFloat(PreprocOp):
@@ -214,6 +270,9 @@ class ToFloat(PreprocOp):
 
     def spec(self):
         return ("ToFloat", self.scale)
+
+    def lowering_spec(self, m: TensorMeta) -> LoweringSpec:
+        return LoweringSpec("affine")
 
 
 @dataclasses.dataclass(frozen=True, repr=False)
@@ -257,6 +316,9 @@ class Normalize(PreprocOp):
     def spec(self):
         return ("Normalize", self.mean, self.std)
 
+    def lowering_spec(self, m: TensorMeta) -> LoweringSpec:
+        return LoweringSpec("affine")
+
 
 @dataclasses.dataclass(frozen=True, repr=False)
 class ChannelsFirst(PreprocOp):
@@ -282,6 +344,9 @@ class ChannelsFirst(PreprocOp):
     def spec(self):
         return ("ChannelsFirst",)
 
+    def lowering_spec(self, m: TensorMeta) -> LoweringSpec:
+        return LoweringSpec("layout", to_chw=True)
+
 
 @dataclasses.dataclass(frozen=True, repr=False)
 class FusedElementwise(PreprocOp):
@@ -302,23 +367,7 @@ class FusedElementwise(PreprocOp):
     def _folded(self, channels: int) -> tuple[np.ndarray, np.ndarray, bool]:
         """Fold the op run into (scale, bias, transpose?) applied as
         x*scale + bias — a single FMA per element."""
-        scale = np.ones(channels, dtype=np.float32)
-        bias = np.zeros(channels, dtype=np.float32)
-        transpose = False
-        for op in self.ops:
-            if isinstance(op, ToFloat):
-                scale *= np.float32(op.scale)
-                bias *= np.float32(op.scale)
-            elif isinstance(op, Normalize):
-                std = np.asarray(op.std[:channels], np.float32)
-                mean = np.asarray(op.mean[:channels], np.float32)
-                scale /= std
-                bias = (bias - mean) / std
-            elif isinstance(op, ChannelsFirst):
-                transpose = True
-            else:
-                raise TypeError(f"not elementwise-fusable: {op}")
-        return scale, bias, transpose
+        return fold_affine(self.ops, channels)
 
     def apply_host(self, x):
         channels = x.shape[-1]
@@ -342,6 +391,39 @@ class FusedElementwise(PreprocOp):
 
     def spec(self):
         return ("FusedElementwise",) + tuple(op.spec() for op in self.ops)
+
+    def lowering_spec(self, m: TensorMeta) -> LoweringSpec:
+        return LoweringSpec(
+            "affine", to_chw=any(isinstance(op, ChannelsFirst) for op in self.ops)
+        )
+
+
+def fold_affine(ops: Sequence[PreprocOp], channels: int) -> tuple[np.ndarray, np.ndarray, bool]:
+    """Fold a run of elementwise ops into ``(scale, bias, transpose?)``
+    applied as ``x * scale + bias`` — one FMA per element.  Accepts
+    ToFloat/Normalize/ChannelsFirst and nested FusedElementwise products."""
+    scale = np.ones(channels, dtype=np.float32)
+    bias = np.zeros(channels, dtype=np.float32)
+    transpose = False
+    for op in ops:
+        if isinstance(op, FusedElementwise):
+            s, b, t = fold_affine(op.ops, channels)
+            scale *= s
+            bias = bias * s + b
+            transpose = transpose or t
+        elif isinstance(op, ToFloat):
+            scale *= np.float32(op.scale)
+            bias *= np.float32(op.scale)
+        elif isinstance(op, Normalize):
+            std = np.asarray(op.std[:channels], np.float32)
+            mean = np.asarray(op.mean[:channels], np.float32)
+            scale /= std
+            bias = (bias - mean) / std
+        elif isinstance(op, ChannelsFirst):
+            transpose = True
+        else:
+            raise TypeError(f"not elementwise-fusable: {op}")
+    return scale, bias, transpose
 
 
 def apply_chain_host(ops: list[PreprocOp], x: np.ndarray) -> np.ndarray:

@@ -16,7 +16,7 @@ import struct
 
 import numpy as np
 
-from repro.preprocessing import compression
+from repro.preprocessing import compression, scratch as scratch_mod
 
 MAGIC = b"SPNG"
 VERSION = 2  # v2: band payloads framed by preprocessing.compression method tags
@@ -72,19 +72,30 @@ def decode(data: bytes, max_rows: int | None = None) -> np.ndarray:
     h = hdr.height if max_rows is None else min(hdr.height, max_rows)
     n_bands_needed = (h + hdr.band_rows - 1) // hdr.band_rows
     chunks = []
-    for band in range(n_bands_needed):
-        start = hdr.payload_start + hdr.band_offsets[band]
-        end = (
-            hdr.payload_start + hdr.band_offsets[band + 1]
-            if band + 1 < len(hdr.band_offsets)
-            else len(data)
-        )
-        raw = compression.decompress(data[start:end])
-        rows = min(hdr.band_rows, hdr.height - band * hdr.band_rows)
-        chunks.append(
-            np.frombuffer(raw, dtype=np.uint8).reshape(rows, hdr.width, hdr.channels)
-        )
-    filtered = np.concatenate(chunks, axis=0)
+    # band payloads decompress into thread-local FrameArena scratch —
+    # steady-state decode allocates nothing per band (ROADMAP: arena codecs)
+    with scratch_mod.band_scratch() as scratch:
+        for band in range(n_bands_needed):
+            start = hdr.payload_start + hdr.band_offsets[band]
+            end = (
+                hdr.payload_start + hdr.band_offsets[band + 1]
+                if band + 1 < len(hdr.band_offsets)
+                else len(data)
+            )
+            blob = memoryview(data)[start:end]
+            raw = None
+            size = compression.decompressed_size(blob)
+            if size is not None:
+                buf = scratch.alloc_bytes(size)
+                n = compression.decompress_into(blob, buf)
+                raw = buf[:n]
+            if raw is None:
+                raw = compression.decompress(bytes(blob))
+            rows = min(hdr.band_rows, hdr.height - band * hdr.band_rows)
+            chunks.append(
+                np.frombuffer(raw, dtype=np.uint8).reshape(rows, hdr.width, hdr.channels)
+            )
+        filtered = np.concatenate(chunks, axis=0)
     img = np.cumsum(filtered.astype(np.int64), axis=0).astype(np.uint8)  # undo Up filter
     img = img[:h]
     return img[..., 0] if hdr.channels == 1 else img

@@ -26,7 +26,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import planner as planner_mod
+from repro.core import device_compiler, planner as planner_mod
+from repro.core import placement as placement_mod
+from repro.core.device_compiler import DevicePreprocProgram
 from repro.core.engine import EngineStats, PipelinedEngine
 from repro.core.placement import DEFAULT_DEVICE_SPEEDUP, Placement
 from repro.core.planner import ModelSpec, Planner, QueryPlan
@@ -63,6 +65,30 @@ class RuntimeConfig:
     # worker-count recalibration knob (next to the host/device split)
     recal_workers: bool = True
     max_recal_workers: int = 16
+    # --- device preprocessing compiler (core/device_compiler.py) ---
+    # "fused": lower the device-op suffix + DNN into one fused program
+    # (Pallas resample kernel on TPU, host-matched jnp lowering elsewhere);
+    # "reference": per-op apply_device chain inside one jitted program.
+    device_backend: str = "fused"
+    # fused-stage implementation: "auto" (pallas on TPU, jnp elsewhere;
+    # REPRO_FUSED_IMPL env overrides — the CI pallas-interpret leg),
+    # "pallas", or "jnp"
+    fused_impl: str = "auto"
+    # split decode (§6.4): stop the host at the entropy stage and run
+    # dequant+IDCT (kernels/idct) inside the device program.  Applies to
+    # 4:4:4 SJPG plans; other plans keep the pixel path.
+    split_decode: bool = False
+    # per-dispatch-group launch overhead charged by the placement cost
+    # model; 0 reproduces the legacy (overhead-free) split arithmetic
+    device_dispatch_overhead_s: float = 0.0
+
+    def __post_init__(self):
+        if self.device_backend not in ("fused", "reference"):
+            raise ValueError(
+                f"device_backend must be 'fused' or 'reference', got {self.device_backend!r}"
+            )
+        if self.fused_impl not in ("auto", "pallas", "jnp"):
+            raise ValueError(f"fused_impl must be auto|pallas|jnp, got {self.fused_impl!r}")
 
 
 @dataclasses.dataclass
@@ -70,9 +96,12 @@ class CompiledPlan:
     plan: QueryPlan
     placement: Placement
     host_fn: Callable[[Any], np.ndarray]
-    device_fn: Callable[[Any], Any]
+    device_fn: Callable[[Any], Any]  # the compiled device program (callable)
     out_shape: tuple[int, ...]
     out_dtype: Any
+    # the device preprocessing compiler's product: ONE jitted program for
+    # device-placed preprocessing + DNN (device_fn is this program)
+    device_program: DevicePreprocProgram | None = None
     # Built lazily: only the batch path needs the engine's staging buffers;
     # the serving path feeds the RequestScheduler directly.
     engine: PipelinedEngine | None = None
@@ -118,6 +147,10 @@ class SmolRuntime:
         self._plan: QueryPlan | None = None
         self._planner: Planner | None = None
         self._compiled: CompiledPlan | None = None
+        # device-program compile cache, keyed on (op specs, in_meta, batch,
+        # backend, impl, model): placement moves that revisit a split point
+        # reuse the already-jitted program instead of recompiling
+        self._device_programs: dict = {}
         self._recalibrator: Recalibrator | None = None
         self._scheduler: RequestScheduler | None = None
         self.recalibrations: list[RecalibrationEvent] = []
@@ -174,6 +207,8 @@ class SmolRuntime:
                 host_ops_per_sec=self.config.host_ops_per_sec,
                 device_ops_per_sec=self.config.device_ops_per_sec,
                 estimator=self.config.estimator,
+                device_dispatch_overhead_s=self.config.device_dispatch_overhead_s,
+                device_fused=self.config.device_backend == "fused",
             )
         return self._planner
 
@@ -189,6 +224,49 @@ class SmolRuntime:
         return self.planner().pareto()
 
     # ------------------------------------------------------------- compiling
+    def _coeff_stage_fns(self, plan: QueryPlan, placement: Placement):
+        """Split-decode path (§6.4): host stops after the entropy stage and
+        stages quantized coefficient blocks; the device program runs
+        dequant+IDCT (kernels/idct) -> color conversion -> fused preproc ->
+        DNN.  Returns None when the plan's stream is not eligible (non-SJPG
+        codec, chroma subsampling, grayscale) — callers fall back to the
+        pixel path."""
+        fmt = plan.fmt
+        if fmt.codec != "jpeg":
+            return None
+        from repro.preprocessing import jpeg as jpeg_mod
+
+        header = jpeg_mod.peek_header(self.calibration[0].variants[fmt])
+        chain = list(plan.dag_plan.ops)
+        try:
+            program = device_compiler.compile_coeff_program(
+                header,
+                chain,
+                self.model_fns[plan.model.name],
+                self.config.batch_size,
+                impl=self.config.fused_impl,
+                model_key=plan.model.name,
+                cache=self._device_programs,
+            )
+        except ValueError:
+            return None
+        out_shape = tuple(program.in_meta.shape)  # (3, n_br, n_bc, 64)
+        out_dtype = np.dtype(program.in_meta.dtype)
+
+        def host_fn(item):
+            if not hasattr(item, "decode_to_coefficients"):
+                raise TypeError("split decode requires StoredImage items with a jpeg variant")
+            _, planes_zz, _, _ = item.decode_to_coefficients(fmt)
+            arr = np.stack(planes_zz).astype(out_dtype)
+            if arr.shape != out_shape:
+                raise ValueError(
+                    f"entropy stage produced {arr.shape}, expected {out_shape}; "
+                    "the corpus must be shape-uniform with the calibration set"
+                )
+            return arr
+
+        return host_fn, program, out_shape, out_dtype
+
     def _stage_fns(self, plan: QueryPlan, placement: Placement):
         fmt = plan.fmt
         host_ops = list(placement.host_ops)
@@ -209,13 +287,17 @@ class SmolRuntime:
                 )
             return x
 
-        def device_fn(batch):
-            x = batch
-            if device_ops:
-                x = jax.vmap(lambda im: P.apply_chain_device(device_ops, im))(x)
-            return model_fn(x)
-
-        return host_fn, device_fn, out_shape, out_dtype
+        program = device_compiler.compile_device_program(
+            device_ops,
+            out_meta,
+            model_fn,
+            self.config.batch_size,
+            backend=self.config.device_backend,
+            impl=self.config.fused_impl,
+            model_key=plan.model.name,
+            cache=self._device_programs,
+        )
+        return host_fn, program, out_shape, out_dtype
 
     def compile(self, plan: QueryPlan | None = None, force: bool = False) -> CompiledPlan:
         if self._compiled is not None and plan is None and not force:
@@ -234,6 +316,8 @@ class SmolRuntime:
             device_ops_per_sec=device_rate,
             alpha=self.config.recal_alpha,
             hysteresis=self.config.recal_hysteresis,
+            device_dispatch_overhead_s=self.config.device_dispatch_overhead_s,
+            device_fused=self.config.device_backend == "fused",
         )
         if self._worker_recal is None:
             self._worker_recal = WorkerRecalibrator(
@@ -244,8 +328,30 @@ class SmolRuntime:
         return compiled
 
     def _compile_placement(self, plan: QueryPlan, placement: Placement) -> CompiledPlan:
-        host_fn, device_fn, out_shape, out_dtype = self._stage_fns(plan, placement)
-        self._compiled = CompiledPlan(plan, placement, host_fn, device_fn, out_shape, out_dtype)
+        staged = None
+        if self.config.split_decode:
+            staged = self._coeff_stage_fns(plan, placement)
+            if staged is not None:
+                # the whole dense pipeline (dequant+IDCT onward) runs device-
+                # side: pin the placement at split 0 so stats/recalibration
+                # attribute stage time the way the program actually executes
+                placement = placement_mod.placement_for_split(
+                    list(plan.dag_plan.ops),
+                    self._decoded_meta(plan.fmt),
+                    0,
+                    host_decode_time=self._decode_time(plan.fmt),
+                    dnn_device_time=1.0 / plan.model.exec_throughput,
+                    host_ops_per_sec=self.config.host_ops_per_sec,
+                    device_ops_per_sec=self.config.device_ops_per_sec,
+                    device_dispatch_overhead_s=self.config.device_dispatch_overhead_s,
+                    device_fused=self.config.device_backend == "fused",
+                )
+        if staged is None:
+            staged = self._stage_fns(plan, placement)
+        host_fn, program, out_shape, out_dtype = staged
+        self._compiled = CompiledPlan(
+            plan, placement, host_fn, program, out_shape, out_dtype, device_program=program
+        )
         return self._compiled
 
     def engine(self) -> PipelinedEngine:
@@ -277,9 +383,11 @@ class SmolRuntime:
             self._compile_placement(self._compiled.plan, placement)
             if self._scheduler is not None:
                 # drains in-flight work, then swaps fns + staging signature
+                # (device_fn is the compiled program — already jitted, and
+                # cached so revisited splits swap in without a recompile)
                 self._scheduler.rebind(
                     self._compiled.host_fn,
-                    jax.jit(self._compiled.device_fn),
+                    self._compiled.device_fn,
                     out_shape=self._compiled.out_shape,
                     out_dtype=self._compiled.out_dtype,
                 )
@@ -346,7 +454,7 @@ class SmolRuntime:
             mem = self.config.memory
             self._scheduler = RequestScheduler(
                 compiled.host_fn,
-                jax.jit(compiled.device_fn),  # same compilation the engine gets
+                compiled.device_fn,  # the same compiled program the engine gets
                 compiled.out_shape,
                 compiled.out_dtype,
                 max_batch=self.config.batch_size,
@@ -397,6 +505,16 @@ class SmolRuntime:
         ``scheduler`` with request counters and the serving-side budget.
         """
         out: dict[str, Any] = {"num_workers": self._num_workers, "engine": None, "scheduler": None}
+        if self._compiled is not None and self._compiled.device_program is not None:
+            prog = self._compiled.device_program
+            out["device_program"] = {
+                "backend": prog.backend,
+                "impl": prog.impl,
+                "fused": prog.fused,
+                "stages": list(prog.stages),
+                "dispatch_count": prog.dispatch_count,
+                "dispatches_per_batch": prog.dispatches_per_batch,
+            }
         engine = self._compiled.engine if self._compiled is not None else None
         if engine is not None:
             out["engine"] = {

@@ -146,6 +146,8 @@ class Recalibrator:
         device_ops_per_sec: float,
         alpha: float = 0.5,
         hysteresis: float = 0.1,
+        device_dispatch_overhead_s: float = 0.0,
+        device_fused: bool = True,
     ):
         self.chain = list(chain)
         self.in_meta = in_meta
@@ -155,6 +157,10 @@ class Recalibrator:
         self.device_ops_per_sec = device_ops_per_sec
         self.alpha = alpha  # EWMA weight of the newest observation
         self.hysteresis = hysteresis
+        # the split re-solve must use the same fused-dispatch cost model the
+        # planner used, or recalibration would undo the fusion-aware choice
+        self.device_dispatch_overhead_s = device_dispatch_overhead_s
+        self.device_fused = device_fused
         self.events: list[RecalibrationEvent] = []
 
     # ------------------------------------------------------------- internals
@@ -215,6 +221,8 @@ class Recalibrator:
             dnn_device_time=self.dnn_device_time,
             host_ops_per_sec=self.host_ops_per_sec,
             device_ops_per_sec=self.device_ops_per_sec,
+            device_dispatch_overhead_s=self.device_dispatch_overhead_s,
+            device_fused=self.device_fused,
         )
 
     def update(self, current: Placement, m: StageMeasurement) -> tuple[Placement, bool]:
@@ -257,6 +265,8 @@ class Recalibrator:
             dnn_device_time=self.dnn_device_time,
             host_ops_per_sec=self.host_ops_per_sec,
             device_ops_per_sec=self.device_ops_per_sec,
+            device_dispatch_overhead_s=self.device_dispatch_overhead_s,
+            device_fused=self.device_fused,
         )
 
     def _predict_split(self, split: int) -> float:

@@ -4,9 +4,11 @@ Before this module, vision serving meant hand-wiring decode → preprocess →
 model per deployment.  Now every vision request goes through
 :class:`repro.runtime.SmolRuntime`: the planner picks the (model, format)
 plan, the placement optimizer splits preprocessing across host/device, the
-request scheduler dynamically batches, and the recalibration loop keeps the
-split (and the host worker count) matched to observed stage occupancy while
-the server runs.
+device preprocessing compiler lowers the device half + DNN into one fused
+program (``RuntimeConfig.device_backend``), the request scheduler
+dynamically batches, and the recalibration loop keeps the split (and the
+host worker count) matched to observed stage occupancy while the server
+runs.
 
 Resource governance comes from the runtime's memory subsystem
 (``RuntimeConfig.memory``): with ``max_pending`` / ``budget_bytes`` set,
@@ -112,6 +114,18 @@ class VisionServingEngine:
     def num_workers(self) -> int:
         """Live host worker count (moves under worker recalibration)."""
         return self.runtime.num_workers
+
+    @property
+    def device_backend(self) -> str:
+        """'fused' (device preprocessing compiler) or 'reference'."""
+        return self.runtime.config.device_backend
+
+    @property
+    def device_program(self):
+        """The compiled device program serving this engine (preproc + DNN,
+        one dispatch per batch); None before the plan is compiled."""
+        compiled = self.runtime.compile()
+        return compiled.device_program
 
     def stats(self) -> dict:
         """Memory/threading occupancy (pool, budget, admission counters)."""

@@ -491,3 +491,60 @@ def test_worker_recalibrator_damps_oscillation():
         flips += int(changed)
     assert flips <= 1, "worker count flapped between adjacent values"
     assert r.num_workers in (2, 3)
+
+
+# --------------------------------------------------- arena-backed codec scratch
+def test_codec_band_scratch_reaches_steady_state():
+    # SJPG/SPNG band payload + coefficient scratch routes through the
+    # thread-local FrameArena: after warmup, repeated decodes must not grow
+    # the arena (zero per-band system allocations) and must leak nothing
+    from conftest import smooth_image
+    from repro.preprocessing import jpeg, png, scratch
+
+    rng = np.random.default_rng(0)
+    img = smooth_image(rng, 128, 160)
+    dj = jpeg.encode(img, quality=85)
+    dp = png.encode(img)
+    for _ in range(30):  # warm: block-boundary positions cycle through
+        jpeg.decode(dj)
+        png.decode(dp)
+        jpeg.decode_to_coefficients(dj, max_rows=40)
+    before = scratch.arena_stats()
+    assert before.bytes_in_use == 0, "scratch leaked outside its band scope"
+    for _ in range(100):
+        jpeg.decode(dj)
+        png.decode(dp)
+        jpeg.decode_to_coefficients(dj, max_rows=40)
+    after = scratch.arena_stats()
+    assert after.blocks_allocated == before.blocks_allocated, "arena grew in steady state"
+    assert after.bytes_in_use == 0
+
+
+def test_codec_output_unchanged_by_arena_routing():
+    # arena-backed decode must be bit-identical to a scratch-free decode
+    from conftest import smooth_image
+    from repro.preprocessing import jpeg
+
+    rng = np.random.default_rng(5)
+    img = smooth_image(rng, 96, 120)
+    data = jpeg.encode(img, quality=90)
+    hdr = jpeg.peek_header(data)
+    plain = [jpeg._decode_band_coeffs(data, hdr, b) for b in range(hdr.n_bands)]
+    from repro.preprocessing.scratch import band_scratch
+
+    with band_scratch() as s:
+        routed = [jpeg._decode_band_coeffs(data, hdr, b, scratch=s) for b in range(hdr.n_bands)]
+        for planes_a, planes_b in zip(plain, routed):
+            for a, b in zip(planes_a, planes_b):
+                np.testing.assert_array_equal(a, b)
+
+
+def test_band_scratch_zero_fills_reused_memory():
+    from repro.preprocessing.scratch import band_scratch
+
+    with band_scratch() as s:
+        a = s.alloc((64, 64), np.int16)
+        a.fill(-1)
+    with band_scratch() as s:
+        b = s.alloc((64, 64), np.int16)  # recycles the same arena block
+        assert not b.any(), "reused arena scratch must be zero-filled"
