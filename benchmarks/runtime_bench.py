@@ -18,10 +18,22 @@ Two workloads, each probing the subsystem built for it:
   Gate: fused >= 1.0x per-op on CPU/interpret (with a noise tolerance —
   XLA already fuses elementwise on CPU, so parity is the honest floor);
   on a real accelerator the >= 1.2x speedup gate binds instead.
+* **multi-tenant fairness** (the weighted-fair scheduler) — two tenants
+  with 4:1 weights saturate a device-bound scheduler; the observed
+  per-tenant throughput ratio must land at 4:1 +/- 25%, and the
+  two-tenant aggregate must stay within 10% of a single-tenant baseline
+  on the same stages (fairness must not cost throughput).  Stage times
+  are sleep-controlled, so this leg measures the scheduler's policy, not
+  box noise.
 
 Writes ``BENCH_runtime.json`` at the repo root (override with ``--out``).
+``--check BASELINE.json`` turns the run into a **regression gate**: any
+gate that passes in the committed baseline but fails in this run exits
+non-zero (the CI job runs ``--smoke --check BENCH_runtime.json`` on every
+PR, so perf gates *bind* instead of only uploading an artifact; smoke
+mode relaxes the noisy thresholds to keep 2-core CI runners honest).
 
-    PYTHONPATH=src python benchmarks/runtime_bench.py [--smoke]
+    PYTHONPATH=src python benchmarks/runtime_bench.py [--smoke] [--check BENCH_runtime.json]
 """
 
 from __future__ import annotations
@@ -214,6 +226,93 @@ def _run_device_leg(args, reps: int) -> dict:
     }
 
 
+def _run_fairness_leg(args) -> dict:
+    """Two tenants at 4:1 weights saturating a device-bound scheduler.
+
+    The device stage is a fixed sleep per batch and the host stage is
+    trivial, so the only thing under test is the scheduler's weighted-fair
+    policy: per-tenant ``max_pending`` backpressures both feeders, batch
+    slots go to the backlogged tenant with the smallest virtual time, and
+    the completion ratio during saturation should track the weights.  A
+    single-tenant baseline on identical stages anchors the aggregate gate.
+    """
+    import threading
+    import time
+
+    from repro.runtime.scheduler import RequestScheduler, TenantConfig
+
+    per_batch_s = 0.004
+    max_batch = 8
+    window_s = 1.2 if args.smoke else 3.0
+
+    def host_fn(item):
+        return np.full((8,), float(item), np.float32)
+
+    def device_fn(batch):
+        time.sleep(per_batch_s)  # a deterministic "accelerator"
+        return batch
+
+    def run_window(tenant_cfgs):
+        names = [c.name for c in tenant_cfgs]
+        sched = RequestScheduler(
+            host_fn,
+            device_fn,
+            (8,),
+            np.float32,
+            max_batch=max_batch,
+            num_workers=2,
+            max_wait_ms=1.0,
+            tenants=tenant_cfgs,
+        )
+        sched.start()
+        stop_at = time.perf_counter() + window_s
+
+        def feeder(name):
+            i = 0
+            while time.perf_counter() < stop_at:
+                sched.submit(i, tenant=name)  # blocks at max_pending
+                i += 1
+
+        threads = [threading.Thread(target=feeder, args=(n,)) for n in names]
+        t0 = time.perf_counter()
+        for t in threads:
+            t.start()
+        # sample completions while both feeders are still saturating the
+        # scheduler — the post-window drain tail is excluded from the ratio
+        while time.perf_counter() < stop_at:
+            time.sleep(0.02)
+        counts = {n: sched.tenants[n].completed for n in names}
+        wall = time.perf_counter() - t0
+        for t in threads:
+            t.join()
+        sched.flush(timeout=60.0)
+        sched.stop()
+        return counts, wall
+
+    counts, wall = run_window(
+        [
+            TenantConfig("gold", weight=4.0, max_pending=4 * max_batch),
+            TenantConfig("bronze", weight=1.0, max_pending=4 * max_batch),
+        ]
+    )
+    base_counts, base_wall = run_window(
+        [TenantConfig("solo", weight=1.0, max_pending=8 * max_batch)]
+    )
+    ratio = counts["gold"] / max(1, counts["bronze"])
+    aggregate = sum(counts.values()) / wall
+    baseline = base_counts["solo"] / base_wall
+    return {
+        "weights": "4:1",
+        "window_s": window_s,
+        "gold_completed": counts["gold"],
+        "bronze_completed": counts["bronze"],
+        "observed_ratio": round(ratio, 3),
+        "aggregate_tput": round(aggregate, 2),
+        "single_tenant_tput": round(baseline, 2),
+        "aggregate_frac_of_single": round(aggregate / baseline, 4) if baseline else 0.0,
+    }
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     # defaults make the workload host-decode-bound (big stored images, small
@@ -228,7 +327,16 @@ def main(argv=None) -> int:
     ap.add_argument(
         "--smoke",
         action="store_true",
-        help="small/fast run for CI: produces the JSON artifact, skips the perf gates",
+        help="small/fast run for CI: relaxed gate thresholds; gates only bind "
+        "when --check is also given",
+    )
+    ap.add_argument(
+        "--check",
+        type=str,
+        default=None,
+        metavar="BASELINE_JSON",
+        help="regression gate: fail when any gate that passes in BASELINE_JSON "
+        "fails in this run",
     )
     ap.add_argument(
         "--out",
@@ -257,7 +365,7 @@ def main(argv=None) -> int:
     exec_tput = SmolRuntime.measure_exec_throughput(
         model_fn, args.input_size, batch_size=args.batch_size
     )
-    reps = 1 if args.smoke else 3  # best-of-N: single passes are noisy
+    reps = 2 if args.smoke else 3  # best-of-N: single passes are noisy
 
     # ---- sweep: workers x pooled ------------------------------------------
     sweep, legs = _run_sweep(args, corpus, model_fn, exec_tput, fmt, reps)
@@ -275,17 +383,21 @@ def main(argv=None) -> int:
     # the zero-allocation-growth invariant itself is unit-tested
     pooled_sum = sum(piped_by_key[(w, True)] for w in args.worker_sweep)
     unpooled_sum = sum(piped_by_key[(w, False)] for w in args.worker_sweep)
-    pooled_ge_unpooled = pooled_sum >= POOLED_GATE_TOL * unpooled_sum
     best_key = max(piped_by_key, key=piped_by_key.get)
     sweep_plan = legs[best_key]["runtime"].plan()
     sweep_split = legs[best_key]["runtime"].compile().placement.split
 
     # ---- paper §8.2 modes: balanced stages, where overlap pays ------------
+    # This leg keeps the full-size model even in smoke: shrinking it makes
+    # the device stage ~2x faster than the host stage, and an unbalanced
+    # pipeline has (almost) no overlap to measure — the gate would track
+    # startup noise.  64+ items keep enough batches in flight for the
+    # overlap window to exist at all.
     bal = argparse.Namespace(
-        items=args.items,
+        items=max(args.items, 64),
         image_size=128,
         input_size=64,
-        model_width=96 if not args.smoke else 32,
+        model_width=96,
         batch_size=args.batch_size,
     )
     bal_fmt = ImageFormat("pjpeg", None, 90)
@@ -308,20 +420,44 @@ def main(argv=None) -> int:
     import jax as _jax
 
     on_accel = _jax.default_backend() not in ("cpu",)
+
+    # ---- multi-tenant fairness: weighted-fair scheduling under saturation -
+    fairness = _run_fairness_leg(args)
+
+    # Smoke runs gate on relaxed thresholds.  The timing legs swing tens of
+    # percent run-to-run on 2-core shared CI runners, so their smoke gates
+    # are *breakage detectors* (a broken pool, fully lost overlap, a worker
+    # pool that stopped scaling), not the acceptance thresholds — those
+    # bind in full mode.  The fairness leg is sleep-controlled and keeps
+    # its real tolerance in both modes.
+    thr = {
+        "pipeline_speedup": 1.02 if args.smoke else 1.2,
+        "worker_speedup": 1.1 if args.smoke else 1.3,
+        "pooled_tol": 0.75 if args.smoke else POOLED_GATE_TOL,
+        "device_tol": 0.80 if args.smoke else DEVICE_GATE_TOL,
+    }
+    pooled_ge_unpooled = pooled_sum >= thr["pooled_tol"] * unpooled_sum
     device_gate = device_leg["fused_speedup"] >= (
-        DEVICE_ACCEL_SPEEDUP if on_accel else DEVICE_GATE_TOL
+        DEVICE_ACCEL_SPEEDUP if on_accel else thr["device_tol"]
     )
 
     cores = os.cpu_count() or 1
     gates = {
-        "pipeline_speedup_ge_1_2": piped.throughput / serial_sum >= 1.2,
+        "pipeline_speedup_ge_1_2": piped.throughput / serial_sum >= thr["pipeline_speedup"],
         "pooled_ge_unpooled_per_worker_count": pooled_ge_unpooled,
         # acceptance: multi-worker pooled host-stage throughput >= 1.3x the
         # single-worker unpooled baseline, meaningful with 2+ cores
-        "multiworker_pooled_speedup_ge_1_3": (worker_speedup >= 1.3) if cores >= 2 else True,
+        "multiworker_pooled_speedup_ge_1_3": (
+            (worker_speedup >= thr["worker_speedup"]) if cores >= 2 else True
+        ),
         # device compiler: fused >= per-op (CPU parity floor; real >=1.2x
         # speedup gate on accelerator backends)
         "device_fused_ge_reference": device_gate,
+        # acceptance: 2 tenants at 4:1 weights -> observed throughput ratio
+        # 4:1 +/- 25% under saturation ...
+        "fairness_ratio_4to1_within_25pct": 3.0 <= fairness["observed_ratio"] <= 5.0,
+        # ... while the aggregate stays within 10% of single-tenant
+        "multitenant_aggregate_within_10pct": fairness["aggregate_frac_of_single"] >= 0.9,
     }
     result = {
         "benchmark": "runtime_end_to_end",
@@ -342,6 +478,8 @@ def main(argv=None) -> int:
         "serial_sum_tput": round(serial_sum, 2),
         "pipeline_speedup": round(piped.throughput / serial_sum, 3),
         "device_path": device_leg,
+        "fairness": fairness,
+        "gate_thresholds": thr,
         "gates": gates,
     }
     print(json.dumps(result, indent=2))
@@ -349,8 +487,19 @@ def main(argv=None) -> int:
         with open(args.out, "w") as f:
             json.dump(result, f, indent=2)
             f.write("\n")
+    if args.check:
+        # regression gate: every gate the committed baseline passes must
+        # still pass here — this is what fails the CI job on a perf break
+        with open(args.check) as f:
+            baseline_gates = json.load(f).get("gates", {})
+        regressed = [k for k, ok in baseline_gates.items() if ok and not gates.get(k, False)]
+        if regressed:
+            print(f"REGRESSION: gates newly failing vs {args.check}: {regressed}")
+            return 1
+        print(f"check OK: all {sum(map(bool, baseline_gates.values()))} baseline gates hold")
+        return 0
     if args.smoke:
-        return 0  # smoke mode: artifact only, perf gates don't bind
+        return 0  # smoke without --check: artifact only, gates don't bind
     return 0 if all(gates.values()) else 1
 
 

@@ -65,6 +65,109 @@ def default_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+# ------------------------------------------------------- dispatch calibration
+_MEASURED_DISPATCH_S: float | None = None
+
+
+def measure_dispatch_overhead(iters: int = 24, force: bool = False) -> float:
+    """Measured per-dispatch launch overhead: one *empty* device dispatch.
+
+    Times a trivial jitted program (compile + first run outside the clock)
+    and takes the best of ``iters`` dispatch→completion round trips — the
+    floor any device dispatch pays before doing work.  The result feeds the
+    placement cost model's ``device_dispatch_overhead_s`` so fused-group
+    costing binds by *measurement* instead of a config knob (ROADMAP item).
+    Cached per process: the overhead is a property of the backend/runtime,
+    not of any one plan.
+    """
+    global _MEASURED_DISPATCH_S
+    if _MEASURED_DISPATCH_S is not None and not force:
+        return _MEASURED_DISPATCH_S
+    import time
+
+    x = jnp.zeros((8,), jnp.float32)
+    fn = jax.jit(lambda v: v + 1.0)
+    jax.block_until_ready(fn(x))  # compile + warm outside the clock
+    best = float("inf")
+    for _ in range(max(1, iters)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(x))
+        best = min(best, time.perf_counter() - t0)
+    _MEASURED_DISPATCH_S = best
+    return best
+
+
+# ------------------------------------------------------------- program cache
+@dataclasses.dataclass(frozen=True)
+class ProgramCacheStats:
+    max_entries: int
+    entries: int
+    hits: int  # program reuses (cache lookups that found a program)
+    misses: int  # compiles (insertions of a freshly-built program)
+    evictions: int  # LRU removals forced by max_entries
+
+
+class ProgramCache(MutableMapping):
+    """Bounded LRU cache for compiled device programs.
+
+    Drop-in for the plain dict ``compile_device_program`` /
+    ``compile_coeff_program`` accept as ``cache``: lookups refresh recency,
+    insertions evict the least-recently-used program once ``max_entries``
+    is exceeded.  Multi-tenant serving churns programs (tenants pin
+    different models/plans), and compiled XLA executables hold device
+    memory — unbounded growth is the ROADMAP's "batched-shape program
+    eviction" hazard.  LRU keeps every *active* tenant's program resident:
+    a program serving traffic is re-looked-up on each placement move or
+    scheduler rebind and therefore never at the cold end.
+    """
+
+    def __init__(self, max_entries: int = 16):
+        if max_entries < 1:
+            raise ValueError(f"max_entries must be >= 1, got {max_entries}")
+        self.max_entries = int(max_entries)
+        self._data: dict = {}  # insertion/recency ordered (py3.7+ dicts)
+        self._hits = 0
+        self._misses = 0
+        self._evictions = 0
+
+    def __getitem__(self, key):
+        prog = self._data.pop(key)  # KeyError propagates
+        self._data[key] = prog  # re-insert at the hot end
+        self._hits += 1
+        return prog
+
+    def __setitem__(self, key, program) -> None:
+        if key in self._data:
+            self._data.pop(key)
+        else:
+            self._misses += 1
+        self._data[key] = program
+        while len(self._data) > self.max_entries:
+            self._data.pop(next(iter(self._data)))  # cold end
+            self._evictions += 1
+
+    def __delitem__(self, key) -> None:
+        del self._data[key]
+
+    def __contains__(self, key) -> bool:  # no stats: peek, not use
+        return key in self._data
+
+    def __iter__(self):
+        return iter(self._data)
+
+    def __len__(self) -> int:
+        return len(self._data)
+
+    def stats(self) -> ProgramCacheStats:
+        return ProgramCacheStats(
+            max_entries=self.max_entries,
+            entries=len(self._data),
+            hits=self._hits,
+            misses=self._misses,
+            evictions=self._evictions,
+        )
+
+
 # ------------------------------------------------------------------- lowering
 @dataclasses.dataclass(frozen=True)
 class Lowering:

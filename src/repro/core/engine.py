@@ -55,6 +55,11 @@ class EngineStats:
     # BudgetStats snapshot (None when pooling / the budget is disabled).
     pool_stats: Any = None
     budget_stats: Any = None
+    # Multi-tenant accounting (None on untenanted runs): items staged and
+    # staging bytes charged per tenant — each leased buffer row and batch
+    # slot is attributed to the tenant whose item filled it.
+    tenant_items: dict | None = None
+    tenant_bytes: dict | None = None
 
     @property
     def throughput(self) -> float:
@@ -96,6 +101,10 @@ class PipelinedEngine:
       memory: MemoryConfig governing staging-buffer pooling and the
         in-flight decoded-bytes budget.  Defaults to pooling on, no budget.
       worker_state_factory: per-producer-thread codec/scratch state.
+      tenant_budgets: optional tenant-name → MemoryBudget map for
+        multi-tenant batch runs (see :meth:`run`'s ``tenants``): each
+        item's decoded bytes are admitted against its tenant's budget, so
+        admission charges the tenant that decoded them.
     """
 
     def __init__(
@@ -111,6 +120,7 @@ class PipelinedEngine:
         jit: bool = True,
         memory: Any = None,
         worker_state_factory: Callable[[], Any] | None = None,
+        tenant_budgets: Any = None,
     ):
         # Deferred: repro.core must stay importable without repro.runtime
         # (runtime's facade imports this module at package-init time).
@@ -131,6 +141,7 @@ class PipelinedEngine:
         # (what the bench sweeps against).
         self._pool = self.memory.build_pool()
         self._budget = self.memory.build_budget()
+        self.tenant_budgets = dict(tenant_budgets) if tenant_budgets else None
         self._item_nbytes = int(np.prod(self.out_shape, dtype=np.int64)) * np.dtype(
             out_dtype
         ).itemsize
@@ -155,9 +166,13 @@ class PipelinedEngine:
             return lease.array, lease
         return np.zeros(shape, dtype=self.out_dtype), None
 
-    def _make_worker_pool(self):
+    def _make_worker_pool(self, tenants: Sequence[str] | None = None):
         from repro.runtime.workers import WorkerPool
 
+        budget_for = None
+        if tenants is not None and self.tenant_budgets:
+            budgets, names = self.tenant_budgets, tenants
+            budget_for = lambda idx: budgets.get(names[idx])  # noqa: E731
         return WorkerPool(
             self.host_fn,
             num_workers=self.num_workers,
@@ -165,7 +180,28 @@ class PipelinedEngine:
             worker_state_factory=self.worker_state_factory,
             budget=self._budget,
             item_nbytes=self._item_nbytes,
+            budget_for=budget_for,
         )
+
+    def configure_tenants(self, tenant_cfgs: Sequence[Any]) -> None:
+        """Carve per-tenant child budgets out of the engine's byte budget.
+
+        ``tenant_cfgs`` are :class:`repro.runtime.scheduler.TenantConfig`-like
+        objects (name/weight/floor_bytes/budget_bytes).  No-op when the
+        engine runs without a budget — tenant *accounting* in stats still
+        works, only byte admission stays unscoped.
+        """
+        if self._budget is None:
+            return
+        self.tenant_budgets = {
+            cfg.name: self._budget.child(
+                cfg.name,
+                weight=cfg.weight,
+                floor_bytes=cfg.floor_bytes,
+                max_bytes=cfg.budget_bytes,
+            )
+            for cfg in tenant_cfgs
+        }
 
     def pool_stats(self):
         return self._pool.stats() if self._pool is not None else None
@@ -216,10 +252,23 @@ class PipelinedEngine:
         )
 
     def run(
-        self, items: Sequence[Any], return_outputs: bool = True
+        self,
+        items: Sequence[Any],
+        return_outputs: bool = True,
+        tenants: Sequence[str] | None = None,
     ) -> tuple[list[Any], EngineStats]:
-        """Fully pipelined end-to-end execution."""
+        """Fully pipelined end-to-end execution.
+
+        ``tenants`` (optional, one name per item) tags every item with the
+        tenant that owns it: decoded-byte admission charges that tenant's
+        budget (see ``tenant_budgets``) and the returned stats carry
+        per-tenant staged-item/byte accounting.
+        """
         n = len(items)
+        if tenants is not None and len(tenants) != n:
+            raise ValueError(
+                f"tenants ({len(tenants)}) must align with items ({n})"
+            )
         if not self._warmed:
             # Warm up the compiled graph outside the measured window (once
             # per engine — chunked callers reuse the compilation).
@@ -227,9 +276,14 @@ class PipelinedEngine:
             jax.block_until_ready(self.device_fn(warm))
             self._warmed = True
 
+        tenant_items: dict[str, int] | None = None
+        tenant_bytes: dict[str, int] | None = None
+        if tenants is not None:
+            tenant_items = {}
+            tenant_bytes = {}
         clock = _DeviceClock()
         t0 = time.perf_counter()
-        stream = self._make_worker_pool().process(items)
+        stream = self._make_worker_pool(tenants).process(items)
 
         outputs: list[Any] = [None] * n if return_outputs else []
         # in-flight entries: (row->item indices, device output, dispatch
@@ -274,7 +328,11 @@ class PipelinedEngine:
                     break
                 idx, arr = msg
                 buf[len(batch_idx)] = arr
-                stream.release_item()  # staged: decoded bytes retire
+                stream.release_item(idx)  # staged: decoded bytes retire
+                if tenants is not None:
+                    name = tenants[idx]
+                    tenant_items[name] = tenant_items.get(name, 0) + 1
+                    tenant_bytes[name] = tenant_bytes.get(name, 0) + self._item_nbytes
                 batch_idx.append(idx)
                 if len(batch_idx) == self.batch_size:
                     flush(self.batch_size)
@@ -299,6 +357,8 @@ class PipelinedEngine:
             device_busy_seconds=clock.busy,
             pool_stats=self.pool_stats(),
             budget_stats=self.budget_stats(),
+            tenant_items=tenant_items,
+            tenant_bytes=tenant_bytes,
         )
 
     # -------------------------------------------------------------- helpers

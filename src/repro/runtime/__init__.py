@@ -5,9 +5,16 @@ the batch API (``run(corpus)``), the request-level serving API
 (``submit()``/``drain()``), and the online recalibration loop that
 re-solves the host/device placement split (and the producer-pool size)
 from measured stage occupancy.  The memory subsystem (:mod:`.memory`)
-owns the allocation story — pooled staging buffers, a frame arena, and an
-in-flight-bytes admission budget — and :mod:`.workers` owns host-stage
-threading (work stealing + bounded backpressure).
+owns the allocation story — pooled staging buffers, a frame arena, and a
+hierarchical in-flight-bytes admission budget — and :mod:`.workers` owns
+host-stage threading (work stealing + bounded backpressure).
+
+Serving is **multi-tenant**: declare :class:`TenantConfig`\\ s on
+:class:`RuntimeConfig` and ``submit(item, tenant=...)`` — the scheduler
+serves tenants by weighted fair queuing, admission quotas and byte
+budgets are per tenant, tenants may pin their own model (own compiled
+program, own recalibrated host/device split), and the compiled-program
+cache LRU-evicts beyond its bound.
 """
 
 from repro.runtime.facade import (
@@ -34,10 +41,13 @@ from repro.runtime.recalibration import (
     WorkerRecalibrator,
 )
 from repro.runtime.scheduler import (
+    DEFAULT_TENANT,
     CompletedRequest,
     RequestScheduler,
     SchedulerSaturated,
     SchedulerStats,
+    TenantConfig,
+    TenantStats,
 )
 from repro.runtime.workers import HostStream, WorkerPool
 
@@ -48,6 +58,7 @@ __all__ = [
     "BufferPool",
     "CompiledPlan",
     "CompletedRequest",
+    "DEFAULT_TENANT",
     "FrameArena",
     "HostStream",
     "MemoryBudget",
@@ -62,6 +73,8 @@ __all__ = [
     "SchedulerStats",
     "SmolRuntime",
     "StageMeasurement",
+    "TenantConfig",
+    "TenantStats",
     "WorkerPool",
     "WorkerRecalibrationEvent",
     "WorkerRecalibrator",

@@ -28,7 +28,7 @@ import numpy as np
 
 from repro.core import device_compiler, planner as planner_mod
 from repro.core import placement as placement_mod
-from repro.core.device_compiler import DevicePreprocProgram
+from repro.core.device_compiler import DevicePreprocProgram, ProgramCache
 from repro.core.engine import EngineStats, PipelinedEngine
 from repro.core.placement import DEFAULT_DEVICE_SPEEDUP, Placement
 from repro.core.planner import ModelSpec, Planner, QueryPlan
@@ -43,7 +43,12 @@ from repro.runtime.recalibration import (
     WorkerRecalibrationEvent,
     WorkerRecalibrator,
 )
-from repro.runtime.scheduler import CompletedRequest, RequestScheduler
+from repro.runtime.scheduler import (
+    DEFAULT_TENANT,
+    CompletedRequest,
+    RequestScheduler,
+    TenantConfig,
+)
 
 
 @dataclasses.dataclass
@@ -79,8 +84,20 @@ class RuntimeConfig:
     # 4:4:4 SJPG plans; other plans keep the pixel path.
     split_decode: bool = False
     # per-dispatch-group launch overhead charged by the placement cost
-    # model; 0 reproduces the legacy (overhead-free) split arithmetic
-    device_dispatch_overhead_s: float = 0.0
+    # model.  None (default) measures it at first planning — one empty
+    # device dispatch timed at warmup — so fused-group costing binds by
+    # measurement; 0.0 reproduces the legacy (overhead-free) arithmetic.
+    device_dispatch_overhead_s: float | None = None
+    # --- multi-tenant serving ---
+    # per-tenant quotas / weights / pinned models; () = single-tenant.
+    # Every TenantConfig becomes a scheduler tenant (weighted-fair service,
+    # per-tenant admission) and, when the memory budget is set, a child
+    # MemoryBudget carved out of it.
+    tenants: tuple[TenantConfig, ...] = ()
+    # bound on the compiled device-program cache (LRU eviction beyond it);
+    # multi-model tenants churn programs, so the cache must not grow
+    # without bound
+    program_cache_entries: int = 16
 
     def __post_init__(self):
         if self.device_backend not in ("fused", "reference"):
@@ -89,6 +106,12 @@ class RuntimeConfig:
             )
         if self.fused_impl not in ("auto", "pallas", "jnp"):
             raise ValueError(f"fused_impl must be auto|pallas|jnp, got {self.fused_impl!r}")
+        if self.program_cache_entries < 1:
+            raise ValueError("program_cache_entries must be >= 1")
+        self.tenants = tuple(self.tenants)
+        names = [t.name for t in self.tenants]
+        if len(names) != len(set(names)):
+            raise ValueError(f"duplicate tenant names: {names}")
 
 
 @dataclasses.dataclass
@@ -136,11 +159,16 @@ class SmolRuntime:
         missing = [m.name for m in models if m.name not in model_fns]
         if missing:
             raise ValueError(f"no model_fn for models: {missing}")
+        cfg = config or RuntimeConfig()
+        known = {m.name for m in models}
+        bad = [t.name for t in cfg.tenants if t.model is not None and t.model not in known]
+        if bad:
+            raise ValueError(f"tenants pin unknown models: {bad}")
         self.models = list(models)
         self.formats = list(formats)
         self.model_fns = dict(model_fns)
         self.calibration = list(calibration)
-        self.config = config or RuntimeConfig()
+        self.config = cfg
         self._decode_time_override = decode_time
         self._decode_time_cache: dict[str, float] = {}
         self._decoded_meta_cache: dict[str, TensorMeta] = {}
@@ -149,9 +177,21 @@ class SmolRuntime:
         self._compiled: CompiledPlan | None = None
         # device-program compile cache, keyed on (op specs, in_meta, batch,
         # backend, impl, model): placement moves that revisit a split point
-        # reuse the already-jitted program instead of recompiling
-        self._device_programs: dict = {}
+        # reuse the already-jitted program instead of recompiling.  Bounded:
+        # multi-tenant/multi-model serving churns programs, so entries
+        # beyond program_cache_entries are LRU-evicted (an active tenant's
+        # program is re-looked-up on every rebind and stays resident).
+        self._device_programs = ProgramCache(self.config.program_cache_entries)
+        # measured per-dispatch launch overhead (lazily filled when the
+        # config leaves device_dispatch_overhead_s at None)
+        self._measured_dispatch_s: float | None = None
         self._recalibrator: Recalibrator | None = None
+        # multi-tenant state: tenants pinning their own model get their own
+        # plan, compiled program, and recalibrator (per-tenant splits)
+        self._tenant_cfgs: dict[str, TenantConfig] = {t.name: t for t in self.config.tenants}
+        self._tenant_plans: dict[str, QueryPlan] = {}
+        self._tenant_compiled: dict[str, CompiledPlan] = {}
+        self._tenant_recals: dict[str, Recalibrator] = {}
         self._scheduler: RequestScheduler | None = None
         self.recalibrations: list[RecalibrationEvent] = []
         # live producer-pool size; starts at config and tracks the worker-
@@ -193,6 +233,19 @@ class SmolRuntime:
         jax.block_until_ready(out)
         return batch_size * iters / (time.perf_counter() - t0)
 
+    def _dispatch_overhead(self) -> float:
+        """Per-dispatch launch overhead for the placement cost model.
+
+        Explicit config wins; otherwise one empty device dispatch is timed
+        at first use (engine/planner warmup) so fused-group costing binds
+        by measurement rather than a knob (ROADMAP: measured dispatch
+        overhead)."""
+        if self.config.device_dispatch_overhead_s is not None:
+            return self.config.device_dispatch_overhead_s
+        if self._measured_dispatch_s is None:
+            self._measured_dispatch_s = device_compiler.measure_dispatch_overhead()
+        return self._measured_dispatch_s
+
     # -------------------------------------------------------------- planning
     def planner(self) -> Planner:
         # one Planner per runtime: its inputs are fixed at construction and
@@ -207,7 +260,7 @@ class SmolRuntime:
                 host_ops_per_sec=self.config.host_ops_per_sec,
                 device_ops_per_sec=self.config.device_ops_per_sec,
                 estimator=self.config.estimator,
-                device_dispatch_overhead_s=self.config.device_dispatch_overhead_s,
+                device_dispatch_overhead_s=self._dispatch_overhead(),
                 device_fused=self.config.device_backend == "fused",
             )
         return self._planner
@@ -304,21 +357,7 @@ class SmolRuntime:
             return self._compiled
         plan = plan or self.plan()
         compiled = self._compile_placement(plan, plan.placement)
-        device_rate = self.config.device_ops_per_sec or (
-            self.config.host_ops_per_sec * DEFAULT_DEVICE_SPEEDUP
-        )
-        self._recalibrator = Recalibrator(
-            plan.dag_plan.ops,
-            self._decoded_meta(plan.fmt),
-            host_decode_time=self._decode_time(plan.fmt),
-            dnn_device_time=1.0 / plan.model.exec_throughput,
-            host_ops_per_sec=self.config.host_ops_per_sec,
-            device_ops_per_sec=device_rate,
-            alpha=self.config.recal_alpha,
-            hysteresis=self.config.recal_hysteresis,
-            device_dispatch_overhead_s=self.config.device_dispatch_overhead_s,
-            device_fused=self.config.device_backend == "fused",
-        )
+        self._recalibrator = self._make_recalibrator(plan)
         if self._worker_recal is None:
             self._worker_recal = WorkerRecalibrator(
                 num_workers=self._num_workers,
@@ -327,7 +366,27 @@ class SmolRuntime:
             )
         return compiled
 
-    def _compile_placement(self, plan: QueryPlan, placement: Placement) -> CompiledPlan:
+    def _make_recalibrator(self, plan: QueryPlan) -> Recalibrator:
+        device_rate = self.config.device_ops_per_sec or (
+            self.config.host_ops_per_sec * DEFAULT_DEVICE_SPEEDUP
+        )
+        return Recalibrator(
+            plan.dag_plan.ops,
+            self._decoded_meta(plan.fmt),
+            host_decode_time=self._decode_time(plan.fmt),
+            dnn_device_time=1.0 / plan.model.exec_throughput,
+            host_ops_per_sec=self.config.host_ops_per_sec,
+            device_ops_per_sec=device_rate,
+            alpha=self.config.recal_alpha,
+            hysteresis=self.config.recal_hysteresis,
+            device_dispatch_overhead_s=self._dispatch_overhead(),
+            device_fused=self.config.device_backend == "fused",
+        )
+
+    def _build_compiled(self, plan: QueryPlan, placement: Placement) -> CompiledPlan:
+        """Compile one (plan, placement) into stage functions + program —
+        shared by the default plan and per-tenant pinned plans (all hit the
+        same bounded program cache)."""
         staged = None
         if self.config.split_decode:
             staged = self._coeff_stage_fns(plan, placement)
@@ -343,16 +402,49 @@ class SmolRuntime:
                     dnn_device_time=1.0 / plan.model.exec_throughput,
                     host_ops_per_sec=self.config.host_ops_per_sec,
                     device_ops_per_sec=self.config.device_ops_per_sec,
-                    device_dispatch_overhead_s=self.config.device_dispatch_overhead_s,
+                    device_dispatch_overhead_s=self._dispatch_overhead(),
                     device_fused=self.config.device_backend == "fused",
                 )
         if staged is None:
             staged = self._stage_fns(plan, placement)
         host_fn, program, out_shape, out_dtype = staged
-        self._compiled = CompiledPlan(
+        return CompiledPlan(
             plan, placement, host_fn, program, out_shape, out_dtype, device_program=program
         )
+
+    def _compile_placement(self, plan: QueryPlan, placement: Placement) -> CompiledPlan:
+        self._compiled = self._build_compiled(plan, placement)
         return self._compiled
+
+    # --------------------------------------------------------------- tenants
+    def tenant_plan(self, tenant: str) -> QueryPlan:
+        """The plan serving ``tenant``: its pinned model's best feasible
+        plan, or the shared selected plan when the tenant pins nothing."""
+        cfg = self._tenant_cfgs.get(tenant)
+        if cfg is None or cfg.model is None:
+            return self.plan()
+        if tenant not in self._tenant_plans:
+            plans = [p for p in self.planner().generate() if p.model.name == cfg.model]
+            if self.config.min_accuracy is not None:
+                ok = [p for p in plans if p.estimate.accuracy >= self.config.min_accuracy]
+                plans = ok or plans  # fall back: a pinned model must serve
+            if not plans:
+                raise ValueError(f"tenant {tenant!r}: no feasible plan for {cfg.model!r}")
+            self._tenant_plans[tenant] = max(plans, key=lambda p: p.estimate.throughput)
+        return self._tenant_plans[tenant]
+
+    def compile_tenant(self, tenant: str, force: bool = False) -> CompiledPlan:
+        """Compiled plan for one tenant.  Model-pinned tenants get their own
+        program (and their own Recalibrator — per-tenant splits); everyone
+        else shares the default compiled plan."""
+        cfg = self._tenant_cfgs.get(tenant)
+        if cfg is None or cfg.model is None:
+            return self.compile()
+        if tenant not in self._tenant_compiled or force:
+            plan = self.tenant_plan(tenant)
+            self._tenant_compiled[tenant] = self._build_compiled(plan, plan.placement)
+            self._tenant_recals[tenant] = self._make_recalibrator(plan)
+        return self._tenant_compiled[tenant]
 
     def engine(self) -> PipelinedEngine:
         compiled = self.compile()
@@ -366,6 +458,10 @@ class SmolRuntime:
                 num_workers=self._num_workers,
                 memory=self.config.memory,
             )
+            if self.config.tenants:
+                # per-tenant children of the engine budget: batch-path
+                # admission charges the tenant that decoded the bytes
+                compiled.engine.configure_tenants(self.config.tenants)
         compiled.engine.num_workers = self._num_workers
         return compiled.engine
 
@@ -407,26 +503,37 @@ class SmolRuntime:
 
     # --------------------------------------------------------------- running
     def run(
-        self, corpus: Sequence[Any], return_outputs: bool = True
+        self,
+        corpus: Sequence[Any],
+        return_outputs: bool = True,
+        tenants: Sequence[str] | None = None,
     ) -> tuple[list[Any], RunReport]:
         """Batch path: plan → place → pipeline the whole corpus.
 
         With ``config.recalibrate_every = k > 0`` the corpus is processed in
         k-item chunks and the split is re-solved between chunks from the
-        engine's measured stage occupancy (adaptive §6.3).
+        engine's measured stage occupancy (adaptive §6.3).  ``tenants``
+        (one name per item) runs the corpus multi-tenant: byte admission
+        charges each item's tenant and the stats carry per-tenant staging
+        accounting.
         """
         compiled = self.compile()
         n_before = len(self.recalibrations)
         chunk = self.config.recalibrate_every
         if chunk <= 0 or chunk >= len(corpus):
-            outputs, stats = self.engine().run(corpus, return_outputs=return_outputs)
+            outputs, stats = self.engine().run(
+                corpus, return_outputs=return_outputs, tenants=tenants
+            )
             chunk_stats = [stats]
         else:
             outputs = []
             chunk_stats = []
             for lo in range(0, len(corpus), chunk):
                 part = corpus[lo : lo + chunk]
-                out, stats = self.engine().run(part, return_outputs=return_outputs)
+                part_tenants = tenants[lo : lo + chunk] if tenants is not None else None
+                out, stats = self.engine().run(
+                    part, return_outputs=return_outputs, tenants=part_tenants
+                )
                 outputs.extend(out)
                 chunk_stats.append(stats)
                 if lo + chunk < len(corpus):
@@ -464,13 +571,22 @@ class SmolRuntime:
                 admission=mem.admission,
                 admission_timeout_s=mem.admission_timeout_s,
                 budget=mem.build_budget(),
+                tenants=self.config.tenants,
             )
+            # tenants pinning their own model serve through their own
+            # compiled plan: batches never mix across bindings
+            for tcfg in self.config.tenants:
+                if tcfg.model is not None:
+                    tc = self.compile_tenant(tcfg.name)
+                    self._scheduler.bind_tenant(
+                        tcfg.name, tc.host_fn, tc.device_fn, tc.out_shape, tc.out_dtype
+                    )
         self._scheduler.start()
 
-    def submit(self, item: Any) -> int:
+    def submit(self, item: Any, tenant: str = DEFAULT_TENANT) -> int:
         if self._scheduler is None:
             raise RuntimeError("start_serving() before submit()")
-        return self._scheduler.submit(item)
+        return self._scheduler.submit(item, tenant=tenant)
 
     def drain(self, timeout: float | None = None) -> list[CompletedRequest]:
         if self._scheduler is None:
@@ -485,11 +601,32 @@ class SmolRuntime:
         if self._scheduler is not None:
             self._scheduler.stop()
 
-    def serving_recalibrate(self) -> bool:
-        """Recalibrate the split from the serving scheduler's measurements."""
+    def serving_recalibrate(self, tenant: str | None = None) -> bool:
+        """Recalibrate a split from the serving scheduler's measurements.
+
+        ``tenant=None`` (or a tenant sharing the default plan) feeds the
+        scheduler-wide window into the shared recalibrator.  A model-pinned
+        tenant recalibrates from *its own* measurement window against its
+        own Recalibrator — per-tenant splits — and rebinds only that
+        tenant's plan on a move.
+        """
         if self._scheduler is None:
             raise RuntimeError("start_serving() before serving_recalibrate()")
-        return self.recalibrate(self._scheduler.measurement())
+        cfg = self._tenant_cfgs.get(tenant) if tenant is not None else None
+        if cfg is None or cfg.model is None:
+            return self.recalibrate(self._scheduler.measurement(tenant))
+        compiled = self.compile_tenant(tenant)
+        recal = self._tenant_recals[tenant]
+        measurement = self._scheduler.measurement(tenant)
+        placement, changed = recal.update(compiled.placement, measurement)
+        self.recalibrations.append(dataclasses.replace(recal.events[-1], tenant=tenant))
+        if changed:
+            fresh = self._build_compiled(compiled.plan, placement)
+            self._tenant_compiled[tenant] = fresh
+            self._scheduler.bind_tenant(
+                tenant, fresh.host_fn, fresh.device_fn, fresh.out_shape, fresh.out_dtype
+            )
+        return changed
 
     # ----------------------------------------------------------------- stats
     @property
@@ -502,9 +639,35 @@ class SmolRuntime:
 
         Keys: ``num_workers``; ``engine`` with pool/budget snapshots from
         the batch path (None until a batch engine ran with pooling on);
-        ``scheduler`` with request counters and the serving-side budget.
+        ``scheduler`` with request counters and the serving-side budget;
+        ``program_cache`` with compile/hit/eviction counters; ``tenants``
+        with per-tenant serving counters, byte-budget occupancy, and the
+        plan each tenant is bound to.
         """
         out: dict[str, Any] = {"num_workers": self._num_workers, "engine": None, "scheduler": None}
+        out["program_cache"] = self._device_programs.stats()
+        if self._measured_dispatch_s is not None:
+            out["measured_dispatch_overhead_s"] = self._measured_dispatch_s
+        if self._scheduler is not None and self._scheduler._tenants:
+            sched = self._scheduler
+            tenants: dict[str, Any] = {}
+            for name, tstats in sched.tenants.items():
+                tbudget = sched.tenant_budget(name)
+                entry: dict[str, Any] = {
+                    "stats": dataclasses.replace(tstats),
+                    "budget": tbudget.stats() if tbudget is not None else None,
+                }
+                cfg = self._tenant_cfgs.get(name)
+                compiled = (
+                    self._tenant_compiled.get(name)
+                    if cfg is not None and cfg.model is not None
+                    else self._compiled
+                )
+                if compiled is not None:
+                    entry["plan"] = compiled.plan.key
+                    entry["split"] = compiled.placement.split
+                tenants[name] = entry
+            out["tenants"] = tenants
         if self._compiled is not None and self._compiled.device_program is not None:
             prog = self._compiled.device_program
             out["device_program"] = {

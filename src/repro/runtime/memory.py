@@ -19,7 +19,14 @@ device):
 * :class:`MemoryBudget` — admission controller bounding total in-flight
   decoded bytes.  Producers admit before decoding; consumers release after
   staging.  Under pressure, admission blocks (backpressure) or fails fast
-  (load shedding), instead of queueing without bound.
+  (load shedding), instead of queueing without bound.  Budgets are
+  **hierarchical** for multi-tenant serving: :meth:`MemoryBudget.child`
+  carves a per-tenant child out of a global parent — every child admission
+  charges both levels atomically, each child is *guaranteed* its
+  ``floor_bytes`` (siblings can never consume a tenant's floor), and bytes
+  beyond the floor compete for the unfloored headroom under a
+  weight-proportional soft cap.  One tenant's burst therefore saturates
+  its own quota, not the server.
 * :class:`MemoryConfig` — one config object the runtime threads through
   engine, scheduler, and facade.
 
@@ -319,6 +326,9 @@ class BudgetStats:
     admitted: int
     rejected: int
     blocked_seconds: float
+    name: str = "root"
+    floor_bytes: int = 0
+    weight: float = 1.0
 
 
 class MemoryBudget:
@@ -328,30 +338,169 @@ class MemoryBudget:
     fails fast (load shedding).  A single request larger than the whole
     budget is admitted when nothing else is in flight, so oversized items
     degrade to serial execution instead of deadlocking the pipeline.
+
+    **Hierarchy** (multi-tenant): :meth:`child` creates a per-tenant child
+    budget under this one.  A child admission charges the child *and* every
+    ancestor atomically (they share one lock), and releases walk back up
+    the same chain.  Two guarantees hold at all times:
+
+    * **floors** — each child is guaranteed ``floor_bytes``: admissions
+      that keep the child at or under its floor only need floor headroom,
+      which the parent pre-reserves (the sum of floors may not exceed the
+      parent's ``max_bytes``).  Bytes *beyond* the floor compete for the
+      parent's unfloored headroom, from which every sibling's unused floor
+      is excluded — so a bursting tenant can exhaust the shared headroom
+      but never a sibling's guarantee.  The oversize-when-idle escape
+      hatch is disabled on budgets with floored children for the same
+      reason: an untenanted request bigger than the unfloored headroom is
+      rejected outright rather than parked on floor-reserved bytes.
+    * **weighted soft caps** — a child without an explicit ``max_bytes``
+      gets ``floor + weight / Σweights × (parent_max − Σfloors)``,
+      re-derived as siblings register, so quota defaults track the same
+      weights the scheduler serves by.
     """
 
-    def __init__(self, max_bytes: int):
-        if max_bytes <= 0:
+    def __init__(
+        self,
+        max_bytes: int,
+        name: str = "root",
+        *,
+        parent: "MemoryBudget | None" = None,
+        weight: float = 1.0,
+        floor_bytes: int = 0,
+    ):
+        if max_bytes is not None and max_bytes <= 0:
             raise ValueError("budget max_bytes must be positive")
-        self.max_bytes = int(max_bytes)
+        if weight <= 0:
+            raise ValueError(f"budget weight must be positive, got {weight}")
+        if floor_bytes < 0:
+            raise ValueError("floor_bytes must be >= 0")
+        self.max_bytes = int(max_bytes) if max_bytes is not None else None
+        self.name = name
+        self.weight = float(weight)
+        self.floor_bytes = int(floor_bytes)
+        self._parent = parent
+        self._children: list[MemoryBudget] = []
         self._in_flight = 0
-        self._cond = threading.Condition()
+        # one condition for the whole hierarchy: child admissions must read
+        # and update ancestor occupancy atomically
+        self._cond = parent._cond if parent is not None else threading.Condition()
         self._admitted = 0
         self._rejected = 0
         self._blocked_seconds = 0.0
         self._high_water = 0
 
+    # ------------------------------------------------------------- hierarchy
+    def child(
+        self,
+        name: str,
+        weight: float = 1.0,
+        floor_bytes: int = 0,
+        max_bytes: int | None = None,
+    ) -> "MemoryBudget":
+        """Create a per-tenant child budget under this one.
+
+        ``max_bytes=None`` leaves the child's cap weight-derived (see class
+        docstring); an explicit value is a hard per-tenant quota.  Floors
+        are validated here: they must collectively fit inside this budget.
+        """
+        with self._cond:
+            if self.max_bytes is not None:
+                floors = sum(c.floor_bytes for c in self._children) + floor_bytes
+                if floors > self.max_bytes:
+                    raise ValueError(
+                        f"child floors ({floors}B) exceed parent budget "
+                        f"({self.max_bytes}B)"
+                    )
+            kid = MemoryBudget(
+                max_bytes if max_bytes is not None else None,
+                name,
+                parent=self,
+                weight=weight,
+                floor_bytes=floor_bytes,
+            )
+            self._children.append(kid)
+            return kid
+
+    def _effective_cap(self) -> int | None:
+        """This budget's cap: explicit, or weight-derived under the parent.
+
+        Caller holds the shared lock."""
+        if self.max_bytes is not None:
+            return self.max_bytes
+        if self._parent is None or self._parent.max_bytes is None:
+            return None  # unbounded child of an unbounded parent
+        siblings = self._parent._children
+        total_w = sum(c.weight for c in siblings)
+        total_floors = sum(c.floor_bytes for c in siblings)
+        headroom = max(0, self._parent.max_bytes - total_floors)
+        return self.floor_bytes + int(headroom * self.weight / total_w)
+
+    def _unfloored_in_use(self) -> int:
+        """Bytes in flight that are NOT covered by a child floor: direct
+        (unattributed) admissions plus each child's spill past its floor.
+        Caller holds the shared lock."""
+        child_total = sum(c._in_flight for c in self._children)
+        direct = self._in_flight - child_total
+        spill = sum(max(0, c._in_flight - c.floor_bytes) for c in self._children)
+        return direct + spill
+
+    def _fits_spill(self, spill: int) -> bool:
+        """Does ``spill`` unfloored bytes fit under this budget (and up)?"""
+        if self.max_bytes is not None:
+            total_floors = sum(c.floor_bytes for c in self._children)
+            headroom = self.max_bytes - total_floors
+            if self._unfloored_in_use() + spill > headroom:
+                # degenerate oversize rule: a request bigger than the whole
+                # budget passes only when the budget is idle — and only
+                # when no child floors exist: admitting it would occupy
+                # floor-reserved bytes, and a floored tenant's within-floor
+                # admissions (guaranteed by contract) would then bounce
+                if not (self._in_flight == 0 and spill > headroom and total_floors == 0):
+                    return False
+        if self._parent is not None:
+            # this budget's spill is unfloored use from the parent's view
+            # only past THIS budget's floor
+            new = self._in_flight + spill
+            parent_spill = max(0, new - self.floor_bytes) - max(
+                0, self._in_flight - self.floor_bytes
+            )
+            return self._parent._fits_spill(parent_spill)
+        return True
+
     def _fits(self, nbytes: int) -> bool:
-        return self._in_flight + nbytes <= self.max_bytes or (
-            self._in_flight == 0 and nbytes > self.max_bytes
-        )
+        cap = self._effective_cap()
+        if cap is not None:
+            if self._in_flight + nbytes > cap and not (
+                self._in_flight == 0 and nbytes > cap
+            ):
+                return False
+        if self._parent is not None:
+            new = self._in_flight + nbytes
+            spill = max(0, new - self.floor_bytes) - max(
+                0, self._in_flight - self.floor_bytes
+            )
+            return self._parent._fits_spill(spill)
+        if self._children:
+            # root-level direct admissions (the untenanted default path)
+            # compete for unfloored headroom only — they can never eat a
+            # tenant's guaranteed floor
+            return self._fits_spill(nbytes)
+        return True
+
+    def _charge(self, nbytes: int) -> None:
+        """Record an admission here and in every ancestor (lock held)."""
+        node = self
+        while node is not None:
+            node._in_flight += nbytes
+            node._high_water = max(node._high_water, node._in_flight)
+            node = node._parent
+        self._admitted += 1
 
     def try_admit(self, nbytes: int) -> bool:
         with self._cond:
             if self._fits(nbytes):
-                self._in_flight += nbytes
-                self._high_water = max(self._high_water, self._in_flight)
-                self._admitted += 1
+                self._charge(nbytes)
                 return True
             self._rejected += 1
             return False
@@ -369,16 +518,17 @@ class MemoryBudget:
                 # inflate `rejected` by orders of magnitude.  Only
                 # try_admit (the shedding path) counts rejections.
                 return False
-            self._in_flight += nbytes
-            self._high_water = max(self._high_water, self._in_flight)
-            self._admitted += 1
+            self._charge(nbytes)
             return True
 
     def release(self, nbytes: int) -> None:
         with self._cond:
-            self._in_flight -= nbytes
-            if self._in_flight < 0:
-                raise RuntimeError("budget released more bytes than admitted")
+            node = self
+            while node is not None:
+                node._in_flight -= nbytes
+                if node._in_flight < 0:
+                    raise RuntimeError("budget released more bytes than admitted")
+                node = node._parent
             self._cond.notify_all()
 
     @property
@@ -389,10 +539,13 @@ class MemoryBudget:
     def stats(self) -> BudgetStats:
         with self._cond:
             return BudgetStats(
-                max_bytes=self.max_bytes,
+                max_bytes=self.max_bytes if self.max_bytes is not None else 0,
                 in_flight_bytes=self._in_flight,
                 high_water_bytes=self._high_water,
                 admitted=self._admitted,
                 rejected=self._rejected,
                 blocked_seconds=self._blocked_seconds,
+                name=self.name,
+                floor_bytes=self.floor_bytes,
+                weight=self.weight,
             )

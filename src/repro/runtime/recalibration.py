@@ -14,6 +14,12 @@ back into a :class:`Recalibrator`, which
    rates, moving the split only when the predicted gain clears a
    hysteresis margin (so measurement noise does not thrash recompiles).
 
+Under multi-tenant serving the split is **per tenant**: each model-pinned
+tenant gets its own :class:`Recalibrator` fed from that tenant's windowed
+stage measurements (``RequestScheduler.measurement(tenant)``), so tenants
+with different models/plans converge to different host/device splits
+instead of fighting over one global split point.
+
 Next to the split there is a second knob: the **host worker count**.
 :class:`WorkerRecalibrator` sizes the producer pool from the same stage
 measurements — the host stage needs roughly ``host_time / device_time``
@@ -56,6 +62,11 @@ class RecalibrationEvent:
     host_decode_time: float
     dnn_device_time: float
     predicted_throughput: float
+    # which tenant's measurement window drove this event ("" = the shared
+    # single-stream path).  Multi-tenant serving runs one Recalibrator per
+    # model-pinned tenant, so each tenant's host/device split is learned
+    # from that tenant's own observed stage occupancy.
+    tenant: str = ""
 
     @property
     def changed(self) -> bool:

@@ -1,54 +1,118 @@
-"""Request-level front end over a compiled plan: dynamic batching + reorder.
+"""Request-level front end over compiled plans: dynamic batching + reorder,
+now **multi-tenant** (weighted-fair scheduling + per-tenant admission).
 
 The batch API (:meth:`repro.core.engine.PipelinedEngine.run`) assumes the
-whole corpus is present up front.  Serving gets items one at a time, so the
-scheduler adds the two pieces the paper's engine leaves to the server:
+whole corpus is present up front.  Serving gets items one at a time, from
+*many* users, so the scheduler adds the pieces the paper's engine leaves to
+the server:
 
 * **dynamic batching** — a batcher thread collects host-stage outputs into
   a device batch, dispatching when the batch fills *or* the oldest queued
   request has waited ``max_wait_ms`` (latency/throughput knob);
 * **a reorder buffer** — device batches complete in dispatch order but
   requests may finish host preprocessing out of order; :meth:`drain`
-  releases completed requests strictly in submission (uid) order.
+  releases completed requests strictly in submission (uid) order;
+* **weighted fair queuing** — every request belongs to a tenant
+  (:class:`TenantConfig`; ``submit(item, tenant=...)``).  Both contention
+  points — host-worker pickup and batch-slot formation — serve tenants by
+  start-time fair queuing: each tenant carries a virtual time advanced by
+  ``1/weight`` per item served, and the scheduler always serves the
+  backlogged tenant with the smallest virtual time.  A tenant with weight
+  4 gets 4× the service of a weight-1 tenant under saturation, and a
+  newly-active tenant's virtual time is clamped to the scheduler's clock,
+  so a 100:1 burst from one tenant delays another's first item by at most
+  a few weighted slots (bounded starvation);
+* **per-tenant admission** — ``max_pending`` caps in-flight requests *per
+  tenant* (excess submits block for backpressure or raise
+  :class:`SchedulerSaturated` for load shedding — one tenant saturating
+  its own quota never trips another's admission), and per-tenant
+  :class:`~repro.runtime.memory.MemoryBudget` children bound in-flight
+  *bytes*, charging the tenant that decoded them;
+* **per-tenant plan bindings** — tenants may pin different models/plans
+  (:meth:`bind_tenant`); batches only mix tenants that share a binding,
+  and the weighted-fair pick decides which binding's batch forms next.
 
 Host preprocessing runs on a worker pool exactly like the engine's
-producers.  The host/device stage functions can be swapped via
-:meth:`rebind` — the hook online recalibration uses to apply a new
-placement split.  A rebind *drains in-flight requests first* (it blocks
-briefly; recalibration events are rare) so no item preprocessed by the
-old host stage meets the new device stage or staging-buffer signature.
+producers.  The stage functions can be swapped via :meth:`rebind` (the
+default binding) or :meth:`bind_tenant` — the hooks online recalibration
+uses to apply a new placement split.  Both *drain in-flight requests
+first* (they block briefly; recalibration events are rare) so no item
+preprocessed by an old host stage meets a new device stage or
+staging-buffer signature.
 
 A request whose host or device stage raises completes with its ``error``
 field set rather than killing the worker/batcher thread — serving keeps
 going, and the caller sees the failure on drain.
-
-**Admission control** (paper §6.1(c) resource governance): without it,
-:meth:`submit` accepts requests indefinitely and decoded frames pile up in
-the ready queue.  Two gates bound that:
-
-* ``max_pending`` caps in-flight requests — excess submits either block
-  (``admission='block'``, backpressure on the caller) or raise
-  :class:`SchedulerSaturated` (``admission='reject'``, load shedding);
-* an optional :class:`~repro.runtime.memory.MemoryBudget` bounds in-flight
-  *bytes*: each admitted request reserves its staged-item footprint and
-  releases it on completion (success or error).
 """
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import queue
 import threading
 import time
-from typing import Any, Callable
+from typing import Any, Callable, Mapping, Sequence
 
 import numpy as np
 
 from repro.runtime.memory import MemoryBudget
 
+DEFAULT_TENANT = "default"
+
 
 class SchedulerSaturated(RuntimeError):
-    """submit() rejected: the scheduler is at max_pending / memory budget."""
+    """submit() rejected: the tenant is at its max_pending / byte quota."""
+
+
+@dataclasses.dataclass(frozen=True)
+class TenantConfig:
+    """One tenant's serving contract.
+
+    ``weight`` sets the fair-queuing service share (items served in
+    proportion to weight under saturation).  ``max_pending`` and
+    ``budget_bytes`` are per-tenant admission quotas (falling back to the
+    scheduler-wide defaults when unset); ``floor_bytes`` is the byte floor
+    guaranteed under a hierarchical parent budget.  ``model`` optionally
+    pins the tenant to one model id — the runtime facade resolves it to a
+    dedicated compiled plan and binds it via :meth:`RequestScheduler.bind_tenant`.
+    """
+
+    name: str
+    weight: float = 1.0
+    max_pending: int | None = None
+    budget_bytes: int | None = None
+    floor_bytes: int = 0
+    model: str | None = None
+
+    def __post_init__(self):
+        if not self.name:
+            raise ValueError("tenant name must be non-empty")
+        if self.weight <= 0:
+            raise ValueError(
+                f"tenant {self.name!r}: weight must be positive, got {self.weight}"
+            )
+        if self.max_pending is not None and self.max_pending < 1:
+            raise ValueError(f"tenant {self.name!r}: max_pending must be >= 1")
+        if self.budget_bytes is not None and self.budget_bytes <= 0:
+            raise ValueError(f"tenant {self.name!r}: budget_bytes must be positive")
+        if self.floor_bytes < 0:
+            raise ValueError(f"tenant {self.name!r}: floor_bytes must be >= 0")
+
+
+@dataclasses.dataclass
+class TenantStats:
+    """Per-tenant serving counters (the fairness observability surface)."""
+
+    submitted: int = 0
+    completed: int = 0
+    failed: int = 0
+    rejected: int = 0
+    batch_items: int = 0
+    host_items: int = 0
+    host_busy_seconds: float = 0.0
+    device_busy_seconds: float = 0.0  # batch device time, attributed per item
+    admission_blocked_seconds: float = 0.0
 
 
 @dataclasses.dataclass
@@ -58,6 +122,7 @@ class CompletedRequest:
     submitted_at: float
     completed_at: float
     error: BaseException | None = None
+    tenant: str = DEFAULT_TENANT
 
     @property
     def latency(self) -> float:
@@ -82,8 +147,54 @@ class SchedulerStats:
         return self.batch_items / self.batches if self.batches else 0.0
 
 
+class _Binding:
+    """One compiled plan's stage functions + staging signature.  Tenants
+    sharing a binding (by identity) may share device batches."""
+
+    __slots__ = ("host_fn", "device_fn", "out_shape", "out_dtype", "item_nbytes")
+
+    def __init__(self, host_fn, device_fn, out_shape, out_dtype):
+        self.host_fn = host_fn
+        self.device_fn = device_fn
+        self.retarget(out_shape, out_dtype)
+
+    def retarget(self, out_shape, out_dtype) -> None:
+        self.out_shape = tuple(out_shape)
+        self.out_dtype = out_dtype
+        self.item_nbytes = int(np.prod(self.out_shape, dtype=np.int64)) * np.dtype(
+            out_dtype
+        ).itemsize
+
+
+class _TenantState:
+    __slots__ = (
+        "config",
+        "binding",
+        "budget",
+        "inflight",
+        "ingress",
+        "ready",
+        "vt_ingress",
+        "vt_ready",
+        "stats",
+        "meas_snapshot",
+    )
+
+    def __init__(self, config: TenantConfig, binding: _Binding, budget):
+        self.config = config
+        self.binding = binding
+        self.budget = budget  # tenant-scoped MemoryBudget (or None -> shared)
+        self.inflight = 0
+        self.ingress: collections.deque = collections.deque()
+        self.ready: collections.deque = collections.deque()
+        self.vt_ingress = 0.0
+        self.vt_ready = 0.0
+        self.stats = TenantStats()
+        self.meas_snapshot = (0.0, 0, 0.0, 0)  # host_busy, host_items, dev_busy, completed
+
+
 class RequestScheduler:
-    """Dynamic-batching executor for one compiled (host_fn, device_fn) plan."""
+    """Dynamic-batching, weighted-fair executor over compiled plan bindings."""
 
     _STOP = object()
 
@@ -100,29 +211,41 @@ class RequestScheduler:
         admission: str = "block",
         admission_timeout_s: float = 30.0,
         budget: MemoryBudget | None = None,
+        tenants: Sequence[TenantConfig] | None = None,
     ):
         if admission not in ("block", "reject"):
             raise ValueError(f"admission must be 'block' or 'reject', got {admission!r}")
-        self._host_fn = host_fn
-        self._device_fn = device_fn
-        self.out_shape = tuple(out_shape)
-        self.out_dtype = out_dtype
         self.max_batch = max_batch
         self.num_workers = num_workers
         self.max_wait_s = max_wait_ms / 1e3
+        # per-tenant pending cap: a tenant without its own max_pending gets
+        # this default, and saturation is judged (and raised) per tenant
         self.max_pending = max_pending
         self.admission = admission
         self.admission_timeout_s = admission_timeout_s
-        self.budget = budget
-        # per-request reservation against the byte budget: the staged host-
-        # stage output footprint (refreshed on rebind)
-        self._item_nbytes = int(np.prod(self.out_shape, dtype=np.int64)) * np.dtype(
-            out_dtype
-        ).itemsize
+        self.budget = budget  # shared/parent byte budget
         self.stats = SchedulerStats()
 
-        self._ingress: queue.Queue = queue.Queue()
+        self._default_binding = _Binding(host_fn, device_fn, out_shape, out_dtype)
+        self._tenants: dict[str, _TenantState] = {}
+        for cfg in tenants or ():
+            self._register_tenant(cfg)
+        if DEFAULT_TENANT not in self._tenants:
+            # the untenanted path: weight-1 tenant admitting against the
+            # shared budget directly (no child carve-out)
+            self._tenants[DEFAULT_TENANT] = _TenantState(
+                TenantConfig(DEFAULT_TENANT), self._default_binding, None
+            )
+
+        # ingress: per-tenant deques + one condition (host workers pick by
+        # weighted fairness); stops counts pending worker-retire sentinels
+        self._ingress_cond = threading.Condition()
+        self._ingress_stops = 0
+        self._vclock_ingress = 0.0
+        # ready: host outputs flow through one queue to the batcher thread,
+        # which stashes them into per-tenant deques (batcher-private)
         self._ready: queue.Queue = queue.Queue()
+        self._vclock_ready = 0.0
         self._done: dict[int, CompletedRequest] = {}
         self._done_lock = threading.Lock()
         self._done_event = threading.Event()
@@ -141,6 +264,55 @@ class RequestScheduler:
         self._threads: list[threading.Thread] = []
         self._running = False
 
+    # --------------------------------------------------------------- tenants
+    def _register_tenant(self, cfg: TenantConfig) -> _TenantState:
+        if cfg.name in self._tenants:
+            raise ValueError(f"duplicate tenant {cfg.name!r}")
+        if self.budget is not None:
+            # carve a per-tenant child out of the shared budget: admissions
+            # charge tenant AND total, floors are guaranteed, caps default
+            # to the weight-proportional share
+            tbudget = self.budget.child(
+                cfg.name,
+                weight=cfg.weight,
+                floor_bytes=cfg.floor_bytes,
+                max_bytes=cfg.budget_bytes,
+            )
+        elif cfg.budget_bytes:
+            tbudget = MemoryBudget(cfg.budget_bytes, cfg.name)
+        else:
+            tbudget = None
+        state = _TenantState(cfg, self._default_binding, tbudget)
+        self._tenants[cfg.name] = state
+        return state
+
+    @property
+    def tenants(self) -> Mapping[str, TenantStats]:
+        """Live per-tenant counters, keyed by tenant name."""
+        return {name: s.stats for name, s in self._tenants.items()}
+
+    # the default binding owns the staging signature; expose it rather than
+    # duplicating state that rebind() would have to keep in sync
+    @property
+    def out_shape(self) -> tuple[int, ...]:
+        return self._default_binding.out_shape
+
+    @property
+    def out_dtype(self):
+        return self._default_binding.out_dtype
+
+    def tenant_budget(self, tenant: str = DEFAULT_TENANT) -> MemoryBudget | None:
+        state = self._state(tenant)
+        return state.budget if state.budget is not None else self.budget
+
+    def _state(self, tenant: str) -> _TenantState:
+        try:
+            return self._tenants[tenant]
+        except KeyError:
+            raise KeyError(
+                f"unknown tenant {tenant!r}; configured: {sorted(self._tenants)}"
+            ) from None
+
     # --------------------------------------------------------------- control
     def start(self) -> None:
         if self._running:
@@ -157,10 +329,8 @@ class RequestScheduler:
     def stop(self, timeout: float = 60.0) -> None:
         """Drain in-flight requests (best effort, bounded), then shut down.
 
-        Posting the stop sentinels immediately would let them overtake
-        host-worker outputs still headed for the batcher, silently dropping
-        those requests; draining first preserves the complete-or-error
-        contract.  A request stuck past ``timeout`` is abandoned.
+        Draining first preserves the complete-or-error contract; a request
+        stuck past ``timeout`` is abandoned.
         """
         if not self._running:
             return
@@ -171,8 +341,9 @@ class RequestScheduler:
         self._running = False
         with self._inflight_lock:
             self._inflight_lock.notify_all()  # wake submitters blocked on admission
-        for _ in range(self.num_workers):
-            self._ingress.put(self._STOP)
+        with self._ingress_cond:
+            self._ingress_stops += self.num_workers
+            self._ingress_cond.notify_all()
         self._ready.put(self._STOP)
         for t in self._threads:
             t.join()
@@ -186,36 +357,55 @@ class RequestScheduler:
         out_dtype: Any = None,
         timeout: float = 60.0,
     ) -> None:
-        """Swap the stage functions (and host-stage output signature).
+        """Swap the *default* binding's stage functions (and signature).
 
         Drains in-flight requests first so no item preprocessed by the old
         host_fn reaches the new device_fn, and so the batcher can safely
         reallocate its staging buffer when the new placement changes the
-        host-stage output shape/dtype.  Rebinds are rare (recalibration
-        events), so the drain is cheap relative to a recompile.
+        host-stage output shape/dtype.  Tenants pinned to their own binding
+        via :meth:`bind_tenant` are unaffected.
         """
         self.flush(timeout=timeout)
         with self._rebind_lock:
-            self._host_fn = host_fn
-            self._device_fn = device_fn
-            if out_shape is not None:
-                self.out_shape = tuple(out_shape)
-            if out_dtype is not None:
-                self.out_dtype = out_dtype
+            b = self._default_binding
+            b.host_fn = host_fn
+            b.device_fn = device_fn
             # safe to retarget the budget reservation size: flush() left
             # zero requests admitted under the old footprint
-            self._item_nbytes = int(np.prod(self.out_shape, dtype=np.int64)) * np.dtype(
-                self.out_dtype
-            ).itemsize
+            b.retarget(
+                out_shape if out_shape is not None else b.out_shape,
+                out_dtype if out_dtype is not None else b.out_dtype,
+            )
+
+    def bind_tenant(
+        self,
+        tenant: str,
+        host_fn: Callable,
+        device_fn: Callable,
+        out_shape: tuple[int, ...],
+        out_dtype: Any,
+        timeout: float = 60.0,
+    ) -> None:
+        """Pin ``tenant`` to its own compiled plan (model/placement).
+
+        The tenant gets a dedicated binding; its batches only mix with
+        tenants bound to the *same* binding object (i.e. nobody, until the
+        facade binds two tenants to one shared plan).  Flushes first, like
+        :meth:`rebind`.
+        """
+        state = self._state(tenant)
+        if self._running:
+            self.flush(timeout=timeout)
+        with self._rebind_lock:
+            state.binding = _Binding(host_fn, device_fn, out_shape, out_dtype)
 
     def resize_workers(self, num_workers: int) -> None:
         """Retune the host-worker count online (the recalibration knob).
 
-        Growing spawns threads immediately; shrinking posts one stop
-        sentinel per surplus worker — the ingress queue is FIFO, so each
-        sentinel retires exactly one worker after the work queued ahead of
-        it, without stalling live traffic.  No-op when the count is
-        unchanged or the scheduler is stopped.
+        Growing spawns threads immediately; shrinking posts retire
+        sentinels — surplus workers exit before picking up their next item
+        (queued work is simply picked up by the survivors).  No-op when the
+        count is unchanged or the scheduler is stopped.
         """
         num_workers = max(1, int(num_workers))
         if not self._running or num_workers == self.num_workers:
@@ -230,45 +420,52 @@ class RequestScheduler:
             for t in fresh:
                 t.start()
         else:
-            for _ in range(-delta):
-                self._ingress.put(self._STOP)
+            with self._ingress_cond:
+                self._ingress_stops += -delta
+                self._ingress_cond.notify_all()
             # retiring workers exit asynchronously; drop already-dead
             # threads so the list doesn't grow across repeated resizes
             self._threads = [t for t in self._threads if t.is_alive()]
         self.num_workers = num_workers
 
     # ---------------------------------------------------------------- submit
-    def _admit(self) -> None:
-        """Admission control: bound pending requests and in-flight bytes."""
+    def _admit(self, state: _TenantState) -> None:
+        """Admission control: bound the tenant's pending requests and
+        in-flight bytes.  Saturation is per tenant — one tenant exhausting
+        its quota never raises for another."""
         t0 = time.perf_counter()
         blocked = 0.0
+        cfg = state.config
+        cap = cfg.max_pending if cfg.max_pending is not None else self.max_pending
         with self._inflight_lock:
-            if self.max_pending is not None and self._inflight >= self.max_pending:
+            if cap is not None and state.inflight >= cap:
                 if self.admission == "reject":
-                    with self._stats_lock:
-                        self.stats.rejected += 1
+                    self._count_rejected(state)
                     raise SchedulerSaturated(
-                        f"{self._inflight} requests pending >= max_pending={self.max_pending}"
+                        f"tenant {cfg.name!r}: {state.inflight} requests pending "
+                        f">= max_pending={cap}"
                     )
                 ok = self._inflight_lock.wait_for(
-                    lambda: self._inflight < self.max_pending or not self._running,
+                    lambda: state.inflight < cap or not self._running,
                     self.admission_timeout_s,
                 )
                 blocked = time.perf_counter() - t0
                 if not self._running:
                     raise RuntimeError("scheduler stopped while submit() was blocked")
                 if not ok:
-                    with self._stats_lock:
-                        self.stats.rejected += 1
+                    self._count_rejected(state)
                     raise TimeoutError(
-                        f"submit() blocked > {self.admission_timeout_s}s at "
-                        f"max_pending={self.max_pending}"
+                        f"tenant {cfg.name!r}: submit() blocked > "
+                        f"{self.admission_timeout_s}s at max_pending={cap}"
                     )
+            state.inflight += 1
             self._inflight += 1
             self._idle.clear()
-        if self.budget is not None and self._item_nbytes:
+        budget = state.budget if state.budget is not None else self.budget
+        nbytes = state.binding.item_nbytes
+        if budget is not None and nbytes:
             if self.admission == "reject":
-                admitted = self.budget.try_admit(self._item_nbytes)
+                admitted = budget.try_admit(nbytes)
             else:
                 # poll in short slices so a stop() during the wait is
                 # noticed instead of blocking the full admission timeout
@@ -279,43 +476,56 @@ class RequestScheduler:
                     remaining = deadline - time.perf_counter()
                     if remaining <= 0:
                         break
-                    if self.budget.admit(self._item_nbytes, timeout=min(0.05, remaining)):
+                    if budget.admit(nbytes, timeout=min(0.05, remaining)):
                         admitted = True
                         break
                 blocked += time.perf_counter() - t1
             if admitted and not self._running:
-                # stopped while we were blocked: the ingress queue already
-                # holds the STOP sentinels, this request would never run
-                self.budget.release(self._item_nbytes)
+                # stopped while we were blocked: this request would never run
+                budget.release(nbytes)
                 admitted = False
             if not admitted:
                 with self._inflight_lock:
+                    state.inflight -= 1
                     self._inflight -= 1
                     if self._inflight == 0:
                         self._idle.set()
                     self._inflight_lock.notify_all()
                 if not self._running:
                     raise RuntimeError("scheduler stopped while submit() was blocked")
-                with self._stats_lock:
-                    self.stats.rejected += 1
+                self._count_rejected(state)
                 raise SchedulerSaturated(
-                    f"memory budget exhausted ({self.budget.in_flight_bytes}B in flight, "
-                    f"request needs {self._item_nbytes}B)"
+                    f"tenant {cfg.name!r}: memory budget exhausted "
+                    f"({budget.in_flight_bytes}B in flight, request needs {nbytes}B)"
                 )
         if blocked:
             with self._stats_lock:
                 self.stats.admission_blocked_seconds += blocked
+                state.stats.admission_blocked_seconds += blocked
 
-    def submit(self, item: Any) -> int:
+    def _count_rejected(self, state: _TenantState) -> None:
+        with self._stats_lock:
+            self.stats.rejected += 1
+            state.stats.rejected += 1
+
+    def submit(self, item: Any, tenant: str = DEFAULT_TENANT) -> int:
         if not self._running:
             raise RuntimeError("scheduler is not running; call start() first")
-        self._admit()
+        state = self._state(tenant)
+        self._admit(state)
         with self._submit_lock:
             uid = self._next_uid
             self._next_uid += 1
         with self._stats_lock:
             self.stats.submitted += 1
-        self._ingress.put((uid, item, time.perf_counter()))
+            state.stats.submitted += 1
+        with self._ingress_cond:
+            if not state.ingress:
+                # (re)activation: clamp virtual time to the scheduler clock
+                # so an idle tenant can't hoard credit (bounded starvation)
+                state.vt_ingress = max(state.vt_ingress, self._vclock_ingress)
+            state.ingress.append((uid, item, time.perf_counter()))
+            self._ingress_cond.notify()
         return uid
 
     def drain(self, timeout: float | None = None) -> list[CompletedRequest]:
@@ -345,54 +555,136 @@ class RequestScheduler:
             raise TimeoutError(f"scheduler did not drain within {timeout}s")
 
     # --------------------------------------------------------------- threads
+    def _next_ingress(self):
+        """Weighted-fair pickup: serve the backlogged tenant with the
+        smallest ingress virtual time.  Returns None on a retire sentinel."""
+        with self._ingress_cond:
+            while True:
+                if self._ingress_stops > 0:
+                    self._ingress_stops -= 1
+                    return None
+                active = [s for s in self._tenants.values() if s.ingress]
+                if active:
+                    break
+                self._ingress_cond.wait()
+            state = min(active, key=lambda s: s.vt_ingress)
+            state.vt_ingress += 1.0 / state.config.weight
+            self._vclock_ingress = state.vt_ingress
+            uid, item, t_submit = state.ingress.popleft()
+            return state, uid, item, t_submit
+
     def _host_worker(self) -> None:
         while True:
-            msg = self._ingress.get()
-            if msg is self._STOP:
+            msg = self._next_ingress()
+            if msg is None:
                 return
-            uid, item, t_submit = msg
+            state, uid, item, t_submit = msg
             with self._rebind_lock:  # pin the current stage fn, call outside
-                host_fn = self._host_fn
+                host_fn = state.binding.host_fn
             t_in = time.perf_counter()
             try:
                 arr = host_fn(item)
             except BaseException as e:  # noqa: BLE001 — delivered via drain()
-                self._complete_error(uid, t_submit, e)
+                self._complete_error(state, uid, t_submit, e)
                 continue
             dt = time.perf_counter() - t_in
             with self._stats_lock:
                 self.stats.host_busy_seconds += dt
                 self.stats.host_items += 1
-            self._ready.put((uid, arr, t_submit))
+                state.stats.host_busy_seconds += dt
+                state.stats.host_items += 1
+            self._ready.put((state, uid, arr, t_submit))
+
+    # Batcher internals.  The batcher thread is the only reader/writer of
+    # the per-tenant `ready` deques and `vt_ready` clocks — no locking.
+    def _stash(self, msg) -> None:
+        state, uid, arr, t_submit = msg
+        if not state.ready:
+            state.vt_ready = max(state.vt_ready, self._vclock_ready)
+        state.ready.append((uid, arr, t_submit))
+
+    def _pick_ready(self, candidates: list[_TenantState]) -> _TenantState:
+        state = min(candidates, key=lambda s: s.vt_ready)
+        state.vt_ready += 1.0 / state.config.weight
+        self._vclock_ready = state.vt_ready
+        return state
 
     def _batcher(self) -> None:
-        buf = None
+        bufs: dict[int, np.ndarray] = {}  # id(binding) -> staging buffer
         while True:
+            # drain queued host outputs first, so the fairness pick sees
+            # every backlogged tenant rather than arrival order
+            if not self._drain_ready_nowait():
+                self._drain_pending(bufs)
+                return
+            if any(s.ready for s in self._tenants.values()):
+                if not self._form_batch(bufs, wait=True):
+                    return
+                continue
             msg = self._ready.get()
             if msg is self._STOP:
+                self._drain_pending(bufs)
                 return
-            with self._rebind_lock:  # signature may change across rebinds
-                shape, dtype = (self.max_batch, *self.out_shape), self.out_dtype
-            if buf is None or buf.shape != shape or buf.dtype != dtype:
-                buf = np.zeros(shape, dtype=dtype)
-            metas: list[tuple[int, float]] = []
-            if self._stage(buf, metas, msg):
-                deadline = time.perf_counter() + self.max_wait_s
-                while len(metas) < self.max_batch:
-                    remaining = deadline - time.perf_counter()
-                    if remaining <= 0:
-                        break
-                    try:
-                        msg = self._ready.get(timeout=remaining)
-                    except queue.Empty:
-                        break
-                    if msg is self._STOP:
-                        self._dispatch(buf, metas)
-                        return
-                    self._stage(buf, metas, msg)
-            self._dispatch(buf, metas)
+            self._stash(msg)
 
-    def _stage(self, buf: np.ndarray, metas: list, msg: tuple) -> bool:
+    def _drain_ready_nowait(self) -> bool:
+        """Move queued host outputs into tenant deques; False on STOP."""
+        while True:
+            try:
+                msg = self._ready.get_nowait()
+            except queue.Empty:
+                return True
+            if msg is self._STOP:
+                return False
+            self._stash(msg)
+
+    def _form_batch(self, bufs: dict, wait: bool) -> bool:
+        """Form and dispatch ONE batch by weighted-fair pick.  Returns False
+        when a stop sentinel was consumed (caller must exit)."""
+        active = [s for s in self._tenants.values() if s.ready]
+        if not active:
+            return True
+        first = self._pick_ready(active)
+        binding = first.binding
+        with self._rebind_lock:  # signature may change across rebinds
+            shape, dtype = (self.max_batch, *binding.out_shape), binding.out_dtype
+        buf = bufs.get(id(binding))
+        if buf is None or buf.shape != shape or buf.dtype != dtype:
+            buf = np.zeros(shape, dtype=dtype)
+            bufs[id(binding)] = buf
+        metas: list[tuple[int, float, _TenantState]] = []
+        self._stage(buf, metas, first, first.ready.popleft())
+        deadline = time.perf_counter() + self.max_wait_s
+        while len(metas) < self.max_batch:
+            # only tenants sharing this batch's compiled plan may join it
+            cands = [s for s in self._tenants.values() if s.ready and s.binding is binding]
+            if cands:
+                state = self._pick_ready(cands)
+                self._stage(buf, metas, state, state.ready.popleft())
+                continue
+            if not wait:
+                break
+            remaining = deadline - time.perf_counter()
+            if remaining <= 0:
+                break
+            try:
+                msg = self._ready.get(timeout=remaining)
+            except queue.Empty:
+                break
+            if msg is self._STOP:
+                self._dispatch(binding, buf, metas)
+                self._drain_pending(bufs)
+                return False
+            self._stash(msg)
+        self._dispatch(binding, buf, metas)
+        return True
+
+    def _drain_pending(self, bufs: dict) -> None:
+        """Dispatch whatever is still staged in tenant deques (stop path)."""
+        while any(s.ready for s in self._tenants.values()):
+            self._form_batch(bufs, wait=False)
+
+    def _stage(self, buf: np.ndarray, metas: list, state: _TenantState, msg: tuple) -> bool:
         """Copy one host output into the staging buffer; errors (e.g. an
         item preprocessed under a pre-rebind signature) fail that request
         instead of killing the batcher."""
@@ -400,60 +692,80 @@ class RequestScheduler:
         try:
             buf[len(metas)] = arr
         except (ValueError, TypeError) as e:
-            self._complete_error(uid, t_submit, e)
+            self._complete_error(state, uid, t_submit, e)
             return False
-        metas.append((uid, t_submit))
+        metas.append((uid, t_submit, state))
         return True
 
-    def _dispatch(self, buf: np.ndarray, metas: list[tuple[int, float]]) -> None:
+    def _dispatch(self, binding: _Binding, buf: np.ndarray, metas: list) -> None:
         if not metas:
             return
         t_in = time.perf_counter()
         with self._rebind_lock:
-            device_fn = self._device_fn
+            device_fn = binding.device_fn
         try:
             out = np.asarray(device_fn(buf))  # blocks until device done
         except BaseException as e:  # noqa: BLE001 — delivered via drain()
-            for uid, t_submit in metas:
-                self._complete_error(uid, t_submit, e)
+            for uid, t_submit, state in metas:
+                self._complete_error(state, uid, t_submit, e)
             return
         dt = time.perf_counter() - t_in
         now = time.perf_counter()
+        per_tenant = collections.Counter(state.config.name for _, _, state in metas)
+        states = {state.config.name: state for _, _, state in metas}
         with self._stats_lock:
             self.stats.device_busy_seconds += dt
             self.stats.batches += 1
             self.stats.batch_items += len(metas)
             self.stats.completed += len(metas)
+            for name, n in per_tenant.items():
+                ts = states[name].stats
+                # attribute the batch's device occupancy to tenants in
+                # proportion to the slots they filled
+                ts.device_busy_seconds += dt * n / len(metas)
+                ts.batch_items += n
+                ts.completed += n
         with self._done_lock:
-            for row, (uid, t_submit) in enumerate(metas):
-                self._done[uid] = CompletedRequest(uid, out[row], t_submit, now)
+            for row, (uid, t_submit, state) in enumerate(metas):
+                self._done[uid] = CompletedRequest(
+                    uid, out[row], t_submit, now, tenant=state.config.name
+                )
             self._done_event.set()
-        self._retire_admissions(len(metas))
+        for name, n in per_tenant.items():
+            self._retire_admissions(states[name], n)
 
-    def _complete_error(self, uid: int, t_submit: float, exc: BaseException) -> None:
+    def _complete_error(
+        self, state: _TenantState, uid: int, t_submit: float, exc: BaseException
+    ) -> None:
         now = time.perf_counter()
         with self._stats_lock:
             self.stats.failed += 1
+            state.stats.failed += 1
         with self._done_lock:
-            self._done[uid] = CompletedRequest(uid, None, t_submit, now, error=exc)
+            self._done[uid] = CompletedRequest(
+                uid, None, t_submit, now, error=exc, tenant=state.config.name
+            )
             self._done_event.set()
-        self._retire_admissions(1)
+        self._retire_admissions(state, 1)
 
-    def _retire_admissions(self, count: int) -> None:
-        """Return ``count`` completed requests' admission: pending slots and
-        budget bytes (waking any blocked submitters)."""
-        if self.budget is not None and self._item_nbytes:
+    def _retire_admissions(self, state: _TenantState, count: int) -> None:
+        """Return ``count`` completed requests' admission: the tenant's
+        pending slots and budget bytes (waking any blocked submitters)."""
+        budget = state.budget if state.budget is not None else self.budget
+        nbytes = state.binding.item_nbytes
+        if budget is not None and nbytes:
             for _ in range(count):
-                self.budget.release(self._item_nbytes)
+                budget.release(nbytes)
         with self._inflight_lock:
+            state.inflight -= count
             self._inflight -= count
             if self._inflight == 0:
                 self._idle.set()
             self._inflight_lock.notify_all()
 
-    def measurement(self):
+    def measurement(self, tenant: str | None = None):
         """Stage occupancy per item *since the previous call* (windowed, for
-        the recalibrator).
+        the recalibrator) — scheduler-wide, or for one tenant.
 
         Host time is normalized by items that went through the host stage
         and device time by completed items — dividing both by completions
@@ -464,14 +776,27 @@ class RequestScheduler:
         from repro.runtime.recalibration import StageMeasurement
 
         with self._stats_lock:
-            cur = (
-                self.stats.host_busy_seconds,
-                self.stats.host_items,
-                self.stats.device_busy_seconds,
-                self.stats.completed,
-            )
-            prev = self._meas_snapshot
-            self._meas_snapshot = cur
+            if tenant is None:
+                src = self.stats
+                prev = self._meas_snapshot
+                cur = (
+                    src.host_busy_seconds,
+                    src.host_items,
+                    src.device_busy_seconds,
+                    src.completed,
+                )
+                self._meas_snapshot = cur
+            else:
+                state = self._state(tenant)
+                src = state.stats
+                prev = state.meas_snapshot
+                cur = (
+                    src.host_busy_seconds,
+                    src.host_items,
+                    src.device_busy_seconds,
+                    src.completed,
+                )
+                state.meas_snapshot = cur
         host_busy, host_items = cur[0] - prev[0], cur[1] - prev[1]
         dev_busy, completed = cur[2] - prev[2], cur[3] - prev[3]
         return StageMeasurement(

@@ -47,17 +47,29 @@ class HostStream:
     def __init__(self, pool: "WorkerPool", num_workers: int):
         self._q: queue.Queue = queue.Queue(maxsize=pool.queue_depth)
         self._budget = pool.budget
+        self._budget_for = pool.budget_for
         self._item_nbytes = pool.item_nbytes
         self._num_workers = num_workers
         self._done_workers = 0
         self._threads: list[threading.Thread] = []
         self._lock = threading.Lock()
         self._cancelled = False
-        self._admitted = 0  # budget admissions by workers
-        self._released = 0  # matching releases by the consumer
+        # budget admissions/releases, per budget object (multi-tenant runs
+        # charge each item's bytes to its tenant's child budget)
+        self._admitted: dict[int, list] = {}  # id(budget) -> [budget, count]
+        self._released: dict[int, int] = {}  # id(budget) -> count
         self._reconciled = False
         self.host_busy_seconds = 0.0
         self.errors: list[BaseException] = []
+
+    def _budget_of(self, idx: int | None) -> "MemoryBudget | None":
+        """The admission budget charged for item ``idx`` (tenant-scoped when
+        the pool has a ``budget_for`` map, the shared budget otherwise)."""
+        if self._budget_for is not None and idx is not None:
+            b = self._budget_for(idx)
+            if b is not None:
+                return b
+        return self._budget
 
     def get(self, timeout: float | None = None):
         while True:
@@ -69,12 +81,16 @@ class HostStream:
                 continue
             return msg
 
-    def release_item(self) -> None:
-        """Return one item's budget bytes once the consumer has staged it."""
-        if self._budget is not None and self._item_nbytes:
+    def release_item(self, idx: int | None = None) -> None:
+        """Return one item's budget bytes once the consumer has staged it.
+
+        Tenant-tagged runs pass the item index so the release lands on the
+        same (tenant) budget the worker admitted against."""
+        budget = self._budget_of(idx)
+        if budget is not None and self._item_nbytes:
             with self._lock:
-                self._released += 1
-            self._budget.release(self._item_nbytes)
+                self._released[id(budget)] = self._released.get(id(budget), 0) + 1
+            budget.release(self._item_nbytes)
 
     def cancel(self) -> None:
         """Unstick producers after the consumer abandons the stream."""
@@ -88,21 +104,24 @@ class HostStream:
     def wait(self, timeout: float | None = None) -> None:
         """Join the worker threads; never raises.  Once every worker has
         exited, admissions that never reached the consumer (worker errors,
-        cancellation drops) are released back to the budget — otherwise a
+        cancellation drops) are released back to their budgets — otherwise a
         failed run would permanently shrink the byte headroom."""
         for t in self._threads:
             t.join(timeout)
         if (
-            self._budget is not None
-            and self._item_nbytes
+            self._item_nbytes
             and not self._reconciled
             and not any(t.is_alive() for t in self._threads)
         ):
             self._reconciled = True
             with self._lock:
-                leaked = self._admitted - self._released
-            for _ in range(leaked):
-                self._budget.release(self._item_nbytes)
+                leaks = [
+                    (budget, count - self._released.get(bid, 0))
+                    for bid, (budget, count) in self._admitted.items()
+                ]
+            for budget, leaked in leaks:
+                for _ in range(leaked):
+                    budget.release(self._item_nbytes)
 
     def join(self) -> None:
         self.wait()
@@ -124,6 +143,9 @@ class WorkerPool:
       budget: optional admission controller; ``item_nbytes`` are admitted
         before each ``host_fn`` call.  The *consumer* owns the matching
         ``budget.release(item_nbytes)`` once the item leaves the queue.
+      budget_for: optional item-index → budget map for multi-tenant runs —
+        each item's bytes are admitted against (and released to) its
+        tenant's budget; indices it maps to None fall back to ``budget``.
     """
 
     def __init__(
@@ -134,12 +156,14 @@ class WorkerPool:
         worker_state_factory: Callable[[], Any] | None = None,
         budget: MemoryBudget | None = None,
         item_nbytes: int = 0,
+        budget_for: Callable[[int], MemoryBudget | None] | None = None,
     ):
         self.host_fn = host_fn
         self.num_workers = max(1, int(num_workers))
         self.queue_depth = max(1, int(queue_depth))
         self.worker_state_factory = worker_state_factory
         self.budget = budget
+        self.budget_for = budget_for
         self.item_nbytes = int(item_nbytes)
 
     # ------------------------------------------------------------- streaming
@@ -172,17 +196,19 @@ class WorkerPool:
                     idx = next_index(wid)
                     if idx is None:
                         break
-                    if self.budget is not None and self.item_nbytes:
+                    budget = stream._budget_of(idx)
+                    if budget is not None and self.item_nbytes:
                         # bound in-flight decoded bytes: admit before decode
                         admitted = False
                         while not stream._cancelled:
-                            if self.budget.admit(self.item_nbytes, timeout=0.1):
+                            if budget.admit(self.item_nbytes, timeout=0.1):
                                 admitted = True
                                 break
                         if not admitted:  # cancelled while waiting
                             return
                         with stream._lock:
-                            stream._admitted += 1
+                            entry = stream._admitted.setdefault(id(budget), [budget, 0])
+                            entry[1] += 1
                     t_in = time.perf_counter()
                     arr = (
                         self.host_fn(items[idx], state)

@@ -15,8 +15,17 @@ Resource governance comes from the runtime's memory subsystem
 an overloaded server backpressures or sheds load at :meth:`submit` —
 ``admission='reject'`` surfaces as :class:`repro.runtime.SchedulerSaturated`
 to the caller, which is the signal to return HTTP 429 upstream.
-:meth:`VisionServingEngine.stats` exposes pool/budget/queue occupancy for
-dashboards.
+
+The serving layer is **multi-tenant**: declare
+:class:`~repro.runtime.TenantConfig`\\ s on ``RuntimeConfig.tenants`` and
+pass ``tenant=`` to :meth:`submit`.  Tenants get weighted-fair service
+(a weight-4 tenant receives 4× a weight-1 tenant's throughput under
+saturation), per-tenant admission quotas (saturation raises for the
+bursting tenant only), per-tenant byte budgets carved from the global
+one, and — when a tenant pins its own ``model`` — a dedicated compiled
+plan with its own recalibrated host/device split.
+:meth:`VisionServingEngine.stats` exposes pool/budget/queue occupancy,
+per-tenant counters, and program-cache hit/eviction rates for dashboards.
 """
 
 from __future__ import annotations
@@ -28,7 +37,7 @@ import numpy as np
 
 from repro.core.planner import ModelSpec
 from repro.preprocessing.formats import ImageFormat, StoredImage
-from repro.runtime import CompletedRequest, RuntimeConfig, SmolRuntime
+from repro.runtime import DEFAULT_TENANT, CompletedRequest, RuntimeConfig, SmolRuntime
 
 
 @dataclasses.dataclass
@@ -38,6 +47,7 @@ class VisionResponse:
     scores: np.ndarray
     latency: float
     error: BaseException | None = None
+    tenant: str = DEFAULT_TENANT
 
 
 class VisionServingEngine:
@@ -82,23 +92,29 @@ class VisionServingEngine:
         self.stop()
 
     # --------------------------------------------------------------- serving
-    def submit(self, image: StoredImage | np.ndarray) -> int:
+    def submit(self, image: StoredImage | np.ndarray, tenant: str = DEFAULT_TENANT) -> int:
         if not self._started:
             raise RuntimeError("start() the engine before submitting requests")
-        uid = self.runtime.submit(image)
+        uid = self.runtime.submit(image, tenant=tenant)
         self._since_recal += 1
         if self.recalibrate_every and self._since_recal >= self.recalibrate_every:
             self._since_recal = 0
-            self.runtime.serving_recalibrate()
+            # model-pinned tenants recalibrate their own split from their
+            # own measurement window; everyone else moves the shared one
+            self.runtime.serving_recalibrate(tenant if tenant != DEFAULT_TENANT else None)
         return uid
 
     def drain(self, timeout: float | None = None) -> list[VisionResponse]:
         return [self._to_response(r) for r in self.runtime.drain(timeout=timeout)]
 
-    def serve_batch(self, images: Sequence[StoredImage | np.ndarray]) -> list[VisionResponse]:
+    def serve_batch(
+        self,
+        images: Sequence[StoredImage | np.ndarray],
+        tenant: str = DEFAULT_TENANT,
+    ) -> list[VisionResponse]:
         """Convenience: submit all, wait, return responses in request order."""
         for img in images:
-            self.submit(img)
+            self.submit(img, tenant=tenant)
         self.runtime.flush()
         return self.drain()
 
@@ -137,7 +153,9 @@ class VisionServingEngine:
         # already released from the reorder buffer, so failures travel as
         # data: callers check response.error.
         if r.error is not None:
-            return VisionResponse(r.uid, -1, np.empty(0), r.latency, error=r.error)
+            return VisionResponse(
+                r.uid, -1, np.empty(0), r.latency, error=r.error, tenant=r.tenant
+            )
         scores = np.asarray(r.output)
         pred = int(np.argmax(scores)) if scores.ndim else int(scores)
-        return VisionResponse(r.uid, pred, scores, r.latency)
+        return VisionResponse(r.uid, pred, scores, r.latency, tenant=r.tenant)

@@ -1,0 +1,465 @@
+"""Multi-tenant serving: weighted-fair scheduling, per-tenant admission,
+hierarchical memory budgets, LRU program-cache eviction, and measured
+dispatch overhead.
+
+Scheduler timing tests use sleep-controlled stage functions so they assert
+the *policy* (who gets served) rather than box-dependent throughput.
+"""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.device_compiler import (
+    ProgramCache,
+    measure_dispatch_overhead,
+)
+from repro.core.engine import PipelinedEngine
+from repro.runtime import (
+    MemoryBudget,
+    MemoryConfig,
+    RequestScheduler,
+    SchedulerSaturated,
+    TenantConfig,
+)
+
+
+def _scheduler(tenants=None, host_sleep=0.0, device_sleep=0.0, **kw):
+    def host_fn(item):
+        if host_sleep:
+            time.sleep(host_sleep)
+        return np.full((4,), float(item), np.float32)
+
+    def device_fn(batch):
+        if device_sleep:
+            time.sleep(device_sleep)
+        return batch
+
+    sched = RequestScheduler(
+        host_fn,
+        device_fn,
+        (4,),
+        np.float32,
+        max_batch=4,
+        num_workers=2,
+        max_wait_ms=1.0,
+        tenants=tenants,
+        **kw,
+    )
+    sched.start()
+    return sched
+
+
+# ------------------------------------------------------------ tenant configs
+def test_zero_weight_tenant_rejected():
+    with pytest.raises(ValueError, match="weight"):
+        TenantConfig("freeloader", weight=0.0)
+    with pytest.raises(ValueError, match="weight"):
+        TenantConfig("antagonist", weight=-1.0)
+
+
+def test_tenant_config_validation():
+    with pytest.raises(ValueError):
+        TenantConfig("")
+    with pytest.raises(ValueError):
+        TenantConfig("t", max_pending=0)
+    with pytest.raises(ValueError):
+        TenantConfig("t", budget_bytes=0)
+    with pytest.raises(ValueError):
+        TenantConfig("t", floor_bytes=-1)
+
+
+def test_unknown_tenant_submit_raises():
+    sched = _scheduler(tenants=[TenantConfig("a")])
+    try:
+        with pytest.raises(KeyError, match="nobody"):
+            sched.submit(1, tenant="nobody")
+    finally:
+        sched.stop()
+
+
+def test_duplicate_tenant_rejected():
+    with pytest.raises(ValueError, match="duplicate"):
+        RequestScheduler(
+            lambda x: np.zeros((4,), np.float32),
+            lambda b: b,
+            (4,),
+            np.float32,
+            max_batch=2,
+            tenants=[TenantConfig("a"), TenantConfig("a")],
+        )
+
+
+# --------------------------------------------------------- per-tenant limits
+def test_scheduler_saturated_per_tenant_not_globally():
+    # tenant a saturates its own max_pending; tenant b must keep admitting
+    sched = _scheduler(
+        tenants=[TenantConfig("a", max_pending=1), TenantConfig("b", max_pending=8)],
+        host_sleep=0.2,
+        admission="reject",
+    )
+    try:
+        sched.submit(1, tenant="a")
+        with pytest.raises(SchedulerSaturated, match="'a'"):
+            sched.submit(2, tenant="a")
+        sched.submit(3, tenant="b")  # unaffected by a's saturation
+        sched.submit(4, tenant="b")
+        assert sched.tenants["a"].rejected == 1
+        assert sched.tenants["b"].rejected == 0
+        sched.flush(timeout=30.0)
+    finally:
+        sched.stop()
+    done = sched.drain()
+    assert sorted(d.tenant for d in done) == ["a", "b", "b"]
+
+
+def test_byte_quota_is_per_tenant():
+    # item footprint is 16B (shape (4,) float32); tenant a's quota holds
+    # exactly one item, b's is ample — a's exhaustion never touches b
+    sched = _scheduler(
+        tenants=[
+            TenantConfig("a", budget_bytes=16),
+            TenantConfig("b", budget_bytes=1024),
+        ],
+        host_sleep=0.2,
+        admission="reject",
+        budget=MemoryBudget(4096),
+    )
+    try:
+        sched.submit(1, tenant="a")
+        with pytest.raises(SchedulerSaturated, match="'a'"):
+            sched.submit(2, tenant="a")
+        for i in range(4):
+            sched.submit(10 + i, tenant="b")
+        sched.flush(timeout=30.0)
+    finally:
+        sched.stop()
+    assert sched.tenants["a"].completed == 1
+    assert sched.tenants["b"].completed == 4
+
+
+# ------------------------------------------------------------- fair queuing
+def test_weighted_fairness_4to1_under_saturation():
+    sched = _scheduler(
+        tenants=[
+            TenantConfig("gold", weight=4.0, max_pending=16),
+            TenantConfig("bronze", weight=1.0, max_pending=16),
+        ],
+        device_sleep=0.003,  # the device stream is the bottleneck
+    )
+    stop_at = time.perf_counter() + 1.0
+
+    def feeder(name):
+        i = 0
+        while time.perf_counter() < stop_at:
+            sched.submit(i, tenant=name)  # blocks at max_pending
+            i += 1
+
+    try:
+        threads = [threading.Thread(target=feeder, args=(n,)) for n in ("gold", "bronze")]
+        for t in threads:
+            t.start()
+        while time.perf_counter() < stop_at:
+            time.sleep(0.02)
+        counts = {n: sched.tenants[n].completed for n in ("gold", "bronze")}
+        for t in threads:
+            t.join()
+        sched.flush(timeout=30.0)
+    finally:
+        sched.stop()
+    ratio = counts["gold"] / max(1, counts["bronze"])
+    assert 3.0 <= ratio <= 5.0, f"4:1 weights gave throughput ratio {ratio:.2f} ({counts})"
+    # device time attribution follows the same proportions
+    stats = sched.tenants
+    assert stats["gold"].device_busy_seconds > stats["bronze"].device_busy_seconds
+
+
+def test_starvation_bounded_under_100_to_1_burst():
+    # a 100-item burst from one tenant is queued before a small tenant's 4
+    # items arrive; equal weights mean the late tenant must be served
+    # immediately-ish, not after the burst drains
+    sched = _scheduler(
+        tenants=[TenantConfig("burst"), TenantConfig("small")],
+        device_sleep=0.002,
+    )
+    try:
+        for i in range(100):
+            sched.submit(i, tenant="burst")
+        for i in range(4):
+            sched.submit(1000 + i, tenant="small")
+        sched.flush(timeout=60.0)
+        done = sched.drain()
+    finally:
+        sched.stop()
+    by_tenant = {"burst": [], "small": []}
+    for d in done:
+        assert d.error is None
+        by_tenant[d.tenant].append(d.completed_at)
+    assert len(by_tenant["small"]) == 4
+    last_small = max(by_tenant["small"])
+    burst_before = sum(1 for t in by_tenant["burst"] if t <= last_small)
+    # equal weights: the 4 small items ride in roughly the first alternating
+    # batches; well under half the burst may complete first
+    assert burst_before <= 40, (
+        f"{burst_before}/100 burst items completed before the small tenant finished"
+    )
+
+
+def test_default_tenant_still_works_untenanted():
+    sched = _scheduler()
+    try:
+        uids = [sched.submit(i) for i in range(6)]
+        sched.flush(timeout=30.0)
+        done = sched.drain()
+    finally:
+        sched.stop()
+    assert [d.uid for d in done] == uids
+    assert all(d.tenant == "default" for d in done)
+
+
+# ------------------------------------------------------ hierarchical budgets
+def test_budget_child_charges_parent_and_releases_up():
+    root = MemoryBudget(1000)
+    a = root.child("a", weight=1.0)
+    assert a.try_admit(300)
+    assert root.in_flight_bytes == 300
+    assert a.in_flight_bytes == 300
+    a.release(300)
+    assert root.in_flight_bytes == 0
+
+
+def test_budget_floor_is_guaranteed_against_siblings():
+    root = MemoryBudget(1000)
+    a = root.child("a", weight=1.0, floor_bytes=400)
+    b = root.child("b", weight=1.0, floor_bytes=200)
+    # b fills its weight-derived cap: floor 200 + half the 400 unfloored
+    assert b.try_admit(400)
+    assert not b.try_admit(50)  # past b's cap
+    # a's floor must still be fully available despite b's spill
+    assert a.try_admit(400)
+    a.release(400)
+    b.release(400)
+
+
+def test_budget_weighted_soft_caps():
+    root = MemoryBudget(900)
+    hog = root.child("hog", weight=2.0)
+    meek = root.child("meek", weight=1.0)
+    # caps: hog 600, meek 300 (no floors)
+    assert hog.try_admit(600)
+    assert not hog.try_admit(10)
+    assert meek.try_admit(300)
+    assert not meek.try_admit(10)
+
+
+def test_budget_explicit_cap_and_oversize_idle_rule():
+    root = MemoryBudget(1000)
+    c = root.child("c", max_bytes=100)
+    assert c.try_admit(60)
+    assert not c.try_admit(60)  # over the explicit quota
+    c.release(60)
+    # degenerate rule (same as the flat budget): an oversize request is
+    # admitted only when the child is idle, so big items serialize rather
+    # than deadlock
+    assert c.try_admit(150)
+    assert not c.try_admit(1)
+    c.release(150)
+
+
+def test_budget_floors_must_fit_parent():
+    root = MemoryBudget(100)
+    root.child("a", floor_bytes=80)
+    with pytest.raises(ValueError, match="floors"):
+        root.child("b", floor_bytes=40)
+
+
+def test_budget_root_direct_admissions_respect_floors():
+    root = MemoryBudget(100)
+    root.child("a", floor_bytes=80)
+    # untenanted traffic may only use the unfloored 20
+    assert root.try_admit(20)
+    assert not root.try_admit(10)
+    root.release(20)
+
+
+def test_budget_oversize_idle_escape_never_eats_floors():
+    # the oversize-when-idle rule must not let untenanted root traffic park
+    # on floor-reserved bytes: a floored child's within-floor admissions
+    # are guaranteed even against an otherwise-idle budget
+    root = MemoryBudget(100)
+    gold = root.child("gold", floor_bytes=80)
+    assert not root.try_admit(50)  # > 20B unfloored headroom, even while idle
+    assert gold.try_admit(80)  # the full floor is still available
+    gold.release(80)
+    # flat budgets (no floored children) keep the legacy escape: one item
+    # bigger than the whole budget serializes instead of deadlocking
+    flat = MemoryBudget(100)
+    assert flat.try_admit(150)
+
+
+# ---------------------------------------------------------- program cache
+def test_program_cache_lru_eviction_keeps_recently_used():
+    cache = ProgramCache(max_entries=2)
+    cache["a"] = "prog_a"
+    cache["b"] = "prog_b"
+    assert cache["a"] == "prog_a"  # touch a: b becomes the LRU entry
+    cache["c"] = "prog_c"  # evicts b, NOT the just-used a
+    assert "a" in cache and "c" in cache and "b" not in cache
+    stats = cache.stats()
+    assert stats.entries == 2
+    assert stats.misses == 3  # three compiles
+    assert stats.hits == 1
+    assert stats.evictions == 1
+
+
+def test_program_cache_active_tenant_program_stays_resident():
+    # the serving pattern: tenant A's program is looked up on every rebind
+    # while other tenants churn fresh programs through a tiny cache — A's
+    # program must never be evicted
+    cache = ProgramCache(max_entries=2)
+    cache["tenant_a"] = "prog_a"
+    for i in range(8):
+        cache["tenant_a"]  # A serves traffic (refreshes recency)
+        cache[f"churn_{i}"] = f"prog_{i}"  # another tenant compiles
+    assert "tenant_a" in cache
+    assert cache.stats().evictions == 7  # only the churn programs rotated
+
+
+def test_program_cache_validation():
+    with pytest.raises(ValueError):
+        ProgramCache(max_entries=0)
+
+
+# ------------------------------------------------- engine tenant accounting
+def test_engine_accounts_staging_to_tenants():
+    eng = PipelinedEngine(
+        lambda i: np.full((4,), float(i), np.float32),
+        lambda b: b,
+        (4,),
+        np.float32,
+        batch_size=4,
+        num_workers=2,
+        jit=False,
+        memory=MemoryConfig(budget_bytes=1 << 16),
+    )
+    eng.configure_tenants([TenantConfig("a", weight=2.0), TenantConfig("b")])
+    tenants = ["a" if i % 3 else "b" for i in range(12)]
+    out, stats = eng.run(list(range(12)), tenants=tenants)
+    assert [o[0] for o in out] == [float(i) for i in range(12)]
+    assert stats.tenant_items == {"a": 8, "b": 4}
+    assert stats.tenant_bytes == {"a": 8 * 16, "b": 4 * 16}
+    # per-tenant child budgets saw the traffic and drained fully
+    for name, count in (("a", 8), ("b", 4)):
+        bstats = eng.tenant_budgets[name].stats()
+        assert bstats.admitted == count
+        assert bstats.in_flight_bytes == 0
+
+
+def test_engine_tenants_must_align_with_items():
+    eng = PipelinedEngine(
+        lambda i: np.zeros((4,), np.float32),
+        lambda b: b,
+        (4,),
+        np.float32,
+        batch_size=2,
+        jit=False,
+    )
+    with pytest.raises(ValueError, match="align"):
+        eng.run([1, 2, 3], tenants=["a"])
+
+
+# ------------------------------------------------- measured dispatch overhead
+def test_measured_dispatch_overhead_positive_and_cached():
+    t1 = measure_dispatch_overhead(iters=4, force=True)
+    assert 0.0 < t1 < 1.0
+    assert measure_dispatch_overhead(iters=4) == t1  # cached per process
+
+
+# ------------------------------------------------------- facade integration
+def _facade_runtime(tenants):
+    import jax
+
+    from repro.core.planner import ModelSpec
+    from repro.preprocessing.formats import ImageFormat, StoredImage
+    from repro.runtime import RuntimeConfig, SmolRuntime
+
+    INPUT = 32
+    fmt = ImageFormat("jpeg", None, 95)
+    rng = np.random.default_rng(0)
+    corpus = [
+        StoredImage.from_array(rng.integers(0, 255, (64, 64, 3)).astype(np.uint8), [fmt])
+        for _ in range(8)
+    ]
+
+    def linear(seed):
+        w = np.asarray(
+            jax.random.normal(jax.random.PRNGKey(seed), (3 * INPUT * INPUT, 5)) * 0.02
+        )
+        return lambda x: x.reshape(x.shape[0], -1) @ w
+
+    models = [
+        ModelSpec("fast", INPUT, exec_throughput=10_000.0, accuracy_by_format={fmt.key: 0.9}),
+        ModelSpec("slow", INPUT, exec_throughput=500.0, accuracy_by_format={fmt.key: 0.97}),
+    ]
+    cfg = RuntimeConfig(
+        batch_size=4,
+        num_workers=2,
+        memory=MemoryConfig(budget_bytes=1 << 22, max_pending=32),
+        tenants=tenants,
+    )
+    runtime = SmolRuntime(
+        models,
+        [fmt],
+        {"fast": linear(0), "slow": linear(1)},
+        corpus[:3],
+        config=cfg,
+        decode_time=lambda f: 1e-4,
+    )
+    return runtime, corpus
+
+
+def test_facade_pinned_model_tenants_get_own_plans_and_recalibrators():
+    runtime, corpus = _facade_runtime(
+        (
+            TenantConfig("gold", weight=4.0, floor_bytes=1 << 20),
+            TenantConfig("pinned", weight=1.0, model="slow"),
+        )
+    )
+    runtime.start_serving()
+    try:
+        uids = {}
+        for i, img in enumerate(corpus):
+            name = "gold" if i % 2 else "pinned"
+            uids[runtime.submit(img, tenant=name)] = name
+        runtime.flush(timeout=60.0)
+        done = runtime.drain()
+        assert len(done) == len(corpus)
+        assert all(d.error is None for d in done)
+        assert all(uids[d.uid] == d.tenant for d in done)
+        stats = runtime.stats()
+        tstats = stats["tenants"]
+        # the pinned tenant serves through its own model's plan
+        assert tstats["pinned"]["plan"].startswith("slow@")
+        assert tstats["gold"]["plan"].startswith("fast@")
+        # two programs compiled (fast plan + slow plan), none evicted
+        assert stats["program_cache"].misses == 2
+        # the gold tenant's budget child carries its floor
+        assert tstats["gold"]["budget"].floor_bytes == 1 << 20
+        assert tstats["gold"]["budget"].in_flight_bytes == 0
+        # per-tenant recalibration runs against the pinned tenant's own
+        # recalibrator and tags its events
+        runtime.serving_recalibrate("pinned")
+        assert runtime.recalibrations[-1].tenant == "pinned"
+    finally:
+        runtime.stop_serving()
+
+
+def test_facade_rejects_unknown_pinned_model():
+    from repro.runtime import RuntimeConfig
+
+    with pytest.raises(ValueError, match="duplicate"):
+        RuntimeConfig(tenants=(TenantConfig("a"), TenantConfig("a")))
+    with pytest.raises(ValueError, match="unknown models"):
+        _facade_runtime((TenantConfig("t", model="missing-model"),))
