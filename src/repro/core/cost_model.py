@@ -85,6 +85,106 @@ def device_stage_seconds(
     return n_dispatch_groups * dispatch_overhead_s + total_flops / device_ops_per_sec
 
 
+@dataclasses.dataclass(frozen=True)
+class CoeffGeometry:
+    """Static stream geometry the split-decode cost model prices from.
+
+    Derived once per (format, calibration sample) from the SJPG header —
+    the analogue of ``decoded_meta`` for the coefficient domain."""
+
+    height: int
+    width: int
+    channels: int
+    n_br: int  # luma block rows
+    n_bc: int  # luma block cols
+    subsample: bool  # True = 4:2:0
+
+    @classmethod
+    def from_header(cls, hdr) -> "CoeffGeometry":
+        return cls(hdr.height, hdr.width, hdr.channels, hdr.n_br, hdr.n_bc, bool(hdr.subsample))
+
+    @property
+    def chroma_grid(self) -> tuple[int, int]:
+        # the codec owns the 4:2:0 grid formula; pricing must never drift
+        # from the tensors jpeg.stage_coefficients actually stages
+        from repro.preprocessing import jpeg
+
+        return jpeg.chroma_grid(self)
+
+    @property
+    def n_blocks(self) -> int:
+        n = self.n_br * self.n_bc
+        if self.channels == 3:
+            cbr, cbc = self.chroma_grid
+            n += 2 * cbr * cbc
+        return n
+
+    def scaled_hw(self, factor: int) -> tuple[int, int]:
+        from repro.preprocessing import jpeg
+
+        return jpeg.scaled_size(self.height, factor), jpeg.scaled_size(self.width, factor)
+
+
+def coeff_staging_bytes(geom: CoeffGeometry, layout: str) -> int:
+    """Host->device staging bytes per item for one coefficient layout.
+
+    ``"padded"`` stages every plane on the luma block grid (exact for
+    4:4:4; 4:2:0 pays 4x on the chroma share for a trivially sliceable
+    tensor); ``"packed"`` concatenates planes at native block density
+    (compact for 4:2:0).  Both are int16 zigzag blocks of 64.
+    """
+    if layout == "padded":
+        return geom.channels * geom.n_br * geom.n_bc * 64 * 2
+    if layout == "packed":
+        return geom.n_blocks * 64 * 2
+    raise ValueError(f"layout must be 'padded' or 'packed', got {layout!r}")
+
+
+def coeff_staging_layout(geom: CoeffGeometry) -> str:
+    """THE staging-layout rule: the byte-cheaper layout, ties to padded
+    (packed for 4:2:0, padded for 4:4:4).  The placement optimizer, the
+    planner's host-stage timing probe and the facade all derive the
+    layout from here so pricing, measurement and execution never stage
+    different tensors."""
+    return min(("padded", "packed"), key=lambda s: coeff_staging_bytes(geom, s))
+
+
+def coeff_device_flops(geom: CoeffGeometry, factor: int = 1) -> float:
+    """Weighted device-op count of the coefficient-domain decode stages at
+    one scaled-IDCT factor: unzigzag + fused dequant+IDCT matmul +
+    unblockify + chroma upsample (4:2:0) + color conversion.  Uses the
+    same dtype-weighted arithmetic-op convention as ``PreprocOp.flops``
+    so the placement optimizer can compare coefficient-domain and
+    pixel-domain work on one scale.
+
+    The IDCT matmul term is deliberately factor-INDEPENDENT: the kernel
+    zero-pads ``kron(A, A)`` to the full (64, 64) block for every point
+    (kernels/idct — same MXU lane cost regardless), so pricing the
+    truncated basis at ``64 x point^2`` would predict phantom savings the
+    device never delivers.  What a smaller factor genuinely buys is every
+    *pixel-proportional* stage — unblockify, chroma upsample, color
+    conversion (here) and the preprocessing chain re-costed on the scaled
+    grid (``enumerate_coeff_options``) — shrinking by ``factor^2``.
+    """
+    point = 8 // factor
+    w_f32, w_i16 = 4.0, 2.0
+    # unzigzag gather: one move per staged coefficient (int16)
+    flops = geom.n_blocks * 64.0 * w_i16
+    # fused dequant+IDCT: one (64 -> 64, zero-padded) matmul per block
+    # (2 flops/MAC) — executed at full width for every point, see above
+    flops += geom.n_blocks * 2.0 * 64.0 * 64.0 * w_f32
+    # unblockify: one move per *produced* pixel (point^2 per block)
+    flops += geom.n_blocks * float(point * point) * w_f32
+    hs, ws = geom.scaled_hw(factor)
+    if geom.channels == 3:
+        if geom.subsample:
+            # nearest 2x2 chroma upsample: one move per upsampled pixel
+            flops += 2.0 * hs * ws * w_f32
+        # JFIF YCbCr->RGB: 3x3 matmul + round/clip per pixel
+        flops += (18.0 + 2.0 * 3.0) * hs * ws * w_f32
+    return flops
+
+
 ESTIMATORS: dict[str, Callable[..., float]] = {
     "blazeit": estimate_blazeit,
     "tahoma": estimate_tahoma,

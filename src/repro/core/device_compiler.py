@@ -361,6 +361,10 @@ class DevicePreprocProgram:
     in_meta: TensorMeta
     out_meta: TensorMeta  # preprocessing output (the DNN's input)
     dispatch_count: int = 0
+    # split-decode programs only: the scaled-IDCT resolution divisor and the
+    # coefficient staging layout this program was compiled for
+    coeff_factor: int | None = None
+    coeff_layout: str | None = None
 
     @property
     def dispatches_per_batch(self) -> int:
@@ -485,6 +489,8 @@ def compile_coeff_program(
     device_ops: Sequence[PreprocOp],
     model_fn: Callable,
     batch_size: int,
+    factor: int = 1,  # scaled-IDCT resolution divisor: 1 full, 2 half, 4 quarter
+    layout: str = "padded",  # coefficient staging layout ("padded" | "packed")
     impl: str = "auto",
     interpret: bool | None = None,
     donate: bool = True,
@@ -494,29 +500,43 @@ def compile_coeff_program(
     """Split-decode program: quantized DCT coefficients in, predictions out.
 
     The host stops after the entropy stage (``jpeg.decode_to_coefficients``)
-    and stages ``(C, n_br, n_bc, 64)`` int16 zigzag blocks; this program
-    runs the dense remainder on the accelerator in ONE dispatch:
-    unzigzag -> fused dequantize+IDCT (``kernels/idct`` MXU kernel, one per
-    quant table) -> unblockify -> JFIF color conversion -> the fused
-    resize/normalize stage -> DNN.  4:2:0-subsampled streams are rejected
-    (chroma planes are ragged; the pixel path handles them).
+    and stages one int16 zigzag-coefficient tensor per item
+    (``jpeg.stage_coefficients``: the padded luma-grid layout or the packed
+    per-plane layout — 4:2:0's quarter-density chroma fits either way);
+    this program runs the dense remainder on the accelerator in ONE
+    dispatch: unzigzag -> fused dequantize + (scaled) IDCT
+    (``kernels/idct`` MXU kernel at ``point = 8 // factor``, one call per
+    quant table) -> unblockify -> 2x2 nearest chroma upsample (4:2:0) ->
+    JFIF color conversion -> the fused resize/normalize stage -> DNN.
+    ``factor > 1`` decodes straight to reduced resolution (paper §6.4 /
+    libjpeg draft): the pixel grid entering the preprocessing chain is
+    ``(ceil(h/factor), ceil(w/factor))``, so a plan that immediately
+    downsamples never pays for full-resolution pixels at all.
     """
     from repro.preprocessing import dct as dct_np
     from repro.preprocessing import jpeg as jpeg_mod
 
-    if header.subsample:
-        raise ValueError("split-decode program requires 4:4:4 (no chroma subsampling)")
     if header.channels != 3:
         raise ValueError("split-decode program supports 3-channel streams")
+    if factor not in (1, 2, 4):
+        raise ValueError(f"scaled-IDCT factor must be 1, 2 or 4, got {factor}")
+    if layout not in ("padded", "packed"):
+        raise ValueError(f"layout must be 'padded' or 'packed', got {layout!r}")
     if interpret is None:
         interpret = default_interpret()
     impl = resolve_impl(impl)
     n_br, n_bc = header.n_br, header.n_bc
-    height, width = header.height, header.width
+    cbr, cbc = jpeg_mod.chroma_grid(header)
+    subsample = bool(header.subsample)
+    point = 8 // factor
+    hs = jpeg_mod.scaled_size(header.height, factor)
+    ws = jpeg_mod.scaled_size(header.width, factor)
     qtables = jpeg_mod._qtables(header.quality, header.channels)
-    pixel_meta = TensorMeta((height, width, 3), "uint8", "HWC")
+    pixel_meta = TensorMeta((hs, ws, 3), "uint8", "HWC")
+    in_shape = jpeg_mod.staged_coeff_shape(header, layout)
     key = (
-        ("CoeffDecode", header.quality, n_br, n_bc, height, width),
+        ("CoeffDecode", header.quality, n_br, n_bc, header.height, header.width,
+         subsample, factor, layout),
         program_cache_key(
             device_ops, pixel_meta, batch_size, "fused", impl, model_key, interpret, donate
         ),
@@ -543,32 +563,59 @@ def compile_coeff_program(
         out_meta = P.chain_out_meta(list(device_ops), pixel_meta)
         pre_stages = tuple(op.name for op in device_ops)
 
-    def raw(batch):  # (N, 3, n_br, n_bc, 64) int16 zigzag coefficients
+    n_luma = n_br * n_bc
+    n_chroma = cbr * cbc
+
+    def raw(batch):  # one staged int16 zigzag-coefficient tensor per item
         n = batch.shape[0]
         zz = jnp.asarray(batch)
-        nat = zz[..., unzigzag].reshape(n, 3, n_br, n_bc, 8, 8)
-        # one fused dequant+IDCT kernel call per quant table (luma / chroma)
-        luma = dequant_idct(nat[:, 0].reshape(-1, 8, 8), qtables[0], interpret=interpret)
-        chroma = dequant_idct(nat[:, 1:].reshape(-1, 8, 8), qtables[1], interpret=interpret)
-        blocks = jnp.concatenate(
-            [luma.reshape(n, 1, n_br, n_bc, 8, 8), chroma.reshape(n, 2, n_br, n_bc, 8, 8)],
-            axis=1,
+        if layout == "packed":  # (N, n_luma + 2*n_chroma, 64)
+            luma_zz = zz[:, :n_luma]
+            chroma_zz = zz[:, n_luma:]
+        else:  # (N, 3, n_br, n_bc, 64); 4:2:0 chroma occupies the top-left
+            luma_zz = zz[:, 0].reshape(n, n_luma, 64)
+            chroma_zz = zz[:, 1:, :cbr, :cbc].reshape(n, 2 * n_chroma, 64)
+        # one fused dequant+(scaled-)IDCT kernel call per quant table
+        luma = dequant_idct(
+            luma_zz[..., unzigzag].reshape(-1, 8, 8),
+            qtables[0], point=point, interpret=interpret,
         )
-        planes = blocks.transpose(0, 1, 2, 4, 3, 5).reshape(n, 3, n_br * 8, n_bc * 8)
-        ycc = planes[:, :, :height, :width] + 128.0
+        chroma = dequant_idct(
+            chroma_zz[..., unzigzag].reshape(-1, 8, 8),
+            qtables[1], point=point, interpret=interpret,
+        )
+        y = (
+            luma.reshape(n, n_br, n_bc, point, point)
+            .transpose(0, 1, 3, 2, 4)
+            .reshape(n, n_br * point, n_bc * point)
+        )
+        c = (
+            chroma.reshape(n, 2, cbr, cbc, point, point)
+            .transpose(0, 1, 2, 4, 3, 5)
+            .reshape(n, 2, cbr * point, cbc * point)
+        )
+        if subsample:  # 2x2 nearest upsample back to the (scaled) luma grid
+            c = jnp.repeat(jnp.repeat(c, 2, axis=2), 2, axis=3)
+        ycc = jnp.concatenate([y[:, None, :hs, :ws], c[:, :, :hs, :ws]], axis=1) + 128.0
         rgb = jnp.einsum("rc,nchw->nrhw", rgb_mat, ycc - jnp.asarray([0.0, 128.0, 128.0])[:, None, None])
         rgb = jnp.clip(jnp.round(rgb), 0.0, 255.0)  # the decoded uint8 pixel grid
         return model_fn(preproc(rgb))
 
+    idct_stage = "dequant_idct[mxu]" if point == 8 else f"dequant_idct[mxu]/{point}pt"
+    decode_stages = ("unzigzag", idct_stage, "unblockify")
+    if subsample:
+        decode_stages += ("chroma_upsample[2x2]",)
     program = DevicePreprocProgram(
         fn=_jit(raw, donate),
         backend="fused",
         impl=impl,
         fused=fused,
-        stages=("unzigzag", "dequant_idct[mxu]", "unblockify", "ycbcr->rgb") + pre_stages,
+        stages=decode_stages + ("ycbcr->rgb",) + pre_stages,
         key=key,
-        in_meta=TensorMeta((3, n_br, n_bc, 64), "int16", "CHW"),
+        in_meta=TensorMeta(in_shape, "int16", "CHW"),
         out_meta=out_meta,
+        coeff_factor=factor,
+        coeff_layout=layout,
     )
     if cache is not None:
         cache[key] = program

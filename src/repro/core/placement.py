@@ -24,8 +24,14 @@ from __future__ import annotations
 import dataclasses
 from typing import Sequence
 
-from repro.core.cost_model import device_stage_seconds
-from repro.preprocessing.ops import PreprocOp, TensorMeta, chain_out_meta
+from repro.core.cost_model import (
+    CoeffGeometry,
+    coeff_device_flops,
+    coeff_staging_bytes,
+    coeff_staging_layout,
+    device_stage_seconds,
+)
+from repro.preprocessing.ops import PreprocOp, TensorMeta, chain_flops, chain_out_meta
 
 # Throughput ratio of the accelerator over one host worker for the same
 # weighted arithmetic op count.  Used only when measured timings are not
@@ -216,3 +222,172 @@ def choose_split(
 def placement_out_meta(placement: Placement, in_meta: TensorMeta) -> TensorMeta:
     m = chain_out_meta(list(placement.host_ops), in_meta)
     return chain_out_meta(list(placement.device_ops), m)
+
+
+# ------------------------------------------------- split decode (§6.4 x §6.3)
+SPLIT_DECODE_POLICIES = ("off", "auto", "full", "scaled")
+COEFF_FACTORS = (1, 2, 4)  # resolution divisors the scaled IDCT supports
+
+
+@dataclasses.dataclass(frozen=True)
+class SplitDecodeOption:
+    """One costed way of running the split-decode placement.
+
+    The host stops at the entropy stage and stages quantized coefficient
+    blocks; the device program runs dequant + (scaled) IDCT at
+    ``point = 8 // factor``, chroma upsampling (4:2:0), color conversion,
+    the preprocessing chain on the 1/factor-resolution pixel grid, and the
+    DNN — all ONE dispatch.  ``coeff_flops`` / ``chain_flops`` /
+    ``staging_bytes`` are the per-factor costs the planner and the
+    recalibrator learn over (ISSUE: per-factor coefficient-FLOP and
+    staging-byte costs).
+    """
+
+    factor: int  # 1 (full res), 2 (half), 4 (quarter)
+    point: int  # scaled-IDCT size = 8 // factor
+    layout: str  # coefficient staging layout: "padded" | "packed"
+    staging_bytes: int  # host->device bytes per item under `layout`
+    coeff_flops: float  # coefficient-domain decode flops at this factor
+    chain_flops: float  # preproc-chain flops on the scaled pixel grid
+    est_throughput: float
+    est_host_throughput: float
+    est_device_throughput: float
+
+
+def scaled_pixel_meta(geom: CoeffGeometry, factor: int) -> TensorMeta:
+    hs, ws = geom.scaled_hw(factor)
+    return TensorMeta((hs, ws, geom.channels), "uint8", "HWC")
+
+
+def coeff_factor_valid(
+    chain: Sequence[PreprocOp], geom: CoeffGeometry, factor: int
+) -> bool:
+    """Whether decoding at 1/factor still feeds the chain losslessly.
+
+    The scaled decode must (a) keep the chain's *output* meta identical to
+    the native-resolution plan (the DNN input contract), and (b) never
+    force a resize to upscale or a crop to exceed the scaled frame —
+    mirroring libjpeg draft semantics, where the scaled decode never
+    undershoots the requested target.  ``factor > 1`` additionally
+    requires a resize somewhere in the chain: without one, decoded
+    resolution IS the output resolution and reducing it would change the
+    answer, not just the arithmetic.
+    """
+    if factor == 1:
+        return True
+    native = scaled_pixel_meta(geom, 1)
+    scaled = scaled_pixel_meta(geom, factor)
+    try:
+        if chain_out_meta(list(chain), scaled) != chain_out_meta(list(chain), native):
+            return False
+    except AssertionError:
+        return False
+    m, has_resize = scaled, False
+    for op in chain:
+        spec = op.lowering_spec(m)
+        if spec is not None and spec.kind == "resize":
+            has_resize = True
+            oh, ow = spec.out_hw
+            h, w = m.spatial
+            if oh > h or ow > w:
+                return False  # scaled decode undershot the resample target
+        elif spec is not None and spec.kind == "crop":
+            t, l, ch, cw = spec.crop
+            h, w = m.spatial
+            if t < 0 or l < 0 or t + ch > h or l + cw > w:
+                return False
+        m = op.out_meta(m)
+    return has_resize
+
+
+def enumerate_coeff_options(
+    chain: Sequence[PreprocOp],
+    geom: CoeffGeometry,
+    host_entropy_time: float,
+    dnn_device_time: float,
+    device_ops_per_sec: float,
+    device_dispatch_overhead_s: float = 0.0,
+    factors: Sequence[int] = COEFF_FACTORS,
+) -> list[SplitDecodeOption]:
+    """Cost every valid scaled-IDCT factor for one stream geometry.
+
+    ``host_entropy_time`` is the measured seconds/item of the host-pinned
+    entropy stage alone (vs. ``host_decode_time`` = the full pixel
+    decode).  The whole coefficient program is ONE dispatch group, so the
+    overhead term is charged once regardless of factor.  The staging
+    layout is chosen by byte cost: packed wins for 4:2:0 (chroma at
+    native quarter-density), and ties resolve to the padded layout 4:4:4
+    streams already stage.
+    """
+    # the staging layout is factor-invariant: the staged tensor is always
+    # the full coefficient set, only the device-side math scales
+    layout = coeff_staging_layout(geom)
+    staging = coeff_staging_bytes(geom, layout)
+    options = []
+    for factor in factors:
+        if factor not in COEFF_FACTORS or not coeff_factor_valid(chain, geom, factor):
+            continue
+        c_flops = coeff_device_flops(geom, factor)
+        p_flops = chain_flops(list(chain), scaled_pixel_meta(geom, factor))
+        t_dev = (
+            device_stage_seconds(
+                c_flops + p_flops, 1, device_ops_per_sec, device_dispatch_overhead_s
+            )
+            + dnn_device_time
+        )
+        tput_host = 1.0 / host_entropy_time if host_entropy_time > 0 else float("inf")
+        tput_dev = 1.0 / t_dev if t_dev > 0 else float("inf")
+        options.append(
+            SplitDecodeOption(
+                factor=factor,
+                point=8 // factor,
+                layout=layout,
+                staging_bytes=staging,
+                coeff_flops=c_flops,
+                chain_flops=p_flops,
+                est_throughput=min(tput_host, tput_dev),
+                est_host_throughput=tput_host,
+                est_device_throughput=tput_dev,
+            )
+        )
+    return options
+
+
+def choose_coeff_option(
+    chain: Sequence[PreprocOp],
+    geom: CoeffGeometry,
+    host_entropy_time: float,
+    dnn_device_time: float,
+    device_ops_per_sec: float,
+    device_dispatch_overhead_s: float = 0.0,
+    policy: str = "auto",
+) -> SplitDecodeOption | None:
+    """Best split-decode option under ``policy``, or None.
+
+    ``"full"`` pins factor 1 (the legacy split-decode path), ``"scaled"``
+    insists on a reduced-resolution factor (falling back to 1 when no
+    scaled factor is valid), ``"auto"`` lets the cost model pick across
+    all factors.  Ties break toward the larger factor (same predicted
+    throughput, strictly less staged work downstream).
+    """
+    if policy == "off":
+        return None
+    if policy not in SPLIT_DECODE_POLICIES:
+        raise ValueError(f"split_decode must be one of {SPLIT_DECODE_POLICIES}, got {policy!r}")
+    factors = {"full": (1,), "scaled": (4, 2, 1), "auto": COEFF_FACTORS}[policy]
+    options = enumerate_coeff_options(
+        chain,
+        geom,
+        host_entropy_time,
+        dnn_device_time,
+        device_ops_per_sec,
+        device_dispatch_overhead_s,
+        factors=factors,
+    )
+    if not options:
+        return None
+    if policy == "scaled":
+        scaled = [o for o in options if o.factor > 1]
+        if scaled:
+            return max(scaled, key=lambda o: (o.est_throughput, o.factor))
+    return max(options, key=lambda o: (o.est_throughput, o.factor))

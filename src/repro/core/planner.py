@@ -45,6 +45,10 @@ class QueryPlan:
     dag_plan: dag_mod.DagPlan
     placement: placement_mod.Placement
     estimate: PlanEstimate
+    # split-decode placement (§6.4 x §6.3): when set, the cost model decided
+    # the host should stop at the entropy stage and the device program
+    # should decode from coefficients at `coeff.factor` reduced resolution
+    coeff: placement_mod.SplitDecodeOption | None = None
 
     @property
     def key(self) -> str:
@@ -87,6 +91,32 @@ def measure_decode_time(
     return (time.perf_counter() - t0) / n
 
 
+def measure_entropy_decode_time(
+    samples: Sequence[StoredImage],
+    fmt: ImageFormat,
+    repeats: int = 1,
+) -> float:
+    """Measured seconds/item of the split-decode placement's host stage:
+    the entropy decode PLUS the coefficient staging copy
+    (``jpeg.stage_coefficients``) the runtime host_fn performs per item —
+    pricing only the decode would overestimate coefficient-path host
+    throughput exactly when frames are large and staging copies bind."""
+    from repro.core.cost_model import CoeffGeometry, coeff_staging_layout
+    from repro.preprocessing import jpeg as jpeg_mod
+
+    t0 = time.perf_counter()
+    n = 0
+    for _ in range(repeats):
+        for s in samples:
+            hdr, planes_zz, _, _ = s.decode_to_coefficients(fmt)
+            # the one shared layout rule: time the staging copy the
+            # runtime host_fn will actually perform
+            layout = coeff_staging_layout(CoeffGeometry.from_header(hdr))
+            jpeg_mod.stage_coefficients(planes_zz, hdr, layout)
+            n += 1
+    return (time.perf_counter() - t0) / n
+
+
 def central_roi(input_size: int, resize_short: int):
     """ROI covering the central crop in original coordinates (Algorithm 1)."""
 
@@ -116,6 +146,9 @@ class Planner:
         estimator: str = "smol",
         device_dispatch_overhead_s: float = 0.0,
         device_fused: bool = True,
+        split_decode: str = "off",
+        entropy_decode_time: Callable[[ImageFormat], float] | None = None,
+        coeff_geometry: "Callable[[ImageFormat], object | None] | None" = None,
     ):
         self.models = list(models)
         self.formats = list(formats)
@@ -130,6 +163,20 @@ class Planner:
         # groups apply (one group = one dispatch) or the per-op legacy model
         self.device_dispatch_overhead_s = device_dispatch_overhead_s
         self.device_fused = device_fused
+        # split decode (§6.4): "off" keeps the pixel path; "full"/"scaled"
+        # force the coefficient placement (full- / reduced-resolution IDCT);
+        # "auto" lets the per-factor coefficient-FLOP + staging-byte cost
+        # model decide per plan.  The callbacks supply the measured entropy-
+        # stage time and the stream geometry (both per format, both cached
+        # by the runtime facade); without them the policy stays inert.
+        if split_decode not in placement_mod.SPLIT_DECODE_POLICIES:
+            raise ValueError(
+                f"split_decode must be one of {placement_mod.SPLIT_DECODE_POLICIES}, "
+                f"got {split_decode!r}"
+            )
+        self.split_decode = split_decode
+        self.entropy_decode_time = entropy_decode_time
+        self.coeff_geometry = coeff_geometry
         self._generated: list[QueryPlan] | None = None  # inputs are immutable
 
     def _place_and_estimate(
@@ -154,17 +201,73 @@ class Planner:
             device_dispatch_overhead_s=self.device_dispatch_overhead_s,
             device_fused=self.device_fused,
         )
-        stages = StageThroughputs(
-            preproc=placement.est_host_throughput,
-            exec_stages=(placement.est_device_throughput,),
-            pass_fractions=(model.pass_fraction,),
+        coeff = self._coeff_option(
+            dag_plan, fmt, t_dnn, host_ops_per_sec, device_ops_per_sec, placement
         )
+        if coeff is not None:
+            stages = StageThroughputs(
+                preproc=coeff.est_host_throughput,
+                exec_stages=(coeff.est_device_throughput,),
+                pass_fractions=(model.pass_fraction,),
+            )
+        else:
+            stages = StageThroughputs(
+                preproc=placement.est_host_throughput,
+                exec_stages=(placement.est_device_throughput,),
+                pass_fractions=(model.pass_fraction,),
+            )
         est = PlanEstimate(
             throughput=stages.estimate(self.estimator),
             accuracy=accuracy,
             stages=stages,
         )
-        return QueryPlan(model, fmt, dag_plan, placement, est)
+        return QueryPlan(model, fmt, dag_plan, placement, est, coeff=coeff)
+
+    def _coeff_option(
+        self,
+        dag_plan: dag_mod.DagPlan,
+        fmt: ImageFormat,
+        t_dnn: float,
+        host_ops_per_sec: float | None,
+        device_ops_per_sec: float | None,
+        pixel_placement: placement_mod.Placement,
+    ) -> placement_mod.SplitDecodeOption | None:
+        """Split-decode candidate for one plan under the configured policy.
+
+        Prices every valid scaled-IDCT factor against its per-factor
+        coefficient FLOPs + staging bytes and the measured entropy-stage
+        time.  ``"full"``/``"scaled"`` force the coefficient placement;
+        ``"auto"`` only takes it when it beats the best pixel-path split —
+        which is exactly how scaled decode moves the split device-ward.
+        """
+        if self.split_decode == "off" or fmt.codec != "jpeg":
+            return None
+        if self.coeff_geometry is None or self.entropy_decode_time is None:
+            return None
+        geom = self.coeff_geometry(fmt)
+        if geom is None or geom.channels != 3:
+            return None
+        # derive the fallback device rate from the SAME effective host rate
+        # choose_split used, or the pixel and coefficient candidates would
+        # be priced against different accelerators under replan() overrides
+        device_rate = device_ops_per_sec or self.device_ops_per_sec
+        if device_rate is None:
+            host_rate = host_ops_per_sec or self.host_ops_per_sec
+            device_rate = host_rate * placement_mod.DEFAULT_DEVICE_SPEEDUP
+        option = placement_mod.choose_coeff_option(
+            dag_plan.ops,
+            geom,
+            host_entropy_time=self.entropy_decode_time(fmt),
+            dnn_device_time=t_dnn,
+            device_ops_per_sec=device_rate,
+            device_dispatch_overhead_s=self.device_dispatch_overhead_s,
+            policy=self.split_decode,
+        )
+        if option is None:
+            return None
+        if self.split_decode == "auto" and option.est_throughput <= pixel_placement.est_throughput:
+            return None
+        return option
 
     def _plan_one(self, model: ModelSpec, fmt: ImageFormat) -> QueryPlan | None:
         acc = model.accuracy_by_format.get(fmt.key)

@@ -1,1 +1,1 @@
-from repro.kernels.idct.ops import dequant_idct  # noqa: F401
+from repro.kernels.idct.ops import SCALED_POINTS, dequant_idct, scaled_basis  # noqa: F401

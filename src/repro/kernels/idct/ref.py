@@ -1,4 +1,4 @@
-"""Pure-jnp oracle for the dequantize+IDCT kernel."""
+"""Pure-jnp oracle for the dequantize+IDCT kernel (full and scaled)."""
 
 from __future__ import annotations
 
@@ -10,9 +10,21 @@ from repro.preprocessing import dct as dct_np
 DCT_MAT = jnp.asarray(np.asarray(dct_np.DCT_MAT, dtype=np.float32))
 
 
-def dequant_idct_ref(coeffs: jnp.ndarray, qtable: jnp.ndarray) -> jnp.ndarray:
+def dequant_idct_ref(
+    coeffs: jnp.ndarray, qtable: jnp.ndarray, point: int = 8
+) -> jnp.ndarray:
     """coeffs: (N, 8, 8) quantized DCT coefficients (any numeric dtype).
-    qtable: (8, 8).  Returns (N, 8, 8) float32 pixel blocks (level-shifted,
-    i.e. still centered on 0; +128 happens downstream)."""
+    qtable: (8, 8).  Returns (N, point, point) float32 pixel blocks
+    (level-shifted, i.e. still centered on 0; +128 happens downstream).
+
+    ``point < 8`` is the truncated-DCT-basis scaled IDCT: only the
+    low-frequency point x point coefficients participate and the block
+    reconstructs at 1/(8/point) resolution — ``A X[:k,:k] A^T`` with
+    ``A = sqrt(k/8) Ck^T``."""
     deq = coeffs.astype(jnp.float32) * qtable.astype(jnp.float32)
-    return DCT_MAT.T @ deq @ DCT_MAT
+    if point == 8:
+        return DCT_MAT.T @ deq @ DCT_MAT
+    a = jnp.asarray(
+        np.asarray(dct_np.scaled_idct_basis(point)[:, :point], dtype=np.float32)
+    )  # (point, point): the basis acts on the low-frequency corner only
+    return a @ deq[:, :point, :point] @ a.T

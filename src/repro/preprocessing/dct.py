@@ -54,6 +54,25 @@ def dct_matrix(n: int = BLOCK) -> np.ndarray:
 DCT_MAT = dct_matrix()
 
 
+def scaled_idct_basis(point: int) -> np.ndarray:
+    """(point, 8) truncated-DCT-basis row transform for the scaled IDCT.
+
+    ``A = sqrt(point/8) * C_point^T P_point`` applied two-sided
+    (``A X A^T``) maps an 8x8 coefficient block straight to a
+    ``point x point`` pixel block at 1/(8/point) resolution — libjpeg's
+    scaled DCT (paper §6.4).  ``point=8`` recovers the full IDCT exactly
+    and ``point=1`` the DC/8 progressive first-scan image, so the whole
+    multi-resolution family is this one definition.  Shared by the host
+    reference decode (jpeg.decode_scaled) and the MXU kernel
+    (kernels/idct) so both sides use bit-identical basis weights.
+    """
+    if point not in (8, 4, 2, 1):
+        raise ValueError(f"point must be 8, 4, 2 or 1, got {point}")
+    a = np.zeros((point, 8), dtype=np.float64)
+    a[:, :point] = np.sqrt(point / 8.0) * dct_matrix(point).T
+    return a
+
+
 def zigzag_order(n: int = BLOCK) -> np.ndarray:
     """Indices that map a flattened 8x8 block into zigzag scan order."""
     idx = np.empty((n, n), dtype=np.int64)

@@ -27,12 +27,17 @@ class ImageFormat:
     codec: str
     short_side: int | None = None  # None = native resolution
     quality: int | None = None  # jpeg only
+    # jpeg only: store with 4:2:0 chroma subsampling (the overwhelmingly
+    # common encoding in real corpora; the split-decode device program
+    # handles it natively via ragged-chroma staging + device upsampling)
+    subsample: bool = False
 
     @property
     def key(self) -> str:
         res = "full" if self.short_side is None else str(self.short_side)
         q = "" if self.quality is None else f"_q{self.quality}"
-        return f"{self.codec}_{res}{q}"
+        sub = "_420" if self.subsample else ""
+        return f"{self.codec}_{res}{q}{sub}"
 
     def __str__(self) -> str:
         return self.key
@@ -76,7 +81,9 @@ class StoredImage:
             ):
                 src = ResizeShortSide(fmt.short_side).apply_host(img)
             if fmt.codec == "jpeg":
-                variants[fmt] = jpeg.encode(src, quality=fmt.quality or 75)
+                variants[fmt] = jpeg.encode(
+                    src, quality=fmt.quality or 75, subsample=fmt.subsample
+                )
             elif fmt.codec == "pjpeg":
                 variants[fmt] = _pil_jpeg_encode(src, quality=fmt.quality or 75)
             elif fmt.codec == "png":

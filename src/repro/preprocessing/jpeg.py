@@ -59,16 +59,22 @@ class JpegHeader:
         return len(self.band_offsets)
 
 
+def chroma_grid(hdr) -> tuple[int, int]:
+    """Chroma (block_rows, block_cols) — equals the luma grid for 4:4:4.
+
+    Accepts anything with ``n_br``/``n_bc``/``subsample`` attributes (a
+    :class:`JpegHeader` or the cost model's ``CoeffGeometry``); this is
+    THE 4:2:0 grid formula — staging, decode and costing all call it."""
+    if hdr.subsample:
+        return (hdr.n_br + 1) // 2, (hdr.n_bc + 1) // 2
+    return hdr.n_br, hdr.n_bc
+
+
 def _plane_grids(hdr: JpegHeader) -> list[tuple[int, int]]:
     """(block_rows, block_cols) per plane, honouring 4:2:0 subsampling."""
     grids = [(hdr.n_br, hdr.n_bc)]
     if hdr.channels == 3:
-        if hdr.subsample:
-            cbr = (hdr.n_br + 1) // 2
-            cbc = (hdr.n_bc + 1) // 2
-        else:
-            cbr, cbc = hdr.n_br, hdr.n_bc
-        grids += [(cbr, cbc), (cbr, cbc)]
+        grids += [chroma_grid(hdr)] * 2
     return grids
 
 
@@ -311,6 +317,54 @@ def decode_to_coefficients(
     return hdr, planes_zz, qtables, row_ranges
 
 
+def staged_coeff_shape(hdr: JpegHeader, layout: str = "padded") -> tuple[int, ...]:
+    """Shape of the single int16 staging tensor for the split-decode path.
+
+    ``"padded"`` pads chroma blocks up to the luma grid:
+    ``(channels, n_br, n_bc, 64)`` — for 4:4:4 this is exact (zero waste);
+    for 4:2:0 it quadruples the chroma share.  ``"packed"`` concatenates
+    the planes' blocks: ``(n_blocks_total, 64)`` — compact for 4:2:0
+    (chroma is stored at its native quarter-density) at the price of the
+    device program slicing the planes back apart by static offsets.
+    """
+    if layout == "padded":
+        return (hdr.channels, hdr.n_br, hdr.n_bc, 64)
+    if layout == "packed":
+        n = hdr.n_br * hdr.n_bc
+        if hdr.channels == 3:
+            cbr, cbc = chroma_grid(hdr)
+            n += 2 * cbr * cbc
+        return (n, 64)
+    raise ValueError(f"layout must be 'padded' or 'packed', got {layout!r}")
+
+
+def stage_coefficients(
+    planes_zz: list[np.ndarray], hdr: JpegHeader, layout: str = "padded"
+) -> np.ndarray:
+    """Pack per-plane zigzag coefficient blocks into ONE staging tensor.
+
+    The pipelined engine / request scheduler stage one ndarray per item,
+    so 4:2:0's ragged chroma (quarter-density blocks) must flatten into a
+    single tensor either by padding to the luma grid or by packing planes
+    end to end — :func:`staged_coeff_shape` documents the trade; the cost
+    model (core/cost_model.coeff_staging_bytes) prices both.
+    """
+    shape = staged_coeff_shape(hdr, layout)
+    if layout == "packed":
+        return np.concatenate(
+            [np.ascontiguousarray(p, dtype=np.int16).reshape(-1, 64) for p in planes_zz],
+            axis=0,
+        )
+    if not hdr.subsample or hdr.channels == 1:
+        return np.stack(planes_zz).astype(np.int16, copy=False)
+    out = np.zeros(shape, dtype=np.int16)
+    out[0] = planes_zz[0]
+    cbr, cbc = chroma_grid(hdr)
+    for p in (1, 2):
+        out[p, :cbr, :cbc] = planes_zz[p]
+    return out
+
+
 def _idct_plane(zz: np.ndarray, qtable: np.ndarray) -> np.ndarray:
     """Dequantize + IDCT a (rows, cols, 64) zigzagged plane -> pixel plane."""
     rows, cols, _ = zz.shape
@@ -389,4 +443,47 @@ def decode(
         rgb = rgb[: (h_decoded + scale - 1) // scale, : (hdr.width + scale - 1) // scale]
 
     out = np.clip(np.round(rgb), 0, 255).astype(np.uint8)
+    return out[..., 0] if hdr.channels == 1 else out
+
+
+def scaled_size(dim: int, factor: int) -> int:
+    """Output extent of one axis under a 1/factor scaled decode (ceil)."""
+    return -(-dim // factor)
+
+
+def decode_scaled(data: bytes, factor: int = 2) -> np.ndarray:
+    """Reduced-resolution decode straight from coefficients (paper §6.4).
+
+    Runs the truncated-DCT-basis scaled IDCT (``dct.scaled_idct_basis``)
+    at ``point = 8 // factor`` so each coefficient block reconstructs to a
+    ``point x point`` pixel block — the numpy golden reference for the
+    device split-decode program's scaled variants (libjpeg draft-mode
+    analogue).  ``factor`` must be 1, 2 or 4; the output is
+    ``(ceil(h/factor), ceil(w/factor))`` and ``factor=1`` reproduces
+    :func:`decode` exactly.
+    """
+    if factor not in (1, 2, 4):
+        raise ValueError(f"factor must be 1, 2 or 4, got {factor}")
+    hdr, planes_zz, qtables, _ = decode_to_coefficients(data)
+    point = 8 // factor
+    basis = dct.scaled_idct_basis(point)
+    recon = []
+    for zz, qt in zip(planes_zz, qtables):
+        rows, cols, _ = zz.shape
+        coeffs = zz.reshape(-1, 64)[:, dct.UNZIGZAG].reshape(rows, cols, 8, 8)
+        pix = basis @ (coeffs.astype(np.float64) * qt) @ basis.T
+        recon.append(dct.unblockify(pix, rows * point, cols * point) + 128.0)
+    hs = scaled_size(hdr.height, factor)
+    ws = scaled_size(hdr.width, factor)
+    y = recon[0][:hs, :ws]
+    planes = [y]
+    if hdr.channels == 3:
+        for c in recon[1:]:
+            if hdr.subsample:
+                c = np.repeat(np.repeat(c, 2, axis=0), 2, axis=1)
+            planes.append(c[:hs, :ws])
+    img = np.stack(planes, axis=-1)
+    if hdr.channels == 3:
+        img = dct.ycbcr_to_rgb(img)
+    out = np.clip(np.round(img), 0, 255).astype(np.uint8)
     return out[..., 0] if hdr.channels == 1 else out

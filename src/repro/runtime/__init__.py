@@ -17,6 +17,7 @@ program, own recalibrated host/device split), and the compiled-program
 cache LRU-evicts beyond its bound.
 """
 
+from repro.core.placement import SplitDecodeOption
 from repro.runtime.facade import (
     CompiledPlan,
     RunReport,
@@ -72,6 +73,7 @@ __all__ = [
     "SchedulerSaturated",
     "SchedulerStats",
     "SmolRuntime",
+    "SplitDecodeOption",
     "StageMeasurement",
     "TenantConfig",
     "TenantStats",

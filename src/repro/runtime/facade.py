@@ -28,9 +28,15 @@ import numpy as np
 
 from repro.core import device_compiler, planner as planner_mod
 from repro.core import placement as placement_mod
+from repro.core.cost_model import CoeffGeometry
 from repro.core.device_compiler import DevicePreprocProgram, ProgramCache
 from repro.core.engine import EngineStats, PipelinedEngine
-from repro.core.placement import DEFAULT_DEVICE_SPEEDUP, Placement
+from repro.core.placement import (
+    DEFAULT_DEVICE_SPEEDUP,
+    SPLIT_DECODE_POLICIES,
+    Placement,
+    SplitDecodeOption,
+)
 from repro.core.planner import ModelSpec, Planner, QueryPlan
 from repro.preprocessing import ops as P
 from repro.preprocessing.formats import ImageFormat, StoredImage
@@ -80,9 +86,16 @@ class RuntimeConfig:
     # "pallas", or "jnp"
     fused_impl: str = "auto"
     # split decode (§6.4): stop the host at the entropy stage and run
-    # dequant+IDCT (kernels/idct) inside the device program.  Applies to
-    # 4:4:4 SJPG plans; other plans keep the pixel path.
-    split_decode: bool = False
+    # dequant+(scaled-)IDCT (kernels/idct) inside the device program.
+    # Policy: "off" = pixel path; "full" = full-resolution IDCT whenever
+    # the stream is eligible (SJPG, 3-channel — 4:4:4 and 4:2:0 both);
+    # "scaled" = decode straight to the largest reduced resolution that
+    # still covers the plan's resize target; "auto" = the per-factor
+    # coefficient-FLOP + staging-byte cost model picks between the pixel
+    # path and every factor.  Bools are accepted for back-compat
+    # (False = "off", True = "full").  Ineligible plans (non-SJPG codec,
+    # grayscale) always keep the pixel path.
+    split_decode: bool | str = False
     # per-dispatch-group launch overhead charged by the placement cost
     # model.  None (default) measures it at first planning — one empty
     # device dispatch timed at warmup — so fused-group costing binds by
@@ -103,6 +116,13 @@ class RuntimeConfig:
         if self.device_backend not in ("fused", "reference"):
             raise ValueError(
                 f"device_backend must be 'fused' or 'reference', got {self.device_backend!r}"
+            )
+        if isinstance(self.split_decode, bool):
+            self.split_decode = "full" if self.split_decode else "off"
+        if self.split_decode not in SPLIT_DECODE_POLICIES:
+            raise ValueError(
+                f"split_decode must be a bool or one of {SPLIT_DECODE_POLICIES}, "
+                f"got {self.split_decode!r}"
             )
         if self.fused_impl not in ("auto", "pallas", "jnp"):
             raise ValueError(f"fused_impl must be auto|pallas|jnp, got {self.fused_impl!r}")
@@ -125,6 +145,9 @@ class CompiledPlan:
     # the device preprocessing compiler's product: ONE jitted program for
     # device-placed preprocessing + DNN (device_fn is this program)
     device_program: DevicePreprocProgram | None = None
+    # non-None when this plan runs the split-decode placement: the costed
+    # scaled-IDCT factor / staging layout the program was compiled for
+    coeff: SplitDecodeOption | None = None
     # Built lazily: only the batch path needs the engine's staging buffers;
     # the serving path feeds the RequestScheduler directly.
     engine: PipelinedEngine | None = None
@@ -172,6 +195,10 @@ class SmolRuntime:
         self._decode_time_override = decode_time
         self._decode_time_cache: dict[str, float] = {}
         self._decoded_meta_cache: dict[str, TensorMeta] = {}
+        # split-decode calibration: measured entropy-stage seconds/item and
+        # coefficient-stream geometry, per format (None = ineligible)
+        self._entropy_time_cache: dict[str, float] = {}
+        self._coeff_geom_cache: dict[str, CoeffGeometry | None] = {}
         self._plan: QueryPlan | None = None
         self._planner: Planner | None = None
         self._compiled: CompiledPlan | None = None
@@ -218,6 +245,27 @@ class SmolRuntime:
             )
         return self._decoded_meta_cache[fmt.key]
 
+    def _coeff_geometry(self, fmt: ImageFormat) -> CoeffGeometry | None:
+        """Coefficient-stream geometry of one format's calibration sample
+        (None for non-SJPG codecs — the pixel path serves those)."""
+        if fmt.key not in self._coeff_geom_cache:
+            geom = None
+            if fmt.codec == "jpeg":
+                from repro.preprocessing import jpeg as jpeg_mod
+
+                header = jpeg_mod.peek_header(self.calibration[0].variants[fmt])
+                geom = CoeffGeometry.from_header(header)
+            self._coeff_geom_cache[fmt.key] = geom
+        return self._coeff_geom_cache[fmt.key]
+
+    def _entropy_time(self, fmt: ImageFormat) -> float:
+        """Measured seconds/item of the host entropy stage for ``fmt``."""
+        if fmt.key not in self._entropy_time_cache:
+            self._entropy_time_cache[fmt.key] = planner_mod.measure_entropy_decode_time(
+                self.calibration, fmt
+            )
+        return self._entropy_time_cache[fmt.key]
+
     @staticmethod
     def measure_exec_throughput(
         model_fn: Callable, input_size: int, batch_size: int = 32, iters: int = 4
@@ -262,6 +310,9 @@ class SmolRuntime:
                 estimator=self.config.estimator,
                 device_dispatch_overhead_s=self._dispatch_overhead(),
                 device_fused=self.config.device_backend == "fused",
+                split_decode=self.config.split_decode,
+                entropy_decode_time=self._entropy_time,
+                coeff_geometry=self._coeff_geometry,
             )
         return self._planner
 
@@ -277,13 +328,15 @@ class SmolRuntime:
         return self.planner().pareto()
 
     # ------------------------------------------------------------- compiling
-    def _coeff_stage_fns(self, plan: QueryPlan, placement: Placement):
+    def _coeff_stage_fns(self, plan: QueryPlan, coeff: SplitDecodeOption):
         """Split-decode path (§6.4): host stops after the entropy stage and
-        stages quantized coefficient blocks; the device program runs
-        dequant+IDCT (kernels/idct) -> color conversion -> fused preproc ->
-        DNN.  Returns None when the plan's stream is not eligible (non-SJPG
-        codec, chroma subsampling, grayscale) — callers fall back to the
-        pixel path."""
+        stages one quantized-coefficient tensor per item
+        (``jpeg.stage_coefficients`` — 4:2:0's quarter-density chroma packs
+        or pads per ``coeff.layout``); the device program runs
+        dequant+(scaled-)IDCT at ``coeff.factor`` (kernels/idct) -> chroma
+        upsample -> color conversion -> fused preproc -> DNN.  Returns None
+        when the plan's stream is not eligible (non-SJPG codec, grayscale)
+        — callers fall back to the pixel path."""
         fmt = plan.fmt
         if fmt.codec != "jpeg":
             return None
@@ -297,20 +350,23 @@ class SmolRuntime:
                 chain,
                 self.model_fns[plan.model.name],
                 self.config.batch_size,
+                factor=coeff.factor,
+                layout=coeff.layout,
                 impl=self.config.fused_impl,
                 model_key=plan.model.name,
                 cache=self._device_programs,
             )
         except ValueError:
             return None
-        out_shape = tuple(program.in_meta.shape)  # (3, n_br, n_bc, 64)
+        out_shape = tuple(program.in_meta.shape)  # staged_coeff_shape(header, layout)
         out_dtype = np.dtype(program.in_meta.dtype)
+        layout = coeff.layout
 
         def host_fn(item):
             if not hasattr(item, "decode_to_coefficients"):
                 raise TypeError("split decode requires StoredImage items with a jpeg variant")
-            _, planes_zz, _, _ = item.decode_to_coefficients(fmt)
-            arr = np.stack(planes_zz).astype(out_dtype)
+            hdr_i, planes_zz, _, _ = item.decode_to_coefficients(fmt)
+            arr = jpeg_mod.stage_coefficients(planes_zz, hdr_i, layout)
             if arr.shape != out_shape:
                 raise ValueError(
                     f"entropy stage produced {arr.shape}, expected {out_shape}; "
@@ -370,6 +426,11 @@ class SmolRuntime:
         device_rate = self.config.device_ops_per_sec or (
             self.config.host_ops_per_sec * DEFAULT_DEVICE_SPEEDUP
         )
+        geom = (
+            self._coeff_geometry(plan.fmt) if self.config.split_decode != "off" else None
+        )
+        if geom is not None and geom.channels != 3:
+            geom = None
         return Recalibrator(
             plan.dag_plan.ops,
             self._decoded_meta(plan.fmt),
@@ -381,16 +442,29 @@ class SmolRuntime:
             hysteresis=self.config.recal_hysteresis,
             device_dispatch_overhead_s=self._dispatch_overhead(),
             device_fused=self.config.device_backend == "fused",
+            split_decode=self.config.split_decode if geom is not None else "off",
+            coeff_geometry=geom,
+            host_entropy_time=self._entropy_time(plan.fmt) if geom is not None else None,
         )
 
-    def _build_compiled(self, plan: QueryPlan, placement: Placement) -> CompiledPlan:
+    _COEFF_FROM_PLAN = object()  # sentinel: use plan.coeff (vs an override)
+
+    def _build_compiled(
+        self, plan: QueryPlan, placement: Placement, coeff: Any = _COEFF_FROM_PLAN
+    ) -> CompiledPlan:
         """Compile one (plan, placement) into stage functions + program —
         shared by the default plan and per-tenant pinned plans (all hit the
-        same bounded program cache)."""
+        same bounded program cache).  ``coeff`` overrides the plan's costed
+        split-decode option (recalibration moves between the pixel path,
+        factors and layouts without replanning)."""
+        if coeff is SmolRuntime._COEFF_FROM_PLAN:
+            coeff = plan.coeff
         staged = None
-        if self.config.split_decode:
-            staged = self._coeff_stage_fns(plan, placement)
+        used_coeff: SplitDecodeOption | None = None
+        if coeff is not None:
+            staged = self._coeff_stage_fns(plan, coeff)
             if staged is not None:
+                used_coeff = coeff
                 # the whole dense pipeline (dequant+IDCT onward) runs device-
                 # side: pin the placement at split 0 so stats/recalibration
                 # attribute stage time the way the program actually executes
@@ -409,11 +483,14 @@ class SmolRuntime:
             staged = self._stage_fns(plan, placement)
         host_fn, program, out_shape, out_dtype = staged
         return CompiledPlan(
-            plan, placement, host_fn, program, out_shape, out_dtype, device_program=program
+            plan, placement, host_fn, program, out_shape, out_dtype,
+            device_program=program, coeff=used_coeff,
         )
 
-    def _compile_placement(self, plan: QueryPlan, placement: Placement) -> CompiledPlan:
-        self._compiled = self._build_compiled(plan, placement)
+    def _compile_placement(
+        self, plan: QueryPlan, placement: Placement, coeff: Any = _COEFF_FROM_PLAN
+    ) -> CompiledPlan:
+        self._compiled = self._build_compiled(plan, placement, coeff=coeff)
         return self._compiled
 
     # --------------------------------------------------------------- tenants
@@ -473,10 +550,14 @@ class SmolRuntime:
             raise RuntimeError("compile() before recalibrate()")
         if isinstance(measurement, EngineStats):
             measurement = StageMeasurement.from_engine_stats(measurement)
-        placement, changed = self._recalibrator.update(self._compiled.placement, measurement)
+        placement, changed = self._recalibrator.update(
+            self._compiled.placement, measurement, coeff=self._compiled.coeff
+        )
         self.recalibrations.append(self._recalibrator.events[-1])
         if changed:
-            self._compile_placement(self._compiled.plan, placement)
+            self._compile_placement(
+                self._compiled.plan, placement, coeff=self._recalibrator.chosen_coeff
+            )
             if self._scheduler is not None:
                 # drains in-flight work, then swaps fns + staging signature
                 # (device_fn is the compiled program — already jitted, and
@@ -618,10 +699,10 @@ class SmolRuntime:
         compiled = self.compile_tenant(tenant)
         recal = self._tenant_recals[tenant]
         measurement = self._scheduler.measurement(tenant)
-        placement, changed = recal.update(compiled.placement, measurement)
+        placement, changed = recal.update(compiled.placement, measurement, coeff=compiled.coeff)
         self.recalibrations.append(dataclasses.replace(recal.events[-1], tenant=tenant))
         if changed:
-            fresh = self._build_compiled(compiled.plan, placement)
+            fresh = self._build_compiled(compiled.plan, placement, coeff=recal.chosen_coeff)
             self._tenant_compiled[tenant] = fresh
             self._scheduler.bind_tenant(
                 tenant, fresh.host_fn, fresh.device_fn, fresh.out_shape, fresh.out_dtype
@@ -642,7 +723,8 @@ class SmolRuntime:
         ``scheduler`` with request counters and the serving-side budget;
         ``program_cache`` with compile/hit/eviction counters; ``tenants``
         with per-tenant serving counters, byte-budget occupancy, and the
-        plan each tenant is bound to.
+        plan each tenant is bound to; ``split_decode`` (when the policy is
+        on) with the chosen scaled-IDCT factor and staging layout.
         """
         out: dict[str, Any] = {"num_workers": self._num_workers, "engine": None, "scheduler": None}
         out["program_cache"] = self._device_programs.stats()
@@ -677,6 +759,16 @@ class SmolRuntime:
                 "stages": list(prog.stages),
                 "dispatch_count": prog.dispatch_count,
                 "dispatches_per_batch": prog.dispatches_per_batch,
+            }
+        if self.config.split_decode != "off" and self._compiled is not None:
+            coeff = self._compiled.coeff
+            out["split_decode"] = {
+                "policy": self.config.split_decode,
+                # factor 0 = the plan fell back to the pixel path
+                "factor": coeff.factor if coeff is not None else 0,
+                "point": coeff.point if coeff is not None else 0,
+                "layout": coeff.layout if coeff is not None else None,
+                "staging_bytes": coeff.staging_bytes if coeff is not None else 0,
             }
         engine = self._compiled.engine if self._compiled is not None else None
         if engine is not None:

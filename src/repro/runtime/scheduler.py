@@ -8,7 +8,11 @@ the server:
 
 * **dynamic batching** — a batcher thread collects host-stage outputs into
   a device batch, dispatching when the batch fills *or* the oldest queued
-  request has waited ``max_wait_ms`` (latency/throughput knob);
+  request has waited ``max_wait_ms`` (latency/throughput knob).  The
+  deadline is per batch and per tenant: ``TenantConfig.max_wait_ms``
+  overrides the global default, and a batch closes at the *tightest*
+  deadline of any tenant holding a slot in it — latency tenants dispatch
+  early, throughput tenants keep batching;
 * **a reorder buffer** — device batches complete in dispatch order but
   requests may finish host preprocessing out of order; :meth:`drain`
   releases completed requests strictly in submission (uid) order;
@@ -73,9 +77,13 @@ class TenantConfig:
     proportion to weight under saturation).  ``max_pending`` and
     ``budget_bytes`` are per-tenant admission quotas (falling back to the
     scheduler-wide defaults when unset); ``floor_bytes`` is the byte floor
-    guaranteed under a hierarchical parent budget.  ``model`` optionally
-    pins the tenant to one model id — the runtime facade resolves it to a
-    dedicated compiled plan and binds it via :meth:`RequestScheduler.bind_tenant`.
+    guaranteed under a hierarchical parent budget.  ``max_wait_ms``
+    overrides the scheduler-wide dynamic-batching deadline for batches
+    this tenant participates in — a latency tenant's batch closes early
+    while throughput tenants keep the global (or their own longer) wait.
+    ``model`` optionally pins the tenant to one model id — the runtime
+    facade resolves it to a dedicated compiled plan and binds it via
+    :meth:`RequestScheduler.bind_tenant`.
     """
 
     name: str
@@ -83,6 +91,7 @@ class TenantConfig:
     max_pending: int | None = None
     budget_bytes: int | None = None
     floor_bytes: int = 0
+    max_wait_ms: float | None = None  # per-tenant batch deadline override
     model: str | None = None
 
     def __post_init__(self):
@@ -98,6 +107,8 @@ class TenantConfig:
             raise ValueError(f"tenant {self.name!r}: budget_bytes must be positive")
         if self.floor_bytes < 0:
             raise ValueError(f"tenant {self.name!r}: floor_bytes must be >= 0")
+        if self.max_wait_ms is not None and self.max_wait_ms < 0:
+            raise ValueError(f"tenant {self.name!r}: max_wait_ms must be >= 0")
 
 
 @dataclasses.dataclass
@@ -638,6 +649,12 @@ class RequestScheduler:
                 return False
             self._stash(msg)
 
+    def _tenant_wait_s(self, state: _TenantState) -> float:
+        """One tenant's dynamic-batching deadline: its ``max_wait_ms``
+        override, or the scheduler-wide default."""
+        cfg = state.config
+        return cfg.max_wait_ms / 1e3 if cfg.max_wait_ms is not None else self.max_wait_s
+
     def _form_batch(self, bufs: dict, wait: bool) -> bool:
         """Form and dispatch ONE batch by weighted-fair pick.  Returns False
         when a stop sentinel was consumed (caller must exit)."""
@@ -654,13 +671,18 @@ class RequestScheduler:
             bufs[id(binding)] = buf
         metas: list[tuple[int, float, _TenantState]] = []
         self._stage(buf, metas, first, first.ready.popleft())
-        deadline = time.perf_counter() + self.max_wait_s
+        # the batch deadline is the tightest max_wait of any tenant with a
+        # slot in it: a latency tenant's presence closes the batch early,
+        # and joining members can only pull the deadline in, never push it
+        t_open = time.perf_counter()
+        deadline = t_open + self._tenant_wait_s(first)
         while len(metas) < self.max_batch:
             # only tenants sharing this batch's compiled plan may join it
             cands = [s for s in self._tenants.values() if s.ready and s.binding is binding]
             if cands:
                 state = self._pick_ready(cands)
                 self._stage(buf, metas, state, state.ready.popleft())
+                deadline = min(deadline, t_open + self._tenant_wait_s(state))
                 continue
             if not wait:
                 break

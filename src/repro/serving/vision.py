@@ -143,6 +143,20 @@ class VisionServingEngine:
         compiled = self.runtime.compile()
         return compiled.device_program
 
+    @property
+    def split_decode(self) -> dict | None:
+        """The split-decode placement actually serving: policy, chosen
+        scaled-IDCT factor (0 = pixel-path fallback) and staging layout;
+        None when the policy is off."""
+        self.runtime.compile()
+        return self.runtime.stats().get("split_decode")
+
+    @property
+    def split_decode_factor(self) -> int:
+        """Chosen scaled-IDCT resolution divisor (0 = pixel path/off)."""
+        info = self.split_decode
+        return info["factor"] if info is not None else 0
+
     def stats(self) -> dict:
         """Memory/threading occupancy (pool, budget, admission counters)."""
         return self.runtime.stats()

@@ -241,12 +241,106 @@ def test_coeff_program_chain_fallback_requantizes_pixels():
     assert (diff > 1e-4).mean() < 1e-2
 
 
-def test_coeff_program_rejects_subsampled_streams():
-    img = smooth_image(np.random.default_rng(4), 64, 64)
-    data = jpeg.encode(img, quality=85, subsample=True)
+@pytest.mark.parametrize("impl", IMPLS)
+@pytest.mark.parametrize("layout", ["padded", "packed"])
+@pytest.mark.parametrize("h,w", [(128, 160), (97, 131)])  # odd sizes included
+def test_coeff_program_420_parity(impl, layout, h, w):
+    # the tentpole contract: 4:2:0 streams run the split-decode program
+    # (ragged chroma staged per `layout`, device-side 2x2 upsample) and
+    # match the reference pixel decode + host chain within one quant step
+    rng = np.random.default_rng(5)
+    img = smooth_image(rng, h, w)
+    data = jpeg.encode(img, quality=90, subsample=True)
     hdr = jpeg.peek_header(data)
-    with pytest.raises(ValueError, match="4:4:4"):
+    meta = TensorMeta((h, w, 3), "uint8", "HWC")
+    plan = dag_mod.optimize(standard_chain(64), meta)
+    prog = DC.compile_coeff_program(
+        hdr, plan.ops, lambda x: x, 2, layout=layout, impl=impl
+    )
+    assert prog.coeff_factor == 1 and prog.coeff_layout == layout
+    assert "chroma_upsample[2x2]" in prog.stages
+    _, planes, _, _ = jpeg.decode_to_coefficients(data)
+    staged = jpeg.stage_coefficients(planes, hdr, layout)
+    assert staged.shape == tuple(prog.in_meta.shape)
+    out = np.asarray(prog(np.stack([staged, staged])))  # batch > 1
+    ref = P.apply_chain_host(list(plan.ops), jpeg.decode(data))
+    diff = np.abs(out[0] - ref)
+    assert diff.max() <= QSTEP + 1e-4
+    assert (diff > 1e-4).mean() < 1e-2
+    np.testing.assert_allclose(out[0], out[1])  # batch rows independent
+
+
+@pytest.mark.parametrize("impl", IMPLS)
+@pytest.mark.parametrize("factor,subsample", [(2, True), (2, False), (4, True)])
+def test_coeff_program_scaled_factor_parity(impl, factor, subsample):
+    # reduced-resolution split decode: the device program's scaled IDCT +
+    # chain must match the host golden (decode_scaled + host chain) within
+    # one quant step — the short_side-decode analogue, device-side
+    rng = np.random.default_rng(8)
+    h, w = 64 * factor, 80 * factor
+    img = smooth_image(rng, h, w)
+    data = jpeg.encode(img, quality=90, subsample=subsample)
+    hdr = jpeg.peek_header(data)
+    layout = "packed" if subsample else "padded"
+    meta = TensorMeta((h, w, 3), "uint8", "HWC")
+    plan = dag_mod.optimize(standard_chain(48), meta)
+    prog = DC.compile_coeff_program(
+        hdr, plan.ops, lambda x: x, 1, factor=factor, layout=layout, impl=impl
+    )
+    assert prog.coeff_factor == factor
+    assert f"dequant_idct[mxu]/{8 // factor}pt" in prog.stages
+    _, planes, _, _ = jpeg.decode_to_coefficients(data)
+    staged = jpeg.stage_coefficients(planes, hdr, layout)
+    out = np.asarray(prog(staged[None]))[0]
+    ref = P.apply_chain_host(list(plan.ops), jpeg.decode_scaled(data, factor))
+    assert ref.shape == out.shape  # same DNN input contract as factor 1
+    diff = np.abs(out - ref)
+    assert diff.max() <= QSTEP + 1e-4
+    assert (diff > 1e-4).mean() < 1e-2
+
+
+def test_coeff_program_rejects_grayscale():
+    img = smooth_image(np.random.default_rng(4), 64, 64)[..., 0]
+    data = jpeg.encode(img, quality=85)
+    hdr = jpeg.peek_header(data)
+    with pytest.raises(ValueError, match="3-channel"):
         DC.compile_coeff_program(hdr, standard_chain(48), lambda x: x, 2)
+
+
+def test_coeff_factor_validity_rules():
+    from repro.core.cost_model import CoeffGeometry
+    from repro.core.placement import choose_coeff_option, coeff_factor_valid
+
+    img = smooth_image(np.random.default_rng(9), 256, 320)
+    data = jpeg.encode(img, quality=85, subsample=True)
+    geom = CoeffGeometry.from_header(jpeg.peek_header(data))
+    chain = dag_mod.optimize(
+        standard_chain(96), TensorMeta((256, 320, 3), "uint8", "HWC")
+    ).ops
+    # resize_short target = round(96*256/224) = 110: 256/2 = 128 >= 110 ok,
+    # 256/4 = 64 < 110 would force the resample to upscale -> invalid
+    assert coeff_factor_valid(chain, geom, 1)
+    assert coeff_factor_valid(chain, geom, 2)
+    assert not coeff_factor_valid(chain, geom, 4)
+    # a chain with no resize cannot legally decode at reduced resolution
+    no_resize = [P.ToFloat(), P.ChannelsFirst()]
+    assert not coeff_factor_valid(no_resize, geom, 2)
+    kw = dict(
+        host_entropy_time=1e-3,
+        dnn_device_time=1e-4,
+        device_ops_per_sec=1e11,
+    )
+    # "scaled" picks the largest valid reduced factor; "full" pins 1; the
+    # cost model ("auto") also lands on 2 here — strictly less device work
+    # for the same staging bytes
+    assert choose_coeff_option(chain, geom, policy="scaled", **kw).factor == 2
+    assert choose_coeff_option(chain, geom, policy="full", **kw).factor == 1
+    auto = choose_coeff_option(chain, geom, policy="auto", **kw)
+    assert auto.factor == 2
+    assert auto.layout == "packed"  # 4:2:0: packed staging is smaller
+    assert auto.staging_bytes < geom.channels * geom.n_br * geom.n_bc * 128
+    full = choose_coeff_option(chain, geom, policy="full", **kw)
+    assert full.coeff_flops > auto.coeff_flops  # per-factor FLOP model
 
 
 # ------------------------------------------------- fused placement costing
@@ -343,6 +437,7 @@ def test_runtime_split_decode_path(corpus):
     assert compiled.placement.split == 0  # whole dense pipeline device-side
     assert compiled.out_dtype == np.dtype(np.int16)  # staging = coefficients
     assert "dequant_idct[mxu]" in compiled.device_program.stages
+    assert compiled.coeff is not None and compiled.coeff.factor == 1  # bool -> "full"
     outs, _ = rt.run(corpus)
     ref_outs, _ = _runtime(corpus, device_backend="reference").run(corpus)
     for a, b in zip(outs, ref_outs):
@@ -350,6 +445,97 @@ def test_runtime_split_decode_path(corpus):
         # small linear head that is a sub-1e-2 logit wobble, not a class flip
         np.testing.assert_allclose(a, b, atol=1e-2)
         assert np.argmax(a) == np.argmax(b)
+
+
+FMT_420 = ImageFormat("jpeg", None, 95, subsample=True)
+
+
+@pytest.fixture(scope="module")
+def corpus_420():
+    rng = np.random.default_rng(13)
+    return [StoredImage.from_array(smooth_image(rng, 72, 88), [FMT_420]) for _ in range(12)]
+
+
+def _runtime_420(corpus, **cfg):
+    model = ModelSpec("m", INPUT, exec_throughput=50_000.0, accuracy_by_format={FMT_420.key: 0.9})
+    w = np.asarray(jax.random.normal(jax.random.PRNGKey(0), (3 * INPUT * INPUT, 5)) * 0.02)
+    return SmolRuntime(
+        [model],
+        [FMT_420],
+        {"m": lambda x: x.reshape(x.shape[0], -1) @ w},
+        calibration=corpus[:3],
+        config=RuntimeConfig(batch_size=4, num_workers=2, host_ops_per_sec=1e7, **cfg),
+        decode_time=lambda fmt: 1e-4,
+    )
+
+
+def test_runtime_split_decode_420_end_to_end(corpus_420):
+    # acceptance: a 4:2:0 SJPG corpus runs through RuntimeConfig.split_decode
+    # end to end — no 4:4:4-only ValueError path left anywhere
+    rt = _runtime_420(corpus_420, device_backend="fused", split_decode="full")
+    compiled = rt.compile()
+    assert compiled.coeff is not None
+    assert compiled.coeff.layout == "packed"  # 4:2:0 stages compactly
+    assert compiled.placement.split == 0
+    assert "chroma_upsample[2x2]" in compiled.device_program.stages
+    outs, report = rt.run(corpus_420)
+    assert len(outs) == len(corpus_420) and report.stats.num_items == len(corpus_420)
+    ref_outs, _ = _runtime_420(corpus_420, device_backend="reference").run(corpus_420)
+    for a, b in zip(outs, ref_outs):
+        np.testing.assert_allclose(a, b, atol=1e-2)
+        assert np.argmax(a) == np.argmax(b)
+    info = rt.stats()["split_decode"]
+    assert info["policy"] == "full" and info["factor"] == 1
+    assert info["layout"] == "packed" and info["staging_bytes"] > 0
+
+
+def test_runtime_split_decode_scaled_policy():
+    # images big enough that factor 2 still covers the resize target
+    # (input 32 -> resize_short 37; 112/2 = 56 >= 37, 112/4 = 28 < 37)
+    rng = np.random.default_rng(17)
+    corpus = [
+        StoredImage.from_array(smooth_image(rng, 112, 136), [FMT_420]) for _ in range(8)
+    ]
+    rt = _runtime_420(corpus, device_backend="fused", split_decode="scaled")
+    compiled = rt.compile()
+    assert compiled.coeff is not None and compiled.coeff.factor == 2
+    assert "dequant_idct[mxu]/4pt" in compiled.device_program.stages
+    # the staged tensor is the same coefficient set regardless of factor
+    assert compiled.out_dtype == np.dtype(np.int16)
+    outs, _ = rt.run(corpus)
+    # golden: host scaled decode + the same host chain + the same head
+    chain = list(compiled.plan.dag_plan.ops)
+    for img, out in zip(corpus, outs):
+        pix = jpeg.decode_scaled(img.variants[FMT_420], 2)
+        x = np.asarray(P.apply_chain_host(chain, pix), np.float32)[None]
+        ref = np.asarray(rt.model_fns["m"](x))[0]
+        np.testing.assert_allclose(out, ref, atol=1e-2)
+    info = rt.stats()["split_decode"]
+    assert info["factor"] == 2 and info["point"] == 4
+
+
+def test_planner_split_decode_skips_ineligible_streams():
+    # grayscale passthrough: a channels != 3 geometry never gets a coeff
+    # option, so the pixel path serves — same for a format whose geometry
+    # callback returns None (non-SJPG codec)
+    from repro.core.cost_model import CoeffGeometry
+    from repro.core.planner import Planner
+
+    fmt = ImageFormat("jpeg", None, 90)
+    model = ModelSpec("m", 32, 1000.0, {fmt.key: 0.9})
+    meta = TensorMeta((64, 64, 3), "uint8", "HWC")
+    gray = CoeffGeometry(64, 64, 1, 8, 8, False)
+    for geom in (gray, None):
+        p = Planner(
+            [model],
+            [fmt],
+            decode_time=lambda f: 1e-3,
+            decoded_meta=lambda f: meta,
+            split_decode="full",
+            entropy_decode_time=lambda f: 1e-4,
+            coeff_geometry=lambda f: geom,  # noqa: B023
+        )
+        assert p.select().coeff is None
 
 
 def test_runtime_serving_path_uses_program(corpus):

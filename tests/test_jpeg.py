@@ -93,6 +93,70 @@ def test_split_decode_equals_full(rng):
     assert np.array_equal(rgb[:64, :64], jpeg.decode(blob))
 
 
+@pytest.mark.parametrize("subsample", [False, True])
+@pytest.mark.parametrize("hw", [(96, 128), (97, 131)])
+def test_decode_scaled_factor1_equals_full(rng, subsample, hw):
+    img = smooth_image(rng, *hw)
+    blob = jpeg.encode(img, quality=88, subsample=subsample)
+    assert np.array_equal(jpeg.decode_scaled(blob, 1), jpeg.decode(blob))
+
+
+@pytest.mark.parametrize("factor", [2, 4])
+@pytest.mark.parametrize("subsample", [False, True])
+def test_decode_scaled_tracks_downsampled_full(rng, factor, subsample):
+    # reduced-resolution decode approximates the area-downsampled full
+    # decode (bandlimited reconstruction; close on piecewise-smooth input)
+    h, w = 160, 224
+    img = smooth_image(rng, h, w)
+    blob = jpeg.encode(img, quality=92, subsample=subsample)
+    scaled = jpeg.decode_scaled(blob, factor)
+    assert scaled.shape == (h // factor, w // factor, 3)
+    full = jpeg.decode(blob).astype(np.float64)
+    ds = full.reshape(h // factor, factor, w // factor, factor, 3).mean(axis=(1, 3))
+    assert np.abs(scaled.astype(np.float64) - ds).mean() < 3.0
+
+
+def test_decode_scaled_grayscale_and_odd_sizes(rng):
+    img = smooth_image(rng, 101, 67)[..., 0]
+    blob = jpeg.encode(img, quality=85)
+    out = jpeg.decode_scaled(blob, 2)
+    assert out.shape == (51, 34)  # ceil(101/2), ceil(67/2)
+    assert out.ndim == 2
+    with pytest.raises(ValueError, match="factor"):
+        jpeg.decode_scaled(blob, 3)
+
+
+@pytest.mark.parametrize("subsample", [False, True])
+def test_stage_coefficients_layouts_roundtrip(rng, subsample):
+    # both staging layouts carry the same blocks; the padded layout's
+    # chroma sits in the top-left corner of the luma grid, the packed
+    # layout concatenates planes at native density
+    img = smooth_image(rng, 97, 131)
+    blob = jpeg.encode(img, quality=85, subsample=subsample)
+    hdr, planes_zz, _, _ = jpeg.decode_to_coefficients(blob)
+    cbr, cbc = jpeg.chroma_grid(hdr)
+    padded = jpeg.stage_coefficients(planes_zz, hdr, "padded")
+    packed = jpeg.stage_coefficients(planes_zz, hdr, "packed")
+    assert padded.shape == jpeg.staged_coeff_shape(hdr, "padded")
+    assert packed.shape == jpeg.staged_coeff_shape(hdr, "packed")
+    assert padded.dtype == packed.dtype == np.int16
+    np.testing.assert_array_equal(padded[0], planes_zz[0])
+    np.testing.assert_array_equal(padded[1, :cbr, :cbc], planes_zz[1])
+    if subsample:
+        # padding region stays zero, and packed is strictly smaller
+        assert not padded[1, cbr:].any() and not padded[1, :, cbc:].any()
+        assert packed.nbytes < padded.nbytes
+    n_luma = hdr.n_br * hdr.n_bc
+    np.testing.assert_array_equal(
+        packed[:n_luma].reshape(hdr.n_br, hdr.n_bc, 64), planes_zz[0]
+    )
+    np.testing.assert_array_equal(
+        packed[n_luma : n_luma + cbr * cbc].reshape(cbr, cbc, 64), planes_zz[1]
+    )
+    with pytest.raises(ValueError, match="layout"):
+        jpeg.staged_coeff_shape(hdr, "ragged")
+
+
 def test_partial_decode_is_cheaper(rng):
     """ROI decoding must touch fewer bands (cost model depends on it)."""
     import time

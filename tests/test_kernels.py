@@ -27,6 +27,43 @@ def test_idct_sweep(n, quality):
     np.testing.assert_allclose(out, ref, atol=2e-2)
 
 
+@pytest.mark.parametrize("point", [8, 4, 2, 1])
+@pytest.mark.parametrize("n", [3, 512])
+def test_scaled_idct_matches_ref(point, n):
+    # the truncated-DCT-basis variants: kernel (one padded 64x64 matmul)
+    # vs the direct two-sided A X A^T oracle
+    coeffs = RNG.integers(-300, 300, size=(n, 8, 8)).astype(np.int16)
+    q = dct.quality_scale(dct.QTABLE_CHROMA, 75)
+    out = np.asarray(dequant_idct(coeffs, q, point=point))
+    assert out.shape == (n, point, point)
+    ref = np.asarray(dequant_idct_ref(jnp.asarray(coeffs), jnp.asarray(q), point=point))
+    np.testing.assert_allclose(out, ref, atol=2e-2)
+
+
+def test_scaled_idct_point8_is_full_and_point1_is_dc():
+    coeffs = RNG.integers(-200, 200, size=(16, 8, 8)).astype(np.int16)
+    q = dct.quality_scale(dct.QTABLE_LUMA, 85)
+    full = np.asarray(dequant_idct(coeffs, q, point=8))
+    legacy = np.asarray(dequant_idct(coeffs, q))
+    np.testing.assert_array_equal(full, legacy)  # point=8 IS the old kernel
+    # point=1 reproduces the progressive first-scan DC image: dc * q / 8
+    dc = np.asarray(dequant_idct(coeffs, q, point=1))[:, 0, 0]
+    np.testing.assert_allclose(dc, coeffs[:, 0, 0] * q[0, 0] / 8.0, atol=1e-3)
+
+
+def test_scaled_idct_mean_preservation():
+    # the scaled basis is DC-consistent: each point x point output block
+    # has the same mean as the full-resolution block it reconstructs
+    coeffs = RNG.integers(-200, 200, size=(64, 8, 8)).astype(np.int16)
+    q = dct.quality_scale(dct.QTABLE_LUMA, 90)
+    full = np.asarray(dequant_idct(coeffs, q, point=8))
+    for point in (4, 2, 1):
+        scaled = np.asarray(dequant_idct(coeffs, q, point=point))
+        np.testing.assert_allclose(
+            scaled.mean(axis=(1, 2)), full.mean(axis=(1, 2)), atol=1e-2
+        )
+
+
 @pytest.mark.parametrize(
     "h,w,oh,ow", [(161, 193, 224, 224), (64, 64, 224, 224), (300, 200, 96, 128)]
 )

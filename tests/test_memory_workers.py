@@ -458,20 +458,40 @@ def test_scheduler_resize_workers_online():
 
 
 # -------------------------------------------------------- worker recalibration
-def test_worker_recalibrator_grows_when_host_bound():
+def test_worker_recalibrator_jumps_to_knee_when_host_bound():
+    # ideal = 10 workers: the pool jumps straight to the (clamped) knee in
+    # ONE window instead of walking +1 per window (the ROADMAP item)
     r = WorkerRecalibrator(num_workers=2, max_workers=8, alpha=1.0)
     m = StageMeasurement(host_seconds_per_item=1.0, device_seconds_per_item=0.1)
     n, changed = r.update(m)
-    assert changed and n == 3  # one step at a time toward ideal=10
-    n, changed = r.update(m)
-    assert changed and n == 4
+    assert changed and n == 8
+    assert r.events[-1].knee_workers == pytest.approx(10.0)
 
 
-def test_worker_recalibrator_shrinks_when_device_bound():
+def test_worker_recalibrator_jumps_down_when_device_bound():
     r = WorkerRecalibrator(num_workers=4, max_workers=8, alpha=1.0)
     m = StageMeasurement(host_seconds_per_item=0.1, device_seconds_per_item=0.5)
     n, changed = r.update(m)
+    assert changed and n == 1  # straight to the knee (ratio 0.2 -> 1 worker)
+
+
+def test_worker_recalibrator_fits_contention_curve():
+    # the fitted host_spi(w) = a + b*w curve must cap the knee below the
+    # naive perfect-scaling ratio once contention is observed
+    r = WorkerRecalibrator(num_workers=1, max_workers=16, alpha=1.0, dead_band=0.0)
+    n, changed = r.update(StageMeasurement(0.5, 0.2))  # ratio 2.5 -> knee 3
     assert changed and n == 3
+    # at 3 workers decode got dearer (GIL/contention): naive ratio says 4,
+    # but the fit (b = 0.15/worker, device 0.2) solves the knee at 7
+    n, changed = r.update(StageMeasurement(0.8, 0.2))
+    assert changed and n == 7
+    assert r.events[-1].knee_workers == pytest.approx(7.0)
+    # contention growing as fast as capacity: adding workers cannot catch
+    # up; the knee caps at max_workers rather than diverging
+    r2 = WorkerRecalibrator(num_workers=1, max_workers=6, alpha=1.0, dead_band=0.0)
+    r2.update(StageMeasurement(0.5, 0.1))
+    n, _ = r2.update(StageMeasurement(0.5 + 0.1 * 4, 0.1))  # b == device_spi
+    assert n == 6 and r2.events[-1].knee_workers == 6.0
 
 
 def test_worker_recalibrator_holds_on_degenerate_window():

@@ -26,7 +26,7 @@ from repro.runtime import (
 )
 
 
-def _scheduler(tenants=None, host_sleep=0.0, device_sleep=0.0, **kw):
+def _scheduler(tenants=None, host_sleep=0.0, device_sleep=0.0, max_wait_ms=1.0, **kw):
     def host_fn(item):
         if host_sleep:
             time.sleep(host_sleep)
@@ -44,7 +44,7 @@ def _scheduler(tenants=None, host_sleep=0.0, device_sleep=0.0, **kw):
         np.float32,
         max_batch=4,
         num_workers=2,
-        max_wait_ms=1.0,
+        max_wait_ms=max_wait_ms,
         tenants=tenants,
         **kw,
     )
@@ -138,6 +138,53 @@ def test_byte_quota_is_per_tenant():
         sched.stop()
     assert sched.tenants["a"].completed == 1
     assert sched.tenants["b"].completed == 4
+
+
+# ------------------------------------------------------- per-tenant deadline
+def test_per_tenant_batch_deadline_overrides_global():
+    # the global max_wait is deliberately long (600ms): a latency tenant's
+    # 1ms override must close its batch early, while the throughput tenant
+    # rides the global deadline so staggered submits still share a batch
+    sched = _scheduler(
+        tenants=[TenantConfig("lat", max_wait_ms=1.0), TenantConfig("thr")],
+        max_wait_ms=600.0,
+    )
+    try:
+        t0 = time.perf_counter()
+        sched.submit(1, tenant="lat")
+        sched.flush(timeout=10.0)
+        lat_elapsed = time.perf_counter() - t0
+        assert lat_elapsed < 0.45, "latency tenant's batch must close at ~1ms, not 600ms"
+        assert sched.tenants["lat"].completed == 1
+        assert sched.stats.batches == 1 and sched.stats.batch_items == 1
+        # throughput tenant: a submit arriving 150ms into the open batch
+        # still joins it — the global deadline held the batch open
+        sched.submit(10, tenant="thr")
+        time.sleep(0.15)
+        sched.submit(11, tenant="thr")
+        sched.flush(timeout=10.0)
+    finally:
+        sched.stop()
+    assert sched.stats.batches == 2, "staggered throughput submits must share one batch"
+    assert sched.tenants["thr"].batch_items == 2
+
+
+def test_mixed_batch_takes_tightest_tenant_deadline():
+    # a latency tenant joining an open batch pulls the deadline in: the
+    # batch dispatches at min(member max_waits), not the opener's
+    sched = _scheduler(
+        tenants=[TenantConfig("lat", max_wait_ms=1.0), TenantConfig("thr")],
+        max_wait_ms=600.0,
+    )
+    try:
+        t0 = time.perf_counter()
+        sched.submit(10, tenant="thr")
+        sched.submit(1, tenant="lat")
+        sched.flush(timeout=10.0)
+        elapsed = time.perf_counter() - t0
+        assert elapsed < 0.45, "lat's membership must close the shared batch early"
+    finally:
+        sched.stop()
 
 
 # ------------------------------------------------------------- fair queuing

@@ -138,6 +138,105 @@ def test_recalibration_hysteresis_blocks_marginal_moves():
     assert placement.split == initial.split
 
 
+def test_recalibration_switches_between_coeff_and_pixel_paths():
+    # the recalibrator learns the split-decode path's per-factor costs and
+    # can move the runtime between the pixel path and the coefficient
+    # placement (and pick the scaled factor) as measured rates drift
+    from repro.core.cost_model import CoeffGeometry
+
+    chain = standard_chain(64)  # resize_short target 73
+    in_meta = TensorMeta((256, 256, 3), "uint8", "HWC")
+    geom = CoeffGeometry(256, 256, 3, 32, 32, True)
+    r = Recalibrator(
+        chain,
+        in_meta,
+        host_decode_time=5e-3,  # full pixel decode is the bottleneck ...
+        dnn_device_time=1e-3,
+        host_ops_per_sec=2e8,
+        device_ops_per_sec=1e11,
+        alpha=1.0,
+        hysteresis=0.0,
+        split_decode="auto",
+        coeff_geometry=geom,
+        host_entropy_time=1e-4,  # ... the entropy stage alone is 50x cheaper
+    )
+    best = r.resolve_coeff()
+    assert best is not None and best.factor == 2  # 256/2=128 >= 73; 256/4=64 < 73
+    initial = r.resolve()
+    m = StageMeasurement(host_seconds_per_item=5e-3, device_seconds_per_item=1.2e-3)
+    placement, changed = r.update(initial, m)
+    assert changed and placement.split == 0
+    assert r.chosen_coeff is not None and r.chosen_coeff.factor == 2
+    assert r.events[-1].old_factor == 0 and r.events[-1].new_factor == 2
+    # the device collapses 100x: the DNN now dominates the device stage and
+    # the coefficient math stops paying — recalibration returns to pixels
+    coeff = r.chosen_coeff
+    slow_device = StageMeasurement(host_seconds_per_item=1e-4, device_seconds_per_item=1.0)
+    placement, changed = r.update(placement, slow_device, coeff=coeff)
+    assert changed and r.chosen_coeff is None
+    assert r.events[-1].new_factor == 0
+
+
+def test_recalibration_forced_policy_bypasses_hysteresis_on_mode_change():
+    # split_decode="full" mandates the coefficient path: a pixel -> coeff
+    # mode change must not be blocked by hysteresis even when the pixel
+    # path predicts higher throughput (the policy, not the cost model,
+    # decides the mode; hysteresis still damps factor changes within it)
+    from repro.core.cost_model import CoeffGeometry
+
+    chain = standard_chain(64)
+    in_meta = TensorMeta((256, 256, 3), "uint8", "HWC")
+    geom = CoeffGeometry(256, 256, 3, 32, 32, True)
+    r = Recalibrator(
+        chain,
+        in_meta,
+        host_decode_time=1e-4,  # pixel decode cheap ...
+        dnn_device_time=1e-3,
+        host_ops_per_sec=2e8,
+        device_ops_per_sec=1e11,
+        alpha=1.0,
+        hysteresis=10.0,  # an 11x bar no candidate clears
+        split_decode="full",
+        coeff_geometry=geom,
+        host_entropy_time=5e-3,  # ... the entropy stage is the SLOW option
+    )
+    initial = r.resolve()
+    m = StageMeasurement(host_seconds_per_item=1e-4, device_seconds_per_item=1.1e-3)
+    placement, changed = r.update(initial, m)
+    assert changed and placement.split == 0
+    assert r.chosen_coeff is not None and r.chosen_coeff.factor == 1
+
+
+def test_worker_recalibrator_expires_stale_curve_points():
+    from repro.runtime import WorkerRecalibrator
+
+    r = WorkerRecalibrator(num_workers=4, max_workers=16, alpha=1.0, dead_band=0.0)
+    r.update(StageMeasurement(2.0, 0.25))  # cold-start sample at the initial size
+    for _ in range(r.MAX_SAMPLE_AGE + 2):  # steady state: host got 2.5x cheaper
+        r.update(StageMeasurement(0.8, 0.25))
+    # the transient 2.0s/item point must have aged out of the fit: every
+    # surviving curve point reflects the steady-state cost
+    assert all(v <= 0.8 + 1e-9 for v in r._spi_by_workers.values())
+    assert r.events[-1].knee_workers == pytest.approx(0.8 / 0.25)
+    # age and sample books stay paired (a desync here once crashed update)
+    assert set(r._spi_age) == set(r._spi_by_workers)
+
+
+def test_worker_recalibrator_survives_returning_to_an_aged_pool_size():
+    # returning to a pool size exactly as its old sample hits MAX_SAMPLE_AGE
+    # must refresh the point, not discard it / desync the age books
+    from repro.runtime import WorkerRecalibrator
+
+    r = WorkerRecalibrator(num_workers=2, max_workers=4, alpha=1.0, dead_band=0.0)
+    for i in range(3 * (r.MAX_SAMPLE_AGE + 1)):
+        # host cost alternates so the pool bounces across sizes and
+        # repeatedly revisits entries at every possible sample age
+        host = 0.9 if i % 3 else 0.2
+        r.update(StageMeasurement(host, 0.25))
+        assert set(r._spi_age) == set(r._spi_by_workers)
+        assert r._spi_age[r.events[-1].old_workers] == 0
+
+
 def test_facade_recalibration_rebuilds_engine(corpus):
     rt = _runtime(corpus)
     rt.compile()
