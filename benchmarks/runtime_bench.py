@@ -434,6 +434,66 @@ def _run_fairness_leg(args) -> dict:
     }
 
 
+def _run_replica_leg(args) -> dict:
+    """Replica scaling: 2 mesh dispatchers vs 1 over the shared fair queue.
+
+    The device model is a fixed sleep per batch (a deterministic
+    "accelerator" that releases the GIL), so the leg measures the
+    scheduler's ability to keep N replica dispatchers concurrently busy
+    from one queue — not box throughput.  Two replicas over a
+    device-bound workload should approach 2x; the gate binds at 1.6x to
+    absorb dispatch overhead and scheduler jitter.
+    """
+    import time
+
+    from repro.runtime.scheduler import RequestScheduler
+
+    per_batch_s = 0.004
+    max_batch = 8
+    items = 256 if args.smoke else 768
+
+    def host_fn(item):
+        return np.full((8,), float(item), np.float32)
+
+    def device_fn(batch):
+        time.sleep(per_batch_s)
+        return batch
+
+    def run_once(num_replicas):
+        sched = RequestScheduler(
+            host_fn,
+            device_fn,
+            (8,),
+            np.float32,
+            max_batch=max_batch,
+            num_workers=2,
+            max_wait_ms=1.0,
+            num_replicas=num_replicas,
+        )
+        sched.start()
+        try:
+            t0 = time.perf_counter()
+            for i in range(items):
+                sched.submit(i)
+            sched.flush(timeout=120.0)
+            wall = time.perf_counter() - t0
+            sched.drain()
+        finally:
+            sched.stop()
+        return items / wall
+
+    tput_1 = max(run_once(1) for _ in range(2))  # best-of-2: warm the path
+    tput_2 = max(run_once(2) for _ in range(2))
+    return {
+        "items": items,
+        "per_batch_s": per_batch_s,
+        "max_batch": max_batch,
+        "tput_1_replica": round(tput_1, 2),
+        "tput_2_replicas": round(tput_2, 2),
+        "replica_scaling": round(tput_2 / tput_1, 3) if tput_1 else 0.0,
+    }
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     # defaults make the workload host-decode-bound (big stored images, small
@@ -548,6 +608,13 @@ def main(argv=None) -> int:
     # ---- multi-tenant fairness: weighted-fair scheduling under saturation -
     fairness = _run_fairness_leg(args)
 
+    # ---- replica mesh: 2 dispatchers vs 1 over the shared fair queue ------
+    replica_leg = _run_replica_leg(args)
+
+    # the typed RuntimeStats schema is what dashboards consume — read the
+    # balanced runtime's snapshot through it rather than an ad-hoc dict
+    rstats = bal_runtime.stats()
+
     # Smoke runs gate on relaxed thresholds.  The timing legs swing tens of
     # percent run-to-run on 2-core shared CI runners, so their smoke gates
     # are *breakage detectors* (a broken pool, fully lost overlap, a worker
@@ -593,6 +660,9 @@ def main(argv=None) -> int:
         "fairness_ratio_4to1_within_25pct": 3.0 <= fairness["observed_ratio"] <= 5.0,
         # ... while the aggregate stays within 10% of single-tenant
         "multitenant_aggregate_within_10pct": fairness["aggregate_frac_of_single"] >= 0.9,
+        # acceptance: 2 replicas over the shared queue sustain >= 1.6x the
+        # single-replica throughput on the sleep-controlled device model
+        "replica_scaling_2x_ge_1_6": replica_leg["replica_scaling"] >= 1.6,
     }
     result = {
         "benchmark": "runtime_end_to_end",
@@ -615,6 +685,13 @@ def main(argv=None) -> int:
         "device_path": device_leg,
         "split_decode": split_leg,
         "fairness": fairness,
+        "replica_mesh": replica_leg,
+        "stats_schema_version": rstats.schema_version,
+        "device_program_serving": {
+            "backend": rstats.device_program.backend,
+            "impl": rstats.device_program.impl,
+            "dispatches_per_batch": rstats.device_program.dispatches_per_batch,
+        },
         "gate_thresholds": thr,
         "gates": gates,
     }

@@ -25,7 +25,7 @@ from repro.preprocessing.formats import (
     THUMB_JPEG_161_Q95,
     THUMB_PNG_161,
 )
-from repro.runtime import RuntimeConfig, SmolRuntime
+from repro.runtime import RecalConfig, RuntimeConfig, SmolRuntime
 
 FORMATS = [FULL_JPEG_Q95, THUMB_PNG_161, THUMB_JPEG_161_Q95, THUMB_JPEG_161_Q75]
 COND_BY_KEY = {
@@ -80,7 +80,7 @@ def main():
         model_fns,
         calibration=stored[:8],
         config=RuntimeConfig(
-            batch_size=16, num_workers=2, min_accuracy=floor, recalibrate_every=48
+            batch_size=16, num_workers=2, min_accuracy=floor, recal=RecalConfig(every=48)
         ),
     )
 

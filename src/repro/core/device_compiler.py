@@ -168,6 +168,29 @@ class ProgramCache(MutableMapping):
         )
 
 
+# ----------------------------------------------------------- device placement
+def device_cache_key(device: Any) -> Any:
+    """Hashable cache identity of a program's device placement.
+
+    ``None`` (the process-default device), one ``jax.Device`` (a replica
+    pinned to that accelerator), or a ``jax.sharding.Sharding`` (a replica
+    group sharding one program across its devices) all key differently, so
+    a mesh compiles one program instance per replica group.
+    """
+    if device is None:
+        return None
+    if hasattr(device, "device_set"):  # a Sharding spanning a replica group
+        return ("sharded", tuple(sorted(d.id for d in device.device_set)))
+    return ("device", device.id)
+
+
+def _place(batch: Any, device: Any):
+    """Commit a staged host batch to a program's device placement."""
+    if device is None:
+        return batch
+    return jax.device_put(batch, device)
+
+
 # ------------------------------------------------------------------- lowering
 @dataclasses.dataclass(frozen=True)
 class Lowering:
@@ -365,6 +388,11 @@ class DevicePreprocProgram:
     # coefficient staging layout this program was compiled for
     coeff_factor: int | None = None
     coeff_layout: str | None = None
+    # replica placement: None = process default; a jax.Device pins this
+    # program instance to one replica's accelerator; a Sharding spans a
+    # replica group (sharded-model mode) — staged batches are committed
+    # there before dispatch, so XLA compiles/partitions per placement
+    device: Any = None
 
     @property
     def dispatches_per_batch(self) -> int:
@@ -372,7 +400,7 @@ class DevicePreprocProgram:
 
     def __call__(self, batch):
         self.dispatch_count += 1
-        return self.fn(batch)
+        return self.fn(_place(batch, self.device))
 
     def lower(self, batch):
         """Lower (without executing) — for HLO inspection tooling."""
@@ -396,9 +424,11 @@ def program_cache_key(
     model_key: str = "",
     interpret: bool = True,
     donate: bool = True,
+    device: Any = None,
 ) -> tuple:
     """Compile-cache identity: op specs + input meta + batch + backend +
-    the compile-mode flags that change the emitted program."""
+    the compile-mode flags that change the emitted program + the replica
+    device placement (a mesh holds one program instance per replica)."""
     return (
         tuple(op.spec() for op in device_ops),
         in_meta.shape,
@@ -410,6 +440,7 @@ def program_cache_key(
         model_key,
         interpret,
         donate,
+        device_cache_key(device),
     )
 
 
@@ -424,6 +455,7 @@ def compile_device_program(
     donate: bool = True,
     model_key: str = "",
     cache: MutableMapping[tuple, "DevicePreprocProgram"] | None = None,
+    device: Any = None,
 ) -> DevicePreprocProgram:
     """Lower ``device_ops`` + ``model_fn`` into one jitted device program.
 
@@ -433,6 +465,9 @@ def compile_device_program(
     differ in how the preprocessing *inside* it is structured.  ``cache``
     (keyed by :func:`program_cache_key`) makes recompiles after placement
     moves free when the split returns to a previously-seen point.
+    ``device`` pins the program to one replica's accelerator (or, given a
+    Sharding, spans a replica group) — each placement is its own cache
+    entry, so a mesh gets one program instance per replica.
     """
     if backend not in ("fused", "reference"):
         raise ValueError(f"device_backend must be 'fused' or 'reference', got {backend!r}")
@@ -440,7 +475,8 @@ def compile_device_program(
     if interpret is None:
         interpret = default_interpret()
     key = program_cache_key(
-        device_ops, in_meta, batch_size, backend, impl, model_key, interpret, donate
+        device_ops, in_meta, batch_size, backend, impl, model_key, interpret, donate,
+        device,
     )
     if cache is not None and key in cache:
         return cache[key]
@@ -470,6 +506,7 @@ def compile_device_program(
         key=key,
         in_meta=in_meta,
         out_meta=out_meta,
+        device=device,
     )
     if cache is not None:
         cache[key] = program
@@ -496,6 +533,7 @@ def compile_coeff_program(
     donate: bool = True,
     model_key: str = "",
     cache: MutableMapping[tuple, "DevicePreprocProgram"] | None = None,
+    device: Any = None,
 ) -> DevicePreprocProgram:
     """Split-decode program: quantized DCT coefficients in, predictions out.
 
@@ -538,7 +576,8 @@ def compile_coeff_program(
         ("CoeffDecode", header.quality, n_br, n_bc, header.height, header.width,
          subsample, factor, layout),
         program_cache_key(
-            device_ops, pixel_meta, batch_size, "fused", impl, model_key, interpret, donate
+            device_ops, pixel_meta, batch_size, "fused", impl, model_key, interpret,
+            donate, device,
         ),
     )
     if cache is not None and key in cache:
@@ -616,6 +655,7 @@ def compile_coeff_program(
         out_meta=out_meta,
         coeff_factor=factor,
         coeff_layout=layout,
+        device=device,
     )
     if cache is not None:
         cache[key] = program

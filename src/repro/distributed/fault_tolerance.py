@@ -51,6 +51,51 @@ class PreemptionHandler:
         return self._stop
 
 
+class ReplicaFailure(RuntimeError):
+    """A serving replica died (device lost, injected fault, OOM).
+
+    Raised by (or on behalf of) a replica's device dispatch.  The request
+    scheduler treats it differently from an ordinary per-request error:
+    instead of failing the batch, the in-flight items drain back to the
+    shared fair queue and re-dispatch onto surviving replicas, and the
+    failed replica leaves the mesh (``plan_elastic_restart`` sizes what
+    remains).
+    """
+
+    def __init__(self, replica: int, reason: str = "replica failed"):
+        super().__init__(f"replica {replica}: {reason}")
+        self.replica = replica
+        self.reason = reason
+
+
+class FaultInjector:
+    """Test/chaos hook: arms failures that replicas observe at dispatch.
+
+    ``arm(replica)`` makes the next dispatch attempt on that replica raise
+    :class:`ReplicaFailure` (the scheduler also exposes ``fail_replica``,
+    which marks a replica dead *between* dispatches).  Thread-safe; the
+    serving fault-injection tests and chaos drills drive this.
+    """
+
+    def __init__(self):
+        import threading
+
+        self._lock = threading.Lock()
+        self._armed: set[int] = set()
+
+    def arm(self, replica: int) -> None:
+        with self._lock:
+            self._armed.add(replica)
+
+    def check(self, replica: int) -> None:
+        """Raise ReplicaFailure if a fault is armed for ``replica``."""
+        with self._lock:
+            armed = replica in self._armed
+            self._armed.discard(replica)
+        if armed:
+            raise ReplicaFailure(replica, "injected fault")
+
+
 @dataclasses.dataclass
 class StragglerStats:
     step: int

@@ -78,6 +78,33 @@ def shard(x, *names: str | None):
     return jax.lax.with_sharding_constraint(x, logical_to_pspec(names))
 
 
+# ----------------------------------------------------------------- serving
+
+
+def serving_mesh(devices, axis: str = "data") -> "jax.sharding.Mesh":
+    """1-D device mesh for one serving replica group.
+
+    The runtime's sharded-model mode (``MeshConfig.sharded``) gives a
+    replica group more than one device; its compiled program runs over
+    this mesh with the batch split on ``axis`` and any logical-axis
+    annotations inside the model (``shard``) resolved against the same
+    rules the training launcher installs.
+    """
+    import numpy as np
+
+    return jax.sharding.Mesh(np.array(list(devices)), (axis,))
+
+
+def batch_sharding(devices, axis: str = "data") -> "jax.sharding.NamedSharding":
+    """NamedSharding splitting a batch's leading dim across ``devices``.
+
+    Staged host batches are placed with this before entering a sharded
+    replica group's program, so XLA partitions the preprocessing + DNN
+    pipeline across the group instead of replicating it.
+    """
+    return jax.sharding.NamedSharding(serving_mesh(devices, axis), P(axis))
+
+
 # ------------------------------------------------------------------ params
 
 # Path-pattern -> logical names per dimension.  First match wins.  Patterns

@@ -15,11 +15,23 @@ serves tenants by weighted fair queuing, admission quotas and byte
 budgets are per tenant, tenants may pin their own model (own compiled
 program, own recalibrated host/device split), and the compiled-program
 cache LRU-evicts beyond its bound.
+
+Serving is also **multi-replica**: :class:`MeshConfig` partitions the
+visible JAX devices into data-parallel replica groups, each replica holds
+its own compiled program, every replica dispatcher pulls from the shared
+tenant-weighted fair queue (weights span the mesh), and a replica failure
+(:class:`ReplicaFailure` / ``fail_replica``) drains its in-flight batch
+back to the queue for re-dispatch on survivors.  :meth:`SmolRuntime.stats`
+returns the versioned :class:`RuntimeStats` schema.
 """
 
 from repro.core.placement import SplitDecodeOption
+from repro.distributed.fault_tolerance import ElasticPlan, FaultInjector, ReplicaFailure
 from repro.runtime.facade import (
     CompiledPlan,
+    DeviceCompilerConfig,
+    MeshConfig,
+    RecalConfig,
     RunReport,
     RuntimeConfig,
     SmolRuntime,
@@ -44,11 +56,21 @@ from repro.runtime.recalibration import (
 from repro.runtime.scheduler import (
     DEFAULT_TENANT,
     CompletedRequest,
+    ReplicaSnapshot,
     RequestScheduler,
     SchedulerSaturated,
     SchedulerStats,
     TenantConfig,
     TenantStats,
+)
+from repro.runtime.stats import (
+    DeviceProgramSection,
+    EngineSection,
+    MeshSection,
+    RuntimeStats,
+    SchedulerSection,
+    SplitDecodeSection,
+    TenantSection,
 )
 from repro.runtime.workers import HostStream, WorkerPool
 
@@ -60,22 +82,36 @@ __all__ = [
     "CompiledPlan",
     "CompletedRequest",
     "DEFAULT_TENANT",
+    "DeviceCompilerConfig",
+    "DeviceProgramSection",
+    "ElasticPlan",
+    "EngineSection",
+    "FaultInjector",
     "FrameArena",
     "HostStream",
     "MemoryBudget",
     "MemoryConfig",
+    "MeshConfig",
+    "MeshSection",
     "PoolStats",
+    "RecalConfig",
     "RecalibrationEvent",
     "Recalibrator",
+    "ReplicaFailure",
+    "ReplicaSnapshot",
     "RequestScheduler",
     "RunReport",
     "RuntimeConfig",
+    "RuntimeStats",
     "SchedulerSaturated",
+    "SchedulerSection",
     "SchedulerStats",
     "SmolRuntime",
     "SplitDecodeOption",
+    "SplitDecodeSection",
     "StageMeasurement",
     "TenantConfig",
+    "TenantSection",
     "TenantStats",
     "WorkerPool",
     "WorkerRecalibrationEvent",

@@ -20,6 +20,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from typing import Any, Callable, Mapping, Sequence
 
 import jax
@@ -49,16 +50,170 @@ from repro.runtime.recalibration import (
     WorkerRecalibrationEvent,
     WorkerRecalibrator,
 )
+from repro.distributed.collectives import replica_groups
+from repro.distributed.sharding import batch_sharding
 from repro.runtime.scheduler import (
     DEFAULT_TENANT,
     CompletedRequest,
     RequestScheduler,
     TenantConfig,
 )
+from repro.runtime.stats import (
+    DeviceProgramSection,
+    EngineSection,
+    MeshSection,
+    RuntimeStats,
+    SchedulerSection,
+    SplitDecodeSection,
+    TenantSection,
+)
+
+
+@dataclasses.dataclass
+class DeviceCompilerConfig:
+    """Device preprocessing compiler knobs (core/device_compiler.py).
+
+    ``backend``: "fused" lowers the device-op suffix + DNN into one fused
+    program (Pallas resample kernel on TPU, host-matched jnp lowering
+    elsewhere); "reference" keeps the per-op apply_device chain inside one
+    jitted program.
+
+    ``fused_impl``: fused-stage implementation — "auto" (pallas on TPU,
+    jnp elsewhere; REPRO_FUSED_IMPL env overrides — the CI pallas-interpret
+    leg), "pallas", or "jnp".
+
+    ``split_decode`` (§6.4): stop the host at the entropy stage and run
+    dequant+(scaled-)IDCT (kernels/idct) inside the device program.
+    "off" = pixel path; "full" = full-resolution IDCT whenever the stream
+    is eligible (SJPG, 3-channel — 4:4:4 and 4:2:0 both); "scaled" =
+    decode straight to the largest reduced resolution that still covers
+    the plan's resize target; "auto" = the per-factor coefficient-FLOP +
+    staging-byte cost model picks between the pixel path and every factor.
+    Ineligible plans (non-SJPG codec, grayscale) always keep the pixel
+    path.  Booleans are a deprecated legacy spelling (False = "off",
+    True = "full").
+
+    ``dispatch_overhead_s``: per-dispatch-group launch overhead charged by
+    the placement cost model.  None (default) measures it at first
+    planning — one empty device dispatch timed at warmup — so fused-group
+    costing binds by measurement; 0.0 reproduces the legacy
+    (overhead-free) arithmetic.
+    """
+
+    backend: str = "fused"
+    fused_impl: str = "auto"
+    split_decode: bool | str = "off"
+    dispatch_overhead_s: float | None = None
+
+    def __post_init__(self):
+        if self.backend not in ("fused", "reference"):
+            raise ValueError(
+                f"backend must be 'fused' or 'reference', got {self.backend!r}"
+            )
+        if isinstance(self.split_decode, bool):
+            warnings.warn(
+                "boolean split_decode is deprecated; use the policy string "
+                "('off'|'full'|'scaled'|'auto')",
+                DeprecationWarning,
+                stacklevel=3,
+            )
+            self.split_decode = "full" if self.split_decode else "off"
+        if self.split_decode not in SPLIT_DECODE_POLICIES:
+            raise ValueError(
+                f"split_decode must be one of {SPLIT_DECODE_POLICIES}, "
+                f"got {self.split_decode!r}"
+            )
+        if self.fused_impl not in ("auto", "pallas", "jnp"):
+            raise ValueError(f"fused_impl must be auto|pallas|jnp, got {self.fused_impl!r}")
+
+
+@dataclasses.dataclass
+class RecalConfig:
+    """Online-recalibration knobs (§6.3).
+
+    ``every``: items between recalibrations in run(); 0 = off.
+    ``alpha``/``hysteresis``: measurement EWMA smoothing and the move
+    threshold.  ``workers``/``max_workers``: the producer-pool sizing knob
+    recalibrated next to the host/device split.
+    """
+
+    every: int = 0
+    alpha: float = 0.5
+    hysteresis: float = 0.1
+    workers: bool = True
+    max_workers: int = 16
+
+    def __post_init__(self):
+        if self.every < 0:
+            raise ValueError(f"recal every must be >= 0, got {self.every}")
+        if not 0.0 < self.alpha <= 1.0:
+            raise ValueError(f"recal alpha must be in (0, 1], got {self.alpha}")
+        if self.hysteresis < 0:
+            raise ValueError(f"recal hysteresis must be >= 0, got {self.hysteresis}")
+        if self.max_workers < 1:
+            raise ValueError(f"recal max_workers must be >= 1, got {self.max_workers}")
+
+
+@dataclasses.dataclass
+class MeshConfig:
+    """Replicated multi-device serving (the device mesh).
+
+    ``replicas``: data-parallel replica groups, each holding its own
+    compiled program and fed from the shared tenant-weighted fair queue.
+    ``devices``: JAX device ordinals to build the mesh from (None = all of
+    ``jax.devices()``); they are partitioned into ``replicas`` contiguous
+    equal groups.  ``sharded``: when a replica group has more than one
+    device, shard each batch's leading dim across the group
+    (distributed/sharding.py logical-axis rules) instead of leaving the
+    surplus devices idle.
+
+    The default (1 replica, no explicit devices, unsharded) compiles and
+    dispatches exactly as the single-device runtime always has.  CPU CI
+    exercises real meshes via
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=4``.
+    """
+
+    replicas: int = 1
+    devices: tuple[int, ...] | None = None
+    sharded: bool = False
+
+    def __post_init__(self):
+        if self.replicas < 1:
+            raise ValueError(f"mesh replicas must be >= 1, got {self.replicas}")
+        if self.devices is not None:
+            self.devices = tuple(int(d) for d in self.devices)
+            if len(set(self.devices)) != len(self.devices):
+                raise ValueError(f"duplicate mesh device ordinals: {self.devices}")
+
+
+# legacy flat RuntimeConfig kwarg -> (sub-config field, sub-config attr)
+_LEGACY_CONFIG_ALIASES = {
+    "device_backend": ("device", "backend"),
+    "fused_impl": ("device", "fused_impl"),
+    "split_decode": ("device", "split_decode"),
+    "device_dispatch_overhead_s": ("device", "dispatch_overhead_s"),
+    "recalibrate_every": ("recal", "every"),
+    "recal_alpha": ("recal", "alpha"),
+    "recal_hysteresis": ("recal", "hysteresis"),
+    "recal_workers": ("recal", "workers"),
+    "max_recal_workers": ("recal", "max_workers"),
+}
 
 
 @dataclasses.dataclass
 class RuntimeConfig:
+    """Runtime configuration: flat serving/planning knobs + typed
+    sub-configs for the device compiler (``device``), online
+    recalibration (``recal``) and the replica mesh (``mesh``).
+
+    The pre-structured flat kwargs (``device_backend``, ``fused_impl``,
+    ``split_decode``, ``device_dispatch_overhead_s``,
+    ``recalibrate_every``, ``recal_*``, ``max_recal_workers``) still
+    construct — mapped into the sub-configs with one aggregated
+    ``DeprecationWarning`` — and still read as attributes (snapshots taken
+    at construction).  New code should set and read the sub-configs.
+    """
+
     batch_size: int = 32
     num_workers: int = 4
     max_wait_ms: float = 5.0  # dynamic-batching latency knob (serving path)
@@ -67,40 +222,15 @@ class RuntimeConfig:
     estimator: str = "smol"
     host_ops_per_sec: float = 2.0e9
     device_ops_per_sec: float | None = None
-    recalibrate_every: int = 0  # items between recalibrations in run(); 0 = off
-    recal_alpha: float = 0.5
-    recal_hysteresis: float = 0.1
     # memory & threading subsystem: staging-buffer pooling, in-flight byte
     # budget, scheduler admission policy
     memory: MemoryConfig = dataclasses.field(default_factory=MemoryConfig)
-    # worker-count recalibration knob (next to the host/device split)
-    recal_workers: bool = True
-    max_recal_workers: int = 16
-    # --- device preprocessing compiler (core/device_compiler.py) ---
-    # "fused": lower the device-op suffix + DNN into one fused program
-    # (Pallas resample kernel on TPU, host-matched jnp lowering elsewhere);
-    # "reference": per-op apply_device chain inside one jitted program.
-    device_backend: str = "fused"
-    # fused-stage implementation: "auto" (pallas on TPU, jnp elsewhere;
-    # REPRO_FUSED_IMPL env overrides — the CI pallas-interpret leg),
-    # "pallas", or "jnp"
-    fused_impl: str = "auto"
-    # split decode (§6.4): stop the host at the entropy stage and run
-    # dequant+(scaled-)IDCT (kernels/idct) inside the device program.
-    # Policy: "off" = pixel path; "full" = full-resolution IDCT whenever
-    # the stream is eligible (SJPG, 3-channel — 4:4:4 and 4:2:0 both);
-    # "scaled" = decode straight to the largest reduced resolution that
-    # still covers the plan's resize target; "auto" = the per-factor
-    # coefficient-FLOP + staging-byte cost model picks between the pixel
-    # path and every factor.  Bools are accepted for back-compat
-    # (False = "off", True = "full").  Ineligible plans (non-SJPG codec,
-    # grayscale) always keep the pixel path.
-    split_decode: bool | str = False
-    # per-dispatch-group launch overhead charged by the placement cost
-    # model.  None (default) measures it at first planning — one empty
-    # device dispatch timed at warmup — so fused-group costing binds by
-    # measurement; 0.0 reproduces the legacy (overhead-free) arithmetic.
-    device_dispatch_overhead_s: float | None = None
+    # device preprocessing compiler (backend / fused impl / split decode)
+    device: DeviceCompilerConfig = dataclasses.field(default_factory=DeviceCompilerConfig)
+    # online recalibration (split EWMA + worker-count knob)
+    recal: RecalConfig = dataclasses.field(default_factory=RecalConfig)
+    # replicated multi-device serving
+    mesh: MeshConfig = dataclasses.field(default_factory=MeshConfig)
     # --- multi-tenant serving ---
     # per-tenant quotas / weights / pinned models; () = single-tenant.
     # Every TenantConfig becomes a scheduler tenant (weighted-fair service,
@@ -108,30 +238,81 @@ class RuntimeConfig:
     # MemoryBudget carved out of it.
     tenants: tuple[TenantConfig, ...] = ()
     # bound on the compiled device-program cache (LRU eviction beyond it);
-    # multi-model tenants churn programs, so the cache must not grow
-    # without bound
+    # multi-model tenants churn programs — and every replica holds its own
+    # program instance — so the cache must not grow without bound
     program_cache_entries: int = 16
+    # deprecated flat spellings of the sub-config fields above
+    device_backend: dataclasses.InitVar[str | None] = None
+    fused_impl: dataclasses.InitVar[str | None] = None
+    split_decode: dataclasses.InitVar[bool | str | None] = None
+    device_dispatch_overhead_s: dataclasses.InitVar[float | None] = None
+    recalibrate_every: dataclasses.InitVar[int | None] = None
+    recal_alpha: dataclasses.InitVar[float | None] = None
+    recal_hysteresis: dataclasses.InitVar[float | None] = None
+    recal_workers: dataclasses.InitVar[bool | None] = None
+    max_recal_workers: dataclasses.InitVar[int | None] = None
 
-    def __post_init__(self):
-        if self.device_backend not in ("fused", "reference"):
-            raise ValueError(
-                f"device_backend must be 'fused' or 'reference', got {self.device_backend!r}"
+    def __post_init__(
+        self,
+        device_backend,
+        fused_impl,
+        split_decode,
+        device_dispatch_overhead_s,
+        recalibrate_every,
+        recal_alpha,
+        recal_hysteresis,
+        recal_workers,
+        max_recal_workers,
+    ):
+        legacy = {
+            "device_backend": device_backend,
+            "fused_impl": fused_impl,
+            "split_decode": split_decode,
+            "device_dispatch_overhead_s": device_dispatch_overhead_s,
+            "recalibrate_every": recalibrate_every,
+            "recal_alpha": recal_alpha,
+            "recal_hysteresis": recal_hysteresis,
+            "recal_workers": recal_workers,
+            "max_recal_workers": max_recal_workers,
+        }
+        used = {k: v for k, v in legacy.items() if v is not None}
+        if used:
+            warnings.warn(
+                f"RuntimeConfig kwargs {sorted(used)} are deprecated; set the "
+                "structured sub-configs instead (device=DeviceCompilerConfig(...), "
+                "recal=RecalConfig(...))",
+                DeprecationWarning,
+                stacklevel=3,
             )
-        if isinstance(self.split_decode, bool):
-            self.split_decode = "full" if self.split_decode else "off"
-        if self.split_decode not in SPLIT_DECODE_POLICIES:
-            raise ValueError(
-                f"split_decode must be a bool or one of {SPLIT_DECODE_POLICIES}, "
-                f"got {self.split_decode!r}"
-            )
-        if self.fused_impl not in ("auto", "pallas", "jnp"):
-            raise ValueError(f"fused_impl must be auto|pallas|jnp, got {self.fused_impl!r}")
+            # route every legacy kwarg through the sub-config constructors
+            # so their validation (and the bool split_decode mapping) runs
+            patch: dict[str, dict[str, Any]] = {}
+            for name, value in used.items():
+                sub, attr = _LEGACY_CONFIG_ALIASES[name]
+                patch.setdefault(sub, {})[attr] = value
+            with warnings.catch_warnings():
+                # the aggregated warning above covers the bool mapping too
+                warnings.simplefilter("ignore", DeprecationWarning)
+                for sub, kwargs in patch.items():
+                    setattr(self, sub, dataclasses.replace(getattr(self, sub), **kwargs))
         if self.program_cache_entries < 1:
             raise ValueError("program_cache_entries must be >= 1")
         self.tenants = tuple(self.tenants)
         names = [t.name for t in self.tenants]
         if len(names) != len(set(names)):
             raise ValueError(f"duplicate tenant names: {names}")
+        # read-only views under the legacy names (instance attrs shadow the
+        # InitVar class defaults): snapshots of the resolved sub-configs,
+        # kept so pre-redesign readers — `cfg.split_decode` et al. — work
+        self.device_backend = self.device.backend
+        self.fused_impl = self.device.fused_impl
+        self.split_decode = self.device.split_decode
+        self.device_dispatch_overhead_s = self.device.dispatch_overhead_s
+        self.recalibrate_every = self.recal.every
+        self.recal_alpha = self.recal.alpha
+        self.recal_hysteresis = self.recal.hysteresis
+        self.recal_workers = self.recal.workers
+        self.max_recal_workers = self.recal.max_workers
 
 
 @dataclasses.dataclass
@@ -145,6 +326,10 @@ class CompiledPlan:
     # the device preprocessing compiler's product: ONE jitted program for
     # device-placed preprocessing + DNN (device_fn is this program)
     device_program: DevicePreprocProgram | None = None
+    # the full replica set: one program instance per replica group (the
+    # batch-path engine and single-replica serving use device_programs[0]
+    # == device_fn; the scheduler's replica dispatchers use all of them)
+    device_programs: tuple[DevicePreprocProgram, ...] = ()
     # non-None when this plan runs the split-decode placement: the costed
     # scaled-IDCT factor / staging layout the program was compiled for
     coeff: SplitDecodeOption | None = None
@@ -288,8 +473,8 @@ class SmolRuntime:
         at first use (engine/planner warmup) so fused-group costing binds
         by measurement rather than a knob (ROADMAP: measured dispatch
         overhead)."""
-        if self.config.device_dispatch_overhead_s is not None:
-            return self.config.device_dispatch_overhead_s
+        if self.config.device.dispatch_overhead_s is not None:
+            return self.config.device.dispatch_overhead_s
         if self._measured_dispatch_s is None:
             self._measured_dispatch_s = device_compiler.measure_dispatch_overhead()
         return self._measured_dispatch_s
@@ -309,8 +494,8 @@ class SmolRuntime:
                 device_ops_per_sec=self.config.device_ops_per_sec,
                 estimator=self.config.estimator,
                 device_dispatch_overhead_s=self._dispatch_overhead(),
-                device_fused=self.config.device_backend == "fused",
-                split_decode=self.config.split_decode,
+                device_fused=self.config.device.backend == "fused",
+                split_decode=self.config.device.split_decode,
                 entropy_decode_time=self._entropy_time,
                 coeff_geometry=self._coeff_geometry,
             )
@@ -328,7 +513,9 @@ class SmolRuntime:
         return self.planner().pareto()
 
     # ------------------------------------------------------------- compiling
-    def _coeff_stage_fns(self, plan: QueryPlan, coeff: SplitDecodeOption):
+    def _coeff_stage_fns(
+        self, plan: QueryPlan, coeff: SplitDecodeOption, device: Any = None
+    ):
         """Split-decode path (§6.4): host stops after the entropy stage and
         stages one quantized-coefficient tensor per item
         (``jpeg.stage_coefficients`` — 4:2:0's quarter-density chroma packs
@@ -352,9 +539,10 @@ class SmolRuntime:
                 self.config.batch_size,
                 factor=coeff.factor,
                 layout=coeff.layout,
-                impl=self.config.fused_impl,
+                impl=self.config.device.fused_impl,
                 model_key=plan.model.name,
                 cache=self._device_programs,
+                device=device,
             )
         except ValueError:
             return None
@@ -376,7 +564,7 @@ class SmolRuntime:
 
         return host_fn, program, out_shape, out_dtype
 
-    def _stage_fns(self, plan: QueryPlan, placement: Placement):
+    def _stage_fns(self, plan: QueryPlan, placement: Placement, device: Any = None):
         fmt = plan.fmt
         host_ops = list(placement.host_ops)
         device_ops = list(placement.device_ops)
@@ -401,10 +589,11 @@ class SmolRuntime:
             out_meta,
             model_fn,
             self.config.batch_size,
-            backend=self.config.device_backend,
-            impl=self.config.fused_impl,
+            backend=self.config.device.backend,
+            impl=self.config.device.fused_impl,
             model_key=plan.model.name,
             cache=self._device_programs,
+            device=device,
         )
         return host_fn, program, out_shape, out_dtype
 
@@ -417,8 +606,8 @@ class SmolRuntime:
         if self._worker_recal is None:
             self._worker_recal = WorkerRecalibrator(
                 num_workers=self._num_workers,
-                max_workers=max(self.config.max_recal_workers, self._num_workers),
-                alpha=self.config.recal_alpha,
+                max_workers=max(self.config.recal.max_workers, self._num_workers),
+                alpha=self.config.recal.alpha,
             )
         return compiled
 
@@ -427,7 +616,9 @@ class SmolRuntime:
             self.config.host_ops_per_sec * DEFAULT_DEVICE_SPEEDUP
         )
         geom = (
-            self._coeff_geometry(plan.fmt) if self.config.split_decode != "off" else None
+            self._coeff_geometry(plan.fmt)
+            if self.config.device.split_decode != "off"
+            else None
         )
         if geom is not None and geom.channels != 3:
             geom = None
@@ -438,31 +629,76 @@ class SmolRuntime:
             dnn_device_time=1.0 / plan.model.exec_throughput,
             host_ops_per_sec=self.config.host_ops_per_sec,
             device_ops_per_sec=device_rate,
-            alpha=self.config.recal_alpha,
-            hysteresis=self.config.recal_hysteresis,
+            alpha=self.config.recal.alpha,
+            hysteresis=self.config.recal.hysteresis,
             device_dispatch_overhead_s=self._dispatch_overhead(),
-            device_fused=self.config.device_backend == "fused",
-            split_decode=self.config.split_decode if geom is not None else "off",
+            device_fused=self.config.device.backend == "fused",
+            split_decode=self.config.device.split_decode if geom is not None else "off",
             coeff_geometry=geom,
             host_entropy_time=self._entropy_time(plan.fmt) if geom is not None else None,
         )
 
     _COEFF_FROM_PLAN = object()  # sentinel: use plan.coeff (vs an override)
 
+    def _replica_targets(self) -> list[Any]:
+        """One compilation/dispatch target per replica group.
+
+        ``None`` (the single-replica default with no explicit devices)
+        keeps the legacy behaviour: the program runs wherever JAX places
+        it, with no ``device_put`` staging.  Otherwise each replica group
+        resolves to its jax.Device — or, in sharded-model mode, a
+        NamedSharding splitting the batch across the whole group.
+        """
+        mesh = self.config.mesh
+        if mesh.replicas == 1 and mesh.devices is None and not mesh.sharded:
+            return [None]
+        devs = jax.devices()
+        if mesh.devices is not None:
+            try:
+                devs = [devs[i] for i in mesh.devices]
+            except IndexError:
+                raise ValueError(
+                    f"mesh.devices={mesh.devices} out of range for "
+                    f"{len(devs)} visible device(s)"
+                ) from None
+        groups = replica_groups(devs, mesh.replicas)
+        targets: list[Any] = []
+        for group in groups:
+            if len(group) > 1 and mesh.sharded:
+                targets.append(batch_sharding(group))
+            else:
+                # unsharded groups dispatch on their first device (surplus
+                # members idle — enable mesh.sharded to use them)
+                targets.append(group[0])
+        return targets
+
+    @staticmethod
+    def _target_label(target: Any) -> str:
+        if target is None:
+            return "default"
+        if hasattr(target, "device_set"):  # a Sharding over a replica group
+            ids = sorted(d.id for d in target.device_set)
+            return f"sharded[{ids[0]}-{ids[-1]}]"
+        return f"{target.platform}:{target.id}"
+
     def _build_compiled(
         self, plan: QueryPlan, placement: Placement, coeff: Any = _COEFF_FROM_PLAN
     ) -> CompiledPlan:
-        """Compile one (plan, placement) into stage functions + program —
+        """Compile one (plan, placement) into stage functions + programs —
         shared by the default plan and per-tenant pinned plans (all hit the
         same bounded program cache).  ``coeff`` overrides the plan's costed
         split-decode option (recalibration moves between the pixel path,
-        factors and layouts without replanning)."""
+        factors and layouts without replanning).  One program instance is
+        compiled per replica target (cache-keyed on the device), so every
+        replica dispatcher owns a program pinned to its own device/group.
+        """
         if coeff is SmolRuntime._COEFF_FROM_PLAN:
             coeff = plan.coeff
+        targets = self._replica_targets()
         staged = None
         used_coeff: SplitDecodeOption | None = None
         if coeff is not None:
-            staged = self._coeff_stage_fns(plan, coeff)
+            staged = self._coeff_stage_fns(plan, coeff, device=targets[0])
             if staged is not None:
                 used_coeff = coeff
                 # the whole dense pipeline (dequant+IDCT onward) runs device-
@@ -477,14 +713,22 @@ class SmolRuntime:
                     host_ops_per_sec=self.config.host_ops_per_sec,
                     device_ops_per_sec=self.config.device_ops_per_sec,
                     device_dispatch_overhead_s=self._dispatch_overhead(),
-                    device_fused=self.config.device_backend == "fused",
+                    device_fused=self.config.device.backend == "fused",
                 )
         if staged is None:
-            staged = self._stage_fns(plan, placement)
+            staged = self._stage_fns(plan, placement, device=targets[0])
         host_fn, program, out_shape, out_dtype = staged
+        programs = [program]
+        for target in targets[1:]:
+            if used_coeff is not None:
+                _, prog, _, _ = self._coeff_stage_fns(plan, used_coeff, device=target)
+            else:
+                _, prog, _, _ = self._stage_fns(plan, placement, device=target)
+            programs.append(prog)
         return CompiledPlan(
-            plan, placement, host_fn, program, out_shape, out_dtype,
-            device_program=program, coeff=used_coeff,
+            plan, placement, host_fn, programs[0], out_shape, out_dtype,
+            device_program=programs[0], coeff=used_coeff,
+            device_programs=tuple(programs),
         )
 
     def _compile_placement(
@@ -560,18 +804,19 @@ class SmolRuntime:
             )
             if self._scheduler is not None:
                 # drains in-flight work, then swaps fns + staging signature
-                # (device_fn is the compiled program — already jitted, and
-                # cached so revisited splits swap in without a recompile)
+                # (the device side is one already-jitted program per
+                # replica, cached so revisited splits swap in without a
+                # recompile)
                 self._scheduler.rebind(
                     self._compiled.host_fn,
-                    self._compiled.device_fn,
+                    list(self._compiled.device_programs) or self._compiled.device_fn,
                     out_shape=self._compiled.out_shape,
                     out_dtype=self._compiled.out_dtype,
                 )
         # second knob: resize the producer pool from the same measurement
         # (no recompile — the engine reads num_workers per run, the
         # scheduler grows/drains its thread set online)
-        if self.config.recal_workers and self._worker_recal is not None:
+        if self.config.recal.workers and self._worker_recal is not None:
             new_workers, workers_changed = self._worker_recal.update(measurement)
             self.worker_recalibrations.append(self._worker_recal.events[-1])
             if workers_changed:
@@ -600,7 +845,7 @@ class SmolRuntime:
         """
         compiled = self.compile()
         n_before = len(self.recalibrations)
-        chunk = self.config.recalibrate_every
+        chunk = self.config.recal.every
         if chunk <= 0 or chunk >= len(corpus):
             outputs, stats = self.engine().run(
                 corpus, return_outputs=return_outputs, tenants=tenants
@@ -640,9 +885,12 @@ class SmolRuntime:
         compiled = self.compile()
         if self._scheduler is None:
             mem = self.config.memory
+            targets = self._replica_targets()
             self._scheduler = RequestScheduler(
                 compiled.host_fn,
-                compiled.device_fn,  # the same compiled program the engine gets
+                # one compiled program per replica (replica 0's program is
+                # the same one the batch-path engine gets)
+                list(compiled.device_programs) or compiled.device_fn,
                 compiled.out_shape,
                 compiled.out_dtype,
                 max_batch=self.config.batch_size,
@@ -653,6 +901,8 @@ class SmolRuntime:
                 admission_timeout_s=mem.admission_timeout_s,
                 budget=mem.build_budget(),
                 tenants=self.config.tenants,
+                num_replicas=len(targets),
+                replica_labels=[self._target_label(t) for t in targets],
             )
             # tenants pinning their own model serve through their own
             # compiled plan: batches never mix across bindings
@@ -660,9 +910,20 @@ class SmolRuntime:
                 if tcfg.model is not None:
                     tc = self.compile_tenant(tcfg.name)
                     self._scheduler.bind_tenant(
-                        tcfg.name, tc.host_fn, tc.device_fn, tc.out_shape, tc.out_dtype
+                        tcfg.name,
+                        tc.host_fn,
+                        list(tc.device_programs) or tc.device_fn,
+                        tc.out_shape,
+                        tc.out_dtype,
                     )
         self._scheduler.start()
+
+    def fail_replica(self, index: int) -> None:
+        """Fault hook: take serving replica ``index`` out of the mesh (see
+        :meth:`RequestScheduler.fail_replica`)."""
+        if self._scheduler is None:
+            raise RuntimeError("start_serving() before fail_replica()")
+        self._scheduler.fail_replica(index)
 
     def submit(self, item: Any, tenant: str = DEFAULT_TENANT) -> int:
         if self._scheduler is None:
@@ -705,7 +966,11 @@ class SmolRuntime:
             fresh = self._build_compiled(compiled.plan, placement, coeff=recal.chosen_coeff)
             self._tenant_compiled[tenant] = fresh
             self._scheduler.bind_tenant(
-                tenant, fresh.host_fn, fresh.device_fn, fresh.out_shape, fresh.out_dtype
+                tenant,
+                fresh.host_fn,
+                list(fresh.device_programs) or fresh.device_fn,
+                fresh.out_shape,
+                fresh.out_dtype,
             )
         return changed
 
@@ -715,71 +980,83 @@ class SmolRuntime:
         """Live producer-pool size (tracks the recalibration knob)."""
         return self._num_workers
 
-    def stats(self) -> dict[str, Any]:
-        """Memory/threading occupancy across the runtime's hot paths.
+    def stats(self) -> RuntimeStats:
+        """Versioned, typed snapshot across the runtime's hot paths.
 
-        Keys: ``num_workers``; ``engine`` with pool/budget snapshots from
-        the batch path (None until a batch engine ran with pooling on);
-        ``scheduler`` with request counters and the serving-side budget;
-        ``program_cache`` with compile/hit/eviction counters; ``tenants``
-        with per-tenant serving counters, byte-budget occupancy, and the
-        plan each tenant is bound to; ``split_decode`` (when the policy is
-        on) with the chosen scaled-IDCT factor and staging layout.
+        Returns :class:`~repro.runtime.stats.RuntimeStats` —
+        ``schema_version``, per-tenant sections, the replica ``mesh``
+        section (per-replica dispatch counters + the elastic plan after a
+        failure), ``program_cache`` counters, the compiled
+        ``device_program``, the ``split_decode`` outcome, and engine/
+        scheduler memory occupancy.  ``stats().to_dict()`` is the JSON-safe
+        wire form; dict-style access still resolves with a
+        ``DeprecationWarning``.
         """
-        out: dict[str, Any] = {"num_workers": self._num_workers, "engine": None, "scheduler": None}
-        out["program_cache"] = self._device_programs.stats()
-        if self._measured_dispatch_s is not None:
-            out["measured_dispatch_overhead_s"] = self._measured_dispatch_s
-        if self._scheduler is not None and self._scheduler._tenants:
+        tenants: dict[str, TenantSection] = {}
+        scheduler_section: SchedulerSection | None = None
+        mesh_section: MeshSection | None = None
+        if self._scheduler is not None:
             sched = self._scheduler
-            tenants: dict[str, Any] = {}
             for name, tstats in sched.tenants.items():
                 tbudget = sched.tenant_budget(name)
-                entry: dict[str, Any] = {
-                    "stats": dataclasses.replace(tstats),
-                    "budget": tbudget.stats() if tbudget is not None else None,
-                }
                 cfg = self._tenant_cfgs.get(name)
                 compiled = (
                     self._tenant_compiled.get(name)
                     if cfg is not None and cfg.model is not None
                     else self._compiled
                 )
-                if compiled is not None:
-                    entry["plan"] = compiled.plan.key
-                    entry["split"] = compiled.placement.split
-                tenants[name] = entry
-            out["tenants"] = tenants
+                tenants[name] = TenantSection(
+                    stats=dataclasses.replace(tstats),
+                    budget=tbudget.stats() if tbudget is not None else None,
+                    plan=compiled.plan.key if compiled is not None else None,
+                    split=compiled.placement.split if compiled is not None else None,
+                )
+            scheduler_section = SchedulerSection(
+                stats=dataclasses.replace(sched.stats),
+                budget=sched.budget.stats() if sched.budget is not None else None,
+            )
+            mesh_section = MeshSection(
+                replicas=tuple(sched.replica_snapshots()),
+                alive=sched.alive_replicas,
+                sharded=self.config.mesh.sharded,
+                elastic_plan=sched.elastic_plan,
+            )
+        device_program = None
         if self._compiled is not None and self._compiled.device_program is not None:
             prog = self._compiled.device_program
-            out["device_program"] = {
-                "backend": prog.backend,
-                "impl": prog.impl,
-                "fused": prog.fused,
-                "stages": list(prog.stages),
-                "dispatch_count": prog.dispatch_count,
-                "dispatches_per_batch": prog.dispatches_per_batch,
-            }
-        if self.config.split_decode != "off" and self._compiled is not None:
+            device_program = DeviceProgramSection(
+                backend=prog.backend,
+                impl=prog.impl,
+                fused=prog.fused,
+                stages=tuple(prog.stages),
+                dispatch_count=prog.dispatch_count,
+                dispatches_per_batch=prog.dispatches_per_batch,
+            )
+        split_decode = None
+        if self.config.device.split_decode != "off" and self._compiled is not None:
             coeff = self._compiled.coeff
-            out["split_decode"] = {
-                "policy": self.config.split_decode,
+            split_decode = SplitDecodeSection(
+                policy=self.config.device.split_decode,
                 # factor 0 = the plan fell back to the pixel path
-                "factor": coeff.factor if coeff is not None else 0,
-                "point": coeff.point if coeff is not None else 0,
-                "layout": coeff.layout if coeff is not None else None,
-                "staging_bytes": coeff.staging_bytes if coeff is not None else 0,
-            }
+                factor=coeff.factor if coeff is not None else 0,
+                point=coeff.point if coeff is not None else 0,
+                layout=coeff.layout if coeff is not None else None,
+                staging_bytes=coeff.staging_bytes if coeff is not None else 0,
+            )
         engine = self._compiled.engine if self._compiled is not None else None
-        if engine is not None:
-            out["engine"] = {
-                "pool": engine.pool_stats(),
-                "budget": engine.budget_stats(),
-            }
-        if self._scheduler is not None:
-            sched = self._scheduler
-            out["scheduler"] = {
-                "stats": dataclasses.replace(sched.stats),
-                "budget": sched.budget.stats() if sched.budget is not None else None,
-            }
-        return out
+        engine_section = (
+            EngineSection(pool=engine.pool_stats(), budget=engine.budget_stats())
+            if engine is not None
+            else None
+        )
+        return RuntimeStats(
+            num_workers=self._num_workers,
+            measured_dispatch_overhead_s=self._measured_dispatch_s,
+            program_cache=self._device_programs.stats(),
+            engine=engine_section,
+            scheduler=scheduler_section,
+            tenants=tenants,
+            mesh=mesh_section,
+            device_program=device_program,
+            split_decode=split_decode,
+        )

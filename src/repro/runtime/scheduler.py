@@ -1,5 +1,6 @@
 """Request-level front end over compiled plans: dynamic batching + reorder,
-now **multi-tenant** (weighted-fair scheduling + per-tenant admission).
+**multi-tenant** (weighted-fair scheduling + per-tenant admission) and
+**multi-replica** (one shared fair queue feeding N replica dispatchers).
 
 The batch API (:meth:`repro.core.engine.PipelinedEngine.run`) assumes the
 whole corpus is present up front.  Serving gets items one at a time, from
@@ -13,9 +14,25 @@ the server:
   overrides the global default, and a batch closes at the *tightest*
   deadline of any tenant holding a slot in it — latency tenants dispatch
   early, throughput tenants keep batching;
+* **replica dispatchers** — a binding may carry one compiled program *per
+  replica* (``device_fn`` as a sequence, or ``num_replicas`` over one
+  function); each replica runs its own batcher thread, and every batcher
+  pulls from the *global* per-tenant ready deques under one lock, so
+  tenant weights span replicas (a weight-4 tenant gets 4x service on the
+  whole mesh, not per replica).  A replica failure — a dispatch raising
+  :class:`~repro.distributed.fault_tolerance.ReplicaFailure`, or
+  :meth:`fail_replica` marking it dead between dispatches — drains the
+  failed batch's items *back to the front* of their tenants' ready deques
+  and re-dispatches them on surviving replicas (zero requests lost);
+  ``plan_elastic_restart`` sizes the remaining mesh, and when the last
+  replica dies the scheduler degrades to completing requests with the
+  failure error instead of hanging;
 * **a reorder buffer** — device batches complete in dispatch order but
   requests may finish host preprocessing out of order; :meth:`drain`
-  releases completed requests strictly in submission (uid) order;
+  releases completed requests in submission (uid) order, except that
+  completions belonging to *latency tenants* (``max_wait_ms`` set) leave
+  ahead of throughput tenants' (drain priority: a latency tenant's
+  finished request never queues behind a throughput tenant's backlog);
 * **weighted fair queuing** — every request belongs to a tenant
   (:class:`TenantConfig`; ``submit(item, tenant=...)``).  Both contention
   points — host-worker pickup and batch-slot formation — serve tenants by
@@ -60,6 +77,11 @@ from typing import Any, Callable, Mapping, Sequence
 
 import numpy as np
 
+from repro.distributed.fault_tolerance import (
+    ElasticPlan,
+    ReplicaFailure,
+    plan_elastic_restart,
+)
 from repro.runtime.memory import MemoryBudget
 
 DEFAULT_TENANT = "default"
@@ -152,22 +174,81 @@ class SchedulerStats:
     host_busy_seconds: float = 0.0
     device_busy_seconds: float = 0.0
     admission_blocked_seconds: float = 0.0  # time submit() spent backpressured
+    replica_failures: int = 0  # replicas lost from the serving mesh
+    redispatched_items: int = 0  # items drained off failed replicas + re-served
 
     @property
     def mean_batch_size(self) -> float:
         return self.batch_items / self.batches if self.batches else 0.0
 
 
+@dataclasses.dataclass(frozen=True)
+class ReplicaSnapshot:
+    """One replica dispatcher's counters (the mesh observability surface)."""
+
+    index: int
+    device: str  # facade-supplied label ("cpu:0", "sharded[0-3]", ...)
+    alive: bool
+    batches: int
+    items: int
+    dispatch_errors: int
+    redispatched_items: int  # items drained back off this replica on failure
+
+
+class _ReplicaState:
+    __slots__ = ("index", "device", "alive", "batches", "items",
+                 "dispatch_errors", "redispatched_items")
+
+    def __init__(self, index: int, device: str):
+        self.index = index
+        self.device = device
+        self.alive = True
+        self.batches = 0
+        self.items = 0
+        self.dispatch_errors = 0
+        self.redispatched_items = 0
+
+    def snapshot(self) -> ReplicaSnapshot:
+        return ReplicaSnapshot(
+            index=self.index,
+            device=self.device,
+            alive=self.alive,
+            batches=self.batches,
+            items=self.items,
+            dispatch_errors=self.dispatch_errors,
+            redispatched_items=self.redispatched_items,
+        )
+
+
+def _as_device_fns(device_fn) -> tuple:
+    """Normalize a binding's device side: one callable, or one per replica."""
+    if isinstance(device_fn, (list, tuple)):
+        fns = tuple(device_fn)
+        if not fns:
+            raise ValueError("device_fn sequence must be non-empty")
+        return fns
+    return (device_fn,)
+
+
 class _Binding:
     """One compiled plan's stage functions + staging signature.  Tenants
-    sharing a binding (by identity) may share device batches."""
+    sharing a binding (by identity) may share device batches.  The device
+    side is one compiled program per replica (a single program is
+    replicated across all dispatchers)."""
 
-    __slots__ = ("host_fn", "device_fn", "out_shape", "out_dtype", "item_nbytes")
+    __slots__ = ("host_fn", "device_fns", "out_shape", "out_dtype", "item_nbytes")
 
     def __init__(self, host_fn, device_fn, out_shape, out_dtype):
         self.host_fn = host_fn
-        self.device_fn = device_fn
+        self.device_fns = _as_device_fns(device_fn)
         self.retarget(out_shape, out_dtype)
+
+    @property
+    def device_fn(self):  # the single-replica view (engine/batch path)
+        return self.device_fns[0]
+
+    def device_fn_for(self, replica: int):
+        return self.device_fns[replica % len(self.device_fns)]
 
     def retarget(self, out_shape, out_dtype) -> None:
         self.out_shape = tuple(out_shape)
@@ -189,6 +270,7 @@ class _TenantState:
         "vt_ready",
         "stats",
         "meas_snapshot",
+        "drain_queue",
     )
 
     def __init__(self, config: TenantConfig, binding: _Binding, budget):
@@ -202,17 +284,21 @@ class _TenantState:
         self.vt_ready = 0.0
         self.stats = TenantStats()
         self.meas_snapshot = (0.0, 0, 0.0, 0)  # host_busy, host_items, dev_busy, completed
+        # latency tenants only (max_wait_ms set): uids in submission order,
+        # the drain-priority release queue
+        self.drain_queue: collections.deque = collections.deque()
 
 
 class RequestScheduler:
     """Dynamic-batching, weighted-fair executor over compiled plan bindings."""
 
     _STOP = object()
+    _KICK = object()  # wake a blocked replica batcher to re-check the deques
 
     def __init__(
         self,
         host_fn: Callable[[Any], np.ndarray],
-        device_fn: Callable[[Any], Any],
+        device_fn: Callable[[Any], Any] | Sequence[Callable[[Any], Any]],
         out_shape: tuple[int, ...],
         out_dtype: Any,
         max_batch: int,
@@ -223,6 +309,8 @@ class RequestScheduler:
         admission_timeout_s: float = 30.0,
         budget: MemoryBudget | None = None,
         tenants: Sequence[TenantConfig] | None = None,
+        num_replicas: int | None = None,
+        replica_labels: Sequence[str] | None = None,
     ):
         if admission not in ("block", "reject"):
             raise ValueError(f"admission must be 'block' or 'reject', got {admission!r}")
@@ -238,6 +326,25 @@ class RequestScheduler:
         self.stats = SchedulerStats()
 
         self._default_binding = _Binding(host_fn, device_fn, out_shape, out_dtype)
+        # replica mesh: one dispatcher per replica, all pulling from the
+        # shared fair queue.  ``device_fn`` as a sequence gives each replica
+        # its own compiled program; a single callable is replicated.
+        n = num_replicas if num_replicas is not None else len(
+            self._default_binding.device_fns
+        )
+        if n < 1:
+            raise ValueError(f"num_replicas must be >= 1, got {n}")
+        if replica_labels is not None:
+            labels = [str(x) for x in replica_labels]
+            if len(labels) != n:
+                raise ValueError(
+                    f"{len(labels)} replica_labels for {n} replicas"
+                )
+        else:
+            labels = [f"replica{i}" for i in range(n)]
+        self._replicas = [_ReplicaState(i, labels[i]) for i in range(n)]
+        self._fail_exc: BaseException | None = None  # set when the mesh is gone
+        self._elastic: ElasticPlan | None = None
         self._tenants: dict[str, _TenantState] = {}
         for cfg in tenants or ():
             self._register_tenant(cfg)
@@ -253,10 +360,14 @@ class RequestScheduler:
         self._ingress_cond = threading.Condition()
         self._ingress_stops = 0
         self._vclock_ingress = 0.0
-        # ready: host outputs flow through one queue to the batcher thread,
-        # which stashes them into per-tenant deques (batcher-private)
+        # ready: host outputs flow through one queue to the replica
+        # batchers, which stash them into per-tenant deques; the deques and
+        # the ready virtual clock are shared across batchers (tenant
+        # weights span replicas) and guarded by _ready_lock
         self._ready: queue.Queue = queue.Queue()
+        self._ready_lock = threading.Lock()
         self._vclock_ready = 0.0
+        self._drained_ahead: set[int] = set()  # uids released by drain priority
         self._done: dict[int, CompletedRequest] = {}
         self._done_lock = threading.Lock()
         self._done_event = threading.Event()
@@ -324,16 +435,79 @@ class RequestScheduler:
                 f"unknown tenant {tenant!r}; configured: {sorted(self._tenants)}"
             ) from None
 
+    # -------------------------------------------------------------- replicas
+    @property
+    def num_replicas(self) -> int:
+        return len(self._replicas)
+
+    @property
+    def alive_replicas(self) -> int:
+        return sum(1 for r in self._replicas if r.alive)
+
+    @property
+    def elastic_plan(self) -> ElasticPlan | None:
+        """Mesh sizing after the most recent replica loss (None = intact)."""
+        return self._elastic
+
+    def replica_snapshots(self) -> list[ReplicaSnapshot]:
+        """Frozen per-replica counters, index order."""
+        with self._stats_lock:
+            return [r.snapshot() for r in self._replicas]
+
+    def fail_replica(self, index: int) -> None:
+        """Fault hook: mark replica ``index`` dead *between* dispatches.
+
+        Its batcher exits at the next loop; a batch it had already formed
+        drains back to the shared queue and re-dispatches on survivors.
+        (A failure *during* dispatch is modelled by the device_fn raising
+        :class:`ReplicaFailure` — e.g. via ``FaultInjector``.)
+        """
+        replica = self._replicas[index]
+        self._note_replica_dead(replica)
+        if self.alive_replicas == 0 and self._fail_exc is None:
+            self._fail_exc = ReplicaFailure(index, "replica marked failed")
+        # wake every batcher: the dead one to exit, survivors to take over
+        for _ in self._replicas:
+            self._ready.put(self._KICK)
+
+    def _note_replica_dead(self, replica: _ReplicaState) -> None:
+        with self._stats_lock:
+            if replica.alive:
+                replica.alive = False
+                self.stats.replica_failures += 1
+        survivors = self.alive_replicas
+        if survivors:
+            self._elastic = plan_elastic_restart(
+                alive_chips=survivors,
+                model_parallel=1,
+                target_global_batch=self.max_batch * len(self._replicas),
+                per_replica_batch=self.max_batch,
+            )
+
     # --------------------------------------------------------------- control
     def start(self) -> None:
         if self._running:
             return
+        # drop sentinels left over from a previous stop()/failure epoch so
+        # fresh batchers don't exit immediately (a clean stop leaves no
+        # real messages behind — flush() ran first)
+        while True:
+            try:
+                msg = self._ready.get_nowait()
+            except queue.Empty:
+                break
+            if msg is not self._STOP and msg is not self._KICK:
+                self._ready.put(msg)
+                break
         self._running = True
         self._threads = [
             threading.Thread(target=self._host_worker, daemon=True)
             for _ in range(self.num_workers)
         ]
-        self._threads.append(threading.Thread(target=self._batcher, daemon=True))
+        self._threads.extend(
+            threading.Thread(target=self._replica_batcher, args=(r,), daemon=True)
+            for r in self._replicas
+        )
         for t in self._threads:
             t.start()
 
@@ -355,7 +529,10 @@ class RequestScheduler:
         with self._ingress_cond:
             self._ingress_stops += self.num_workers
             self._ingress_cond.notify_all()
-        self._ready.put(self._STOP)
+        # one stop per batcher thread; batchers that already exited (dead
+        # replicas) leave theirs behind, cleaned up by the next start()
+        for _ in self._replicas:
+            self._ready.put(self._STOP)
         for t in self._threads:
             t.join()
         self._threads = []
@@ -363,7 +540,7 @@ class RequestScheduler:
     def rebind(
         self,
         host_fn: Callable,
-        device_fn: Callable,
+        device_fn: Callable | Sequence[Callable],
         out_shape: tuple[int, ...] | None = None,
         out_dtype: Any = None,
         timeout: float = 60.0,
@@ -374,13 +551,14 @@ class RequestScheduler:
         host_fn reaches the new device_fn, and so the batcher can safely
         reallocate its staging buffer when the new placement changes the
         host-stage output shape/dtype.  Tenants pinned to their own binding
-        via :meth:`bind_tenant` are unaffected.
+        via :meth:`bind_tenant` are unaffected.  ``device_fn`` may again be
+        a per-replica sequence (or one program, replicated).
         """
         self.flush(timeout=timeout)
         with self._rebind_lock:
             b = self._default_binding
             b.host_fn = host_fn
-            b.device_fn = device_fn
+            b.device_fns = _as_device_fns(device_fn)
             # safe to retarget the budget reservation size: flush() left
             # zero requests admitted under the old footprint
             b.retarget(
@@ -392,7 +570,7 @@ class RequestScheduler:
         self,
         tenant: str,
         host_fn: Callable,
-        device_fn: Callable,
+        device_fn: Callable | Sequence[Callable],
         out_shape: tuple[int, ...],
         out_dtype: Any,
         timeout: float = 60.0,
@@ -522,11 +700,20 @@ class RequestScheduler:
     def submit(self, item: Any, tenant: str = DEFAULT_TENANT) -> int:
         if not self._running:
             raise RuntimeError("scheduler is not running; call start() first")
+        if self._fail_exc is not None:
+            raise RuntimeError(
+                "scheduler mesh has no live replicas"
+            ) from self._fail_exc
         state = self._state(tenant)
         self._admit(state)
         with self._submit_lock:
             uid = self._next_uid
             self._next_uid += 1
+            if state.config.max_wait_ms is not None:
+                # latency tenant: record the uid for drain priority (its
+                # completion may leave the reorder buffer ahead of
+                # throughput tenants' backlog)
+                state.drain_queue.append(uid)
         with self._stats_lock:
             self.stats.submitted += 1
             state.stats.submitted += 1
@@ -540,7 +727,13 @@ class RequestScheduler:
         return uid
 
     def drain(self, timeout: float | None = None) -> list[CompletedRequest]:
-        """Completed requests in submission order (the contiguous prefix).
+        """Completed requests in submission order, with drain priority.
+
+        Ordering contract: *latency tenants* (``max_wait_ms`` set) release
+        in per-tenant submission order as soon as their requests complete —
+        never queued behind a throughput tenant's unfinished backlog.
+        Everything else releases as the contiguous global uid prefix (uids
+        already released early are skipped when the prefix reaches them).
 
         With ``timeout=None`` returns whatever has finished; with a timeout,
         waits up to that long for at least one newly drainable request.
@@ -549,9 +742,30 @@ class RequestScheduler:
         while True:
             out = []
             with self._done_lock:
-                while self._next_drain in self._done:
-                    out.append(self._done.pop(self._next_drain))
+                # pass 1 — drain priority: latency tenants' completions go
+                # first, in their own submission order
+                for s in self._tenants.values():
+                    dq = s.drain_queue
+                    while dq and dq[0] in self._done:
+                        uid = dq.popleft()
+                        out.append(self._done.pop(uid))
+                        self._drained_ahead.add(uid)
+                # pass 2 — the global contiguous prefix
+                while True:
+                    if self._next_drain in self._drained_ahead:
+                        self._drained_ahead.discard(self._next_drain)
+                        self._next_drain += 1
+                        continue
+                    if self._next_drain not in self._done:
+                        break
+                    req = self._done.pop(self._next_drain)
                     self._next_drain += 1
+                    # a latency uid released via the prefix: keep its
+                    # tenant's priority queue in sync
+                    s = self._tenants.get(req.tenant)
+                    if s is not None and s.drain_queue and s.drain_queue[0] == req.uid:
+                        s.drain_queue.popleft()
+                    out.append(req)
                 self._done_event.clear()
             if out or deadline is None:
                 return out
@@ -606,13 +820,16 @@ class RequestScheduler:
                 state.stats.host_items += 1
             self._ready.put((state, uid, arr, t_submit))
 
-    # Batcher internals.  The batcher thread is the only reader/writer of
-    # the per-tenant `ready` deques and `vt_ready` clocks — no locking.
+    # Batcher internals.  The per-tenant `ready` deques and the `vt_ready`
+    # clocks are shared by every replica batcher (so tenant weights span
+    # the mesh) — all access goes through _ready_lock.  _stash acquires it
+    # itself; _pick_ready must be called with it held.
     def _stash(self, msg) -> None:
         state, uid, arr, t_submit = msg
-        if not state.ready:
-            state.vt_ready = max(state.vt_ready, self._vclock_ready)
-        state.ready.append((uid, arr, t_submit))
+        with self._ready_lock:
+            if not state.ready:
+                state.vt_ready = max(state.vt_ready, self._vclock_ready)
+            state.ready.append((uid, arr, t_submit))
 
     def _pick_ready(self, candidates: list[_TenantState]) -> _TenantState:
         state = min(candidates, key=lambda s: s.vt_ready)
@@ -620,22 +837,37 @@ class RequestScheduler:
         self._vclock_ready = state.vt_ready
         return state
 
-    def _batcher(self) -> None:
+    def _replica_batcher(self, replica: _ReplicaState) -> None:
         bufs: dict[int, np.ndarray] = {}  # id(binding) -> staging buffer
         while True:
+            if not replica.alive:
+                if self.alive_replicas:
+                    return  # survivors keep serving the shared queue
+                # last replica down: degrade to completing requests with
+                # the failure instead of hanging submitters/flush()
+                if self._fail_exc is None:
+                    self._fail_exc = ReplicaFailure(
+                        replica.index, "replica marked failed"
+                    )
+                self._error_pump()
+                return
             # drain queued host outputs first, so the fairness pick sees
             # every backlogged tenant rather than arrival order
             if not self._drain_ready_nowait():
-                self._drain_pending(bufs)
+                self._drain_pending(bufs, replica)
                 return
-            if any(s.ready for s in self._tenants.values()):
-                if not self._form_batch(bufs, wait=True):
+            with self._ready_lock:
+                backlog = any(s.ready for s in self._tenants.values())
+            if backlog:
+                if not self._form_batch(bufs, replica, wait=True):
                     return
                 continue
             msg = self._ready.get()
             if msg is self._STOP:
-                self._drain_pending(bufs)
+                self._drain_pending(bufs, replica)
                 return
+            if msg is self._KICK:
+                continue
             self._stash(msg)
 
     def _drain_ready_nowait(self) -> bool:
@@ -647,6 +879,8 @@ class RequestScheduler:
                 return True
             if msg is self._STOP:
                 return False
+            if msg is self._KICK:
+                continue
             self._stash(msg)
 
     def _tenant_wait_s(self, state: _TenantState) -> float:
@@ -655,13 +889,15 @@ class RequestScheduler:
         cfg = state.config
         return cfg.max_wait_ms / 1e3 if cfg.max_wait_ms is not None else self.max_wait_s
 
-    def _form_batch(self, bufs: dict, wait: bool) -> bool:
+    def _form_batch(self, bufs: dict, replica: _ReplicaState, wait: bool) -> bool:
         """Form and dispatch ONE batch by weighted-fair pick.  Returns False
         when a stop sentinel was consumed (caller must exit)."""
-        active = [s for s in self._tenants.values() if s.ready]
-        if not active:
-            return True
-        first = self._pick_ready(active)
+        with self._ready_lock:
+            active = [s for s in self._tenants.values() if s.ready]
+            if not active:
+                return True
+            first = self._pick_ready(active)
+            head = first.ready.popleft()
         binding = first.binding
         with self._rebind_lock:  # signature may change across rebinds
             shape, dtype = (self.max_batch, *binding.out_shape), binding.out_dtype
@@ -669,19 +905,29 @@ class RequestScheduler:
         if buf is None or buf.shape != shape or buf.dtype != dtype:
             buf = np.zeros(shape, dtype=dtype)
             bufs[id(binding)] = buf
-        metas: list[tuple[int, float, _TenantState]] = []
-        self._stage(buf, metas, first, first.ready.popleft())
+        metas: list[tuple[int, float, _TenantState, Any]] = []
+        self._stage(buf, metas, first, head)
         # the batch deadline is the tightest max_wait of any tenant with a
         # slot in it: a latency tenant's presence closes the batch early,
         # and joining members can only pull the deadline in, never push it
         t_open = time.perf_counter()
         deadline = t_open + self._tenant_wait_s(first)
         while len(metas) < self.max_batch:
+            if not replica.alive:
+                break  # dispatch path drains the partial batch back
             # only tenants sharing this batch's compiled plan may join it
-            cands = [s for s in self._tenants.values() if s.ready and s.binding is binding]
-            if cands:
-                state = self._pick_ready(cands)
-                self._stage(buf, metas, state, state.ready.popleft())
+            with self._ready_lock:
+                cands = [
+                    s for s in self._tenants.values()
+                    if s.ready and s.binding is binding
+                ]
+                if cands:
+                    state = self._pick_ready(cands)
+                    item = state.ready.popleft()
+                else:
+                    state = None
+            if state is not None:
+                self._stage(buf, metas, state, item)
                 deadline = min(deadline, t_open + self._tenant_wait_s(state))
                 continue
             if not wait:
@@ -694,17 +940,32 @@ class RequestScheduler:
             except queue.Empty:
                 break
             if msg is self._STOP:
-                self._dispatch(binding, buf, metas)
-                self._drain_pending(bufs)
+                self._dispatch(binding, buf, metas, replica)
+                self._drain_pending(bufs, replica)
                 return False
+            if msg is self._KICK:
+                continue
             self._stash(msg)
-        self._dispatch(binding, buf, metas)
+        if len(self._replicas) > 1:
+            # about to block on the device: if backlog remains, kick a
+            # sibling batcher so batches overlap across replicas
+            with self._ready_lock:
+                leftover = any(s.ready for s in self._tenants.values())
+            if leftover:
+                self._ready.put(self._KICK)
+        self._dispatch(binding, buf, metas, replica)
         return True
 
-    def _drain_pending(self, bufs: dict) -> None:
-        """Dispatch whatever is still staged in tenant deques (stop path)."""
-        while any(s.ready for s in self._tenants.values()):
-            self._form_batch(bufs, wait=False)
+    def _drain_pending(self, bufs: dict, replica: _ReplicaState) -> None:
+        """Dispatch whatever is still staged in tenant deques (stop path).
+        A dead replica leaves the deques alone — survivors (or the error
+        pump) own them."""
+        def backlog() -> bool:
+            with self._ready_lock:
+                return any(s.ready for s in self._tenants.values())
+
+        while replica.alive and backlog():
+            self._form_batch(bufs, replica, wait=False)
 
     def _stage(self, buf: np.ndarray, metas: list, state: _TenantState, msg: tuple) -> bool:
         """Copy one host output into the staging buffer; errors (e.g. an
@@ -716,30 +977,105 @@ class RequestScheduler:
         except (ValueError, TypeError) as e:
             self._complete_error(state, uid, t_submit, e)
             return False
-        metas.append((uid, t_submit, state))
+        # keep arr: a replica failure drains the item back to the queue
+        metas.append((uid, t_submit, state, arr))
         return True
 
-    def _dispatch(self, binding: _Binding, buf: np.ndarray, metas: list) -> None:
+    def _requeue(self, metas: list) -> None:
+        """Drain a failed replica's staged items back to the *front* of
+        their tenants' ready deques (uid order preserved) for re-dispatch
+        on survivors."""
+        with self._ready_lock:
+            for uid, t_submit, state, arr in reversed(metas):
+                if not state.ready:
+                    state.vt_ready = max(state.vt_ready, self._vclock_ready)
+                state.ready.appendleft((uid, arr, t_submit))
+
+    def _on_replica_failure(
+        self, replica: _ReplicaState, metas: list, exc: ReplicaFailure
+    ) -> None:
+        """A dispatch hit a dead replica: take it out of the mesh and either
+        re-dispatch its batch on survivors or (mesh gone) fail the batch."""
+        self._note_replica_dead(replica)
+        with self._stats_lock:
+            replica.dispatch_errors += 1
+        if self.alive_replicas:
+            if metas:
+                self._requeue(metas)
+                with self._stats_lock:
+                    replica.redispatched_items += len(metas)
+                    self.stats.redispatched_items += len(metas)
+            # wake survivors to pick up the drained items; the caller's
+            # batcher loop sees the dead replica and exits
+            for _ in range(self.alive_replicas):
+                self._ready.put(self._KICK)
+            return
+        # no survivors: complete the batch with the failure and flip the
+        # scheduler into error-pump mode (loop top picks it up)
+        self._fail_exc = exc
+        for uid, t_submit, state, _arr in metas:
+            self._complete_error(state, uid, t_submit, exc)
+
+    def _error_pump(self) -> None:
+        """All replicas are dead: complete everything still flowing through
+        the pipe with the mesh failure, until stop().  Keeps flush()/drain()
+        honest instead of hanging."""
+        exc = self._fail_exc
+        while True:
+            with self._ready_lock:
+                stranded = []
+                for s in self._tenants.values():
+                    while s.ready:
+                        stranded.append((s, s.ready.popleft()))
+            for state, (uid, arr, t_submit) in stranded:
+                self._complete_error(state, uid, t_submit, exc)
+            msg = self._ready.get()
+            if msg is self._STOP:
+                return
+            if msg is self._KICK:
+                continue
+            state, uid, arr, t_submit = msg
+            self._complete_error(state, uid, t_submit, exc)
+
+    def _dispatch(
+        self, binding: _Binding, buf: np.ndarray, metas: list, replica: _ReplicaState
+    ) -> None:
         if not metas:
+            return
+        if self._fail_exc is not None:
+            for uid, t_submit, state, _arr in metas:
+                self._complete_error(state, uid, t_submit, self._fail_exc)
+            return
+        if not replica.alive:
+            # marked dead between forming and dispatching (fail_replica):
+            # drain the batch back instead of running it on a dead replica
+            self._on_replica_failure(
+                replica, metas, ReplicaFailure(replica.index, "replica marked failed")
+            )
             return
         t_in = time.perf_counter()
         with self._rebind_lock:
-            device_fn = binding.device_fn
+            device_fn = binding.device_fn_for(replica.index)
         try:
             out = np.asarray(device_fn(buf))  # blocks until device done
+        except ReplicaFailure as e:
+            self._on_replica_failure(replica, metas, e)
+            return
         except BaseException as e:  # noqa: BLE001 — delivered via drain()
-            for uid, t_submit, state in metas:
+            for uid, t_submit, state, _arr in metas:
                 self._complete_error(state, uid, t_submit, e)
             return
         dt = time.perf_counter() - t_in
         now = time.perf_counter()
-        per_tenant = collections.Counter(state.config.name for _, _, state in metas)
-        states = {state.config.name: state for _, _, state in metas}
+        per_tenant = collections.Counter(state.config.name for _, _, state, _ in metas)
+        states = {state.config.name: state for _, _, state, _ in metas}
         with self._stats_lock:
             self.stats.device_busy_seconds += dt
             self.stats.batches += 1
             self.stats.batch_items += len(metas)
             self.stats.completed += len(metas)
+            replica.batches += 1
+            replica.items += len(metas)
             for name, n in per_tenant.items():
                 ts = states[name].stats
                 # attribute the batch's device occupancy to tenants in
@@ -748,7 +1084,7 @@ class RequestScheduler:
                 ts.batch_items += n
                 ts.completed += n
         with self._done_lock:
-            for row, (uid, t_submit, state) in enumerate(metas):
+            for row, (uid, t_submit, state, _arr) in enumerate(metas):
                 self._done[uid] = CompletedRequest(
                     uid, out[row], t_submit, now, tenant=state.config.name
                 )

@@ -5,10 +5,11 @@ model per deployment.  Now every vision request goes through
 :class:`repro.runtime.SmolRuntime`: the planner picks the (model, format)
 plan, the placement optimizer splits preprocessing across host/device, the
 device preprocessing compiler lowers the device half + DNN into one fused
-program (``RuntimeConfig.device_backend``), the request scheduler
-dynamically batches, and the recalibration loop keeps the split (and the
-host worker count) matched to observed stage occupancy while the server
-runs.
+program (``RuntimeConfig.device.backend``), the request scheduler
+dynamically batches — across every replica of the device mesh
+(``RuntimeConfig.mesh``) — and the recalibration loop keeps the split
+(and the host worker count) matched to observed stage occupancy while the
+server runs.
 
 Resource governance comes from the runtime's memory subsystem
 (``RuntimeConfig.memory``): with ``max_pending`` / ``budget_bytes`` set,
@@ -134,7 +135,7 @@ class VisionServingEngine:
     @property
     def device_backend(self) -> str:
         """'fused' (device preprocessing compiler) or 'reference'."""
-        return self.runtime.config.device_backend
+        return self.runtime.config.device.backend
 
     @property
     def device_program(self):
@@ -144,21 +145,37 @@ class VisionServingEngine:
         return compiled.device_program
 
     @property
-    def split_decode(self) -> dict | None:
-        """The split-decode placement actually serving: policy, chosen
+    def split_decode(self):
+        """The split-decode placement actually serving
+        (:class:`~repro.runtime.SplitDecodeSection`): policy, chosen
         scaled-IDCT factor (0 = pixel-path fallback) and staging layout;
         None when the policy is off."""
         self.runtime.compile()
-        return self.runtime.stats().get("split_decode")
+        return self.runtime.stats().split_decode
 
     @property
     def split_decode_factor(self) -> int:
         """Chosen scaled-IDCT resolution divisor (0 = pixel path/off)."""
         info = self.split_decode
-        return info["factor"] if info is not None else 0
+        return info.factor if info is not None else 0
 
-    def stats(self) -> dict:
-        """Memory/threading occupancy (pool, budget, admission counters)."""
+    @property
+    def replicas(self):
+        """Per-replica dispatch counters
+        (:class:`~repro.runtime.ReplicaSnapshot` tuple; empty before
+        serving starts)."""
+        mesh = self.runtime.stats().mesh
+        return mesh.replicas if mesh is not None else ()
+
+    def fail_replica(self, index: int) -> None:
+        """Chaos/ops hook: take serving replica ``index`` out of the mesh
+        (in-flight items re-dispatch on survivors; zero requests lost)."""
+        self.runtime.fail_replica(index)
+
+    def stats(self):
+        """Versioned runtime snapshot
+        (:class:`~repro.runtime.RuntimeStats`): memory/threading occupancy,
+        per-tenant counters, the replica mesh, program-cache rates."""
         return self.runtime.stats()
 
     @staticmethod

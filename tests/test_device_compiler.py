@@ -18,7 +18,7 @@ from repro.preprocessing import jpeg
 from repro.preprocessing import ops as P
 from repro.preprocessing.formats import ImageFormat, StoredImage
 from repro.preprocessing.ops import TensorMeta
-from repro.runtime import RuntimeConfig, SmolRuntime
+from repro.runtime import DeviceCompilerConfig, RuntimeConfig, SmolRuntime
 
 RNG = np.random.default_rng(7)
 IMPLS = ["jnp", "pallas"]  # pallas runs in interpret mode on CPU
@@ -380,7 +380,7 @@ INPUT = 32
 FMT = ImageFormat("jpeg", None, 95)
 
 
-def _runtime(corpus, **cfg):
+def _runtime(corpus, device_backend="fused", split_decode="off", **cfg):
     model = ModelSpec("m", INPUT, exec_throughput=50_000.0, accuracy_by_format={FMT.key: 0.9})
     w = np.asarray(jax.random.normal(jax.random.PRNGKey(0), (3 * INPUT * INPUT, 5)) * 0.02)
     # fast DNN + slow host rate: the optimizer pushes preprocessing onto the
@@ -391,7 +391,13 @@ def _runtime(corpus, **cfg):
         [FMT],
         {"m": lambda x: x.reshape(x.shape[0], -1) @ w},
         calibration=corpus[:3],
-        config=RuntimeConfig(batch_size=4, num_workers=2, host_ops_per_sec=1e7, **cfg),
+        config=RuntimeConfig(
+            batch_size=4,
+            num_workers=2,
+            host_ops_per_sec=1e7,
+            device=DeviceCompilerConfig(backend=device_backend, split_decode=split_decode),
+            **cfg,
+        ),
         decode_time=lambda fmt: 1e-4,
     )
 
@@ -424,20 +430,19 @@ def test_runtime_exposes_program_and_counts_dispatches(corpus):
     assert compiled.device_program.fused
     outs, report = rt.run(corpus)
     assert len(outs) == len(corpus)
-    stats = rt.stats()
-    prog = stats["device_program"]
-    assert prog["backend"] == "fused" and prog["dispatches_per_batch"] == 1
+    prog = rt.stats().device_program
+    assert prog.backend == "fused" and prog.dispatches_per_batch == 1
     # one dispatch per batch, nothing hidden: warmup + ceil(12/4) batches
-    assert prog["dispatch_count"] == report.stats.batches + 1
+    assert prog.dispatch_count == report.stats.batches + 1
 
 
 def test_runtime_split_decode_path(corpus):
-    rt = _runtime(corpus, device_backend="fused", split_decode=True)
+    rt = _runtime(corpus, device_backend="fused", split_decode="full")
     compiled = rt.compile()
     assert compiled.placement.split == 0  # whole dense pipeline device-side
     assert compiled.out_dtype == np.dtype(np.int16)  # staging = coefficients
     assert "dequant_idct[mxu]" in compiled.device_program.stages
-    assert compiled.coeff is not None and compiled.coeff.factor == 1  # bool -> "full"
+    assert compiled.coeff is not None and compiled.coeff.factor == 1
     outs, _ = rt.run(corpus)
     ref_outs, _ = _runtime(corpus, device_backend="reference").run(corpus)
     for a, b in zip(outs, ref_outs):
@@ -456,7 +461,7 @@ def corpus_420():
     return [StoredImage.from_array(smooth_image(rng, 72, 88), [FMT_420]) for _ in range(12)]
 
 
-def _runtime_420(corpus, **cfg):
+def _runtime_420(corpus, device_backend="fused", split_decode="off", **cfg):
     model = ModelSpec("m", INPUT, exec_throughput=50_000.0, accuracy_by_format={FMT_420.key: 0.9})
     w = np.asarray(jax.random.normal(jax.random.PRNGKey(0), (3 * INPUT * INPUT, 5)) * 0.02)
     return SmolRuntime(
@@ -464,7 +469,13 @@ def _runtime_420(corpus, **cfg):
         [FMT_420],
         {"m": lambda x: x.reshape(x.shape[0], -1) @ w},
         calibration=corpus[:3],
-        config=RuntimeConfig(batch_size=4, num_workers=2, host_ops_per_sec=1e7, **cfg),
+        config=RuntimeConfig(
+            batch_size=4,
+            num_workers=2,
+            host_ops_per_sec=1e7,
+            device=DeviceCompilerConfig(backend=device_backend, split_decode=split_decode),
+            **cfg,
+        ),
         decode_time=lambda fmt: 1e-4,
     )
 
@@ -484,9 +495,9 @@ def test_runtime_split_decode_420_end_to_end(corpus_420):
     for a, b in zip(outs, ref_outs):
         np.testing.assert_allclose(a, b, atol=1e-2)
         assert np.argmax(a) == np.argmax(b)
-    info = rt.stats()["split_decode"]
-    assert info["policy"] == "full" and info["factor"] == 1
-    assert info["layout"] == "packed" and info["staging_bytes"] > 0
+    info = rt.stats().split_decode
+    assert info.policy == "full" and info.factor == 1
+    assert info.layout == "packed" and info.staging_bytes > 0
 
 
 def test_runtime_split_decode_scaled_policy():
@@ -510,8 +521,8 @@ def test_runtime_split_decode_scaled_policy():
         x = np.asarray(P.apply_chain_host(chain, pix), np.float32)[None]
         ref = np.asarray(rt.model_fns["m"](x))[0]
         np.testing.assert_allclose(out, ref, atol=1e-2)
-    info = rt.stats()["split_decode"]
-    assert info["factor"] == 2 and info["point"] == 4
+    info = rt.stats().split_decode
+    assert info.factor == 2 and info.point == 4
 
 
 def test_planner_split_decode_skips_ineligible_streams():

@@ -486,15 +486,15 @@ def test_facade_pinned_model_tenants_get_own_plans_and_recalibrators():
         assert all(d.error is None for d in done)
         assert all(uids[d.uid] == d.tenant for d in done)
         stats = runtime.stats()
-        tstats = stats["tenants"]
+        tstats = stats.tenants
         # the pinned tenant serves through its own model's plan
-        assert tstats["pinned"]["plan"].startswith("slow@")
-        assert tstats["gold"]["plan"].startswith("fast@")
+        assert tstats["pinned"].plan.startswith("slow@")
+        assert tstats["gold"].plan.startswith("fast@")
         # two programs compiled (fast plan + slow plan), none evicted
-        assert stats["program_cache"].misses == 2
+        assert stats.program_cache.misses == 2
         # the gold tenant's budget child carries its floor
-        assert tstats["gold"]["budget"].floor_bytes == 1 << 20
-        assert tstats["gold"]["budget"].in_flight_bytes == 0
+        assert tstats["gold"].budget.floor_bytes == 1 << 20
+        assert tstats["gold"].budget.in_flight_bytes == 0
         # per-tenant recalibration runs against the pinned tenant's own
         # recalibrator and tags its events
         runtime.serving_recalibrate("pinned")

@@ -11,7 +11,7 @@ from repro.core.engine import PipelinedEngine
 from repro.core.planner import ModelSpec, standard_chain
 from repro.preprocessing.formats import ImageFormat, StoredImage
 from repro.preprocessing.ops import TensorMeta
-from repro.runtime import Recalibrator, RuntimeConfig, SmolRuntime, StageMeasurement
+from repro.runtime import RecalConfig, Recalibrator, RuntimeConfig, SmolRuntime, StageMeasurement
 from repro.serving.vision import VisionServingEngine
 
 INPUT = 32  # tiny DNN input so tests stay fast
@@ -365,7 +365,7 @@ def test_run_end_to_end_and_stats(corpus):
 
 
 def test_run_with_periodic_recalibration(corpus):
-    rt = _runtime(corpus, recalibrate_every=8)
+    rt = _runtime(corpus, recal=RecalConfig(every=8))
     outs, report = rt.run(corpus)
     assert len(outs) == len(corpus)
     assert len(report.chunk_stats) == 3  # 8 + 8 + 4
@@ -420,7 +420,7 @@ def test_serving_survives_recalibration_split_change(corpus):
         calibration=corpus[:3],
         config=RuntimeConfig(
             batch_size=4, num_workers=2, max_wait_ms=1.0,
-            host_ops_per_sec=2e8, recal_alpha=1.0, recal_hysteresis=0.0,
+            host_ops_per_sec=2e8, recal=RecalConfig(alpha=1.0, hysteresis=0.0),
         ),
         decode_time=lambda fmt: 1e-4,
     )
