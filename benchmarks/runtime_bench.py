@@ -33,6 +33,13 @@ Two workloads, each probing the subsystem built for it:
   on the same stages (fairness must not cost throughput).  Stage times
   are sleep-controlled, so this leg measures the scheduler's policy, not
   box noise.
+* **latency SLO + telemetry** (the tracing/histogram subsystem) — a
+  paced latency tenant rides alongside a saturating throughput tenant;
+  the latency tenant's streaming-histogram p99 must stay under a bound
+  derived from its batch deadline.  The same leg prices telemetry:
+  histograms-on throughput must be >= 97% of telemetry-off (full mode),
+  and telemetry-off runs must allocate zero span rings.  ``--trace-out``
+  additionally captures spans and writes the Perfetto trace JSON.
 
 Writes ``BENCH_runtime.json`` at the repo root (override with ``--out``).
 ``--check BASELINE.json`` turns the run into a **regression gate**: any
@@ -494,6 +501,148 @@ def _run_replica_leg(args) -> dict:
     }
 
 
+def _run_latency_leg(args) -> dict:
+    """Per-tenant p99 latency under contention + telemetry overhead.
+
+    A latency tenant submits at a modest paced rate while a throughput
+    tenant saturates the sleep-controlled scheduler through max_pending
+    backpressure.  The latency tenant's streaming-histogram p99 (e2e:
+    submit -> batch complete) must stay under a bound derived from its
+    batch deadline: ``max_wait_ms`` of batch-formation wait, plus a few
+    device batch times of queueing behind the saturating tenant, plus
+    fixed slack for host/dispatch overheads.  Stage times are
+    sleep-controlled, so the leg measures the scheduler's deadline + WFQ
+    policy and the histogram pipeline, not box throughput.
+
+    The same leg prices telemetry itself: a fixed-item throughput run
+    with histograms on vs. everything off, interleaved best-of-2.  The
+    histogram path must cost <= 3% throughput (full mode), and the
+    telemetry-off runs must allocate **zero** span rings — the
+    always-on default has to be unmeasurable before it ships enabled.
+
+    With ``--trace-out`` the latency window also captures spans and
+    writes the Perfetto/Chrome trace JSON there (the CI artifact).
+    """
+    import threading
+    import time
+
+    from repro.runtime import Telemetry, TelemetryConfig
+    from repro.runtime.scheduler import RequestScheduler, TenantConfig
+
+    per_batch_s = 0.004
+    max_batch = 8
+    window_s = 1.2 if args.smoke else 3.0
+    lat_deadline_ms = 5.0
+    # deadline wait + queueing behind in-flight saturating batches + slack
+    p99_bound_s = lat_deadline_ms / 1e3 + 6 * per_batch_s + 0.02
+
+    def host_fn(item):
+        return np.full((8,), float(item), np.float32)
+
+    def device_fn(batch):
+        time.sleep(per_batch_s)  # a deterministic "accelerator"
+        return batch
+
+    def make_sched(tenants, telemetry):
+        sched = RequestScheduler(
+            host_fn,
+            device_fn,
+            (8,),
+            np.float32,
+            max_batch=max_batch,
+            num_workers=2,
+            max_wait_ms=1.0,
+            tenants=tenants,
+            telemetry=telemetry,
+        )
+        sched.start()
+        return sched
+
+    # ---- contended window: paced latency tenant vs saturating tenant ----
+    tel = Telemetry(TelemetryConfig(spans=bool(args.trace_out)))
+    sched = make_sched(
+        [
+            TenantConfig("lat", weight=1.0, max_wait_ms=lat_deadline_ms,
+                         max_pending=2 * max_batch),
+            TenantConfig("thru", weight=2.0, max_pending=4 * max_batch),
+        ],
+        tel,
+    )
+    stop_at = time.perf_counter() + window_s
+
+    def thru_feeder():
+        i = 0
+        while time.perf_counter() < stop_at:
+            sched.submit(i, tenant="thru")  # blocks at max_pending
+            i += 1
+
+    def lat_feeder():
+        i = 0
+        while time.perf_counter() < stop_at:
+            sched.submit(i, tenant="lat")
+            i += 1
+            time.sleep(0.008)  # paced: an interactive client, not a firehose
+
+    threads = [
+        threading.Thread(target=thru_feeder),
+        threading.Thread(target=lat_feeder),
+    ]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    sched.flush(timeout=60.0)
+    sched.drain()
+    thru_completed = sched.tenants["thru"].completed
+    sched.stop()
+    lat_e2e = tel.summary()["tenants"]["lat"]["e2e"]
+    trace_spans = None
+    if args.trace_out:
+        trace_spans = tel.dump_trace(args.trace_out)
+
+    # ---- telemetry overhead: histograms on vs everything off ------------
+    items = 256 if args.smoke else 768
+
+    def run_throughput(telemetry):
+        s = make_sched(None, telemetry)
+        try:
+            t0 = time.perf_counter()
+            for i in range(items):
+                s.submit(i)
+            s.flush(timeout=120.0)
+            wall = time.perf_counter() - t0
+            s.drain()
+        finally:
+            s.stop()
+        return items / wall
+
+    tput_on = tput_off = 0.0
+    off_rings = 0
+    for _ in range(2):  # interleave so box noise lands on both
+        tput_on = max(tput_on, run_throughput(Telemetry()))
+        tel_off = Telemetry(TelemetryConfig(histograms=False, spans=False))
+        tput_off = max(tput_off, run_throughput(tel_off))
+        off_rings += tel_off.ring_allocations
+
+    return {
+        "per_batch_s": per_batch_s,
+        "max_batch": max_batch,
+        "window_s": window_s,
+        "lat_deadline_ms": lat_deadline_ms,
+        "p99_bound_ms": round(p99_bound_s * 1e3, 2),
+        "lat_completed": lat_e2e.count,
+        "lat_p50_ms": round(lat_e2e.p50 * 1e3, 3),
+        "lat_p95_ms": round(lat_e2e.p95 * 1e3, 3),
+        "lat_p99_ms": round(lat_e2e.p99 * 1e3, 3),
+        "thru_completed": thru_completed,
+        "tput_telemetry_on": round(tput_on, 2),
+        "tput_telemetry_off": round(tput_off, 2),
+        "telemetry_on_frac_of_off": round(tput_on / tput_off, 4) if tput_off else 0.0,
+        "telemetry_off_ring_allocations": off_rings,
+        "trace_spans": trace_spans,
+    }
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     # defaults make the workload host-decode-bound (big stored images, small
@@ -524,6 +673,14 @@ def main(argv=None) -> int:
         type=str,
         default=str(REPO_ROOT / "BENCH_runtime.json"),
         help="where to write the JSON report",
+    )
+    ap.add_argument(
+        "--trace-out",
+        type=str,
+        default=None,
+        metavar="TRACE_JSON",
+        help="capture spans during the latency leg and write the "
+        "Perfetto/Chrome trace-event JSON here (the CI artifact)",
     )
     args = ap.parse_args(argv)
     # the 1.3x gate compares against a true single-worker baseline — keep
@@ -611,6 +768,9 @@ def main(argv=None) -> int:
     # ---- replica mesh: 2 dispatchers vs 1 over the shared fair queue ------
     replica_leg = _run_replica_leg(args)
 
+    # ---- latency SLO + telemetry overhead: p99 under contention -----------
+    latency_leg = _run_latency_leg(args)
+
     # the typed RuntimeStats schema is what dashboards consume — read the
     # balanced runtime's snapshot through it rather than an ad-hoc dict
     rstats = bal_runtime.stats()
@@ -626,6 +786,9 @@ def main(argv=None) -> int:
         "worker_speedup": 1.1 if args.smoke else 1.3,
         "pooled_tol": 0.75 if args.smoke else POOLED_GATE_TOL,
         "device_tol": 0.80 if args.smoke else DEVICE_GATE_TOL,
+        # the telemetry-on/off runs are sleep-bound, so the full-mode gate
+        # binds tight; smoke runners still jitter the host-side share
+        "telemetry_tol": 0.90 if args.smoke else 0.97,
     }
     pooled_ge_unpooled = pooled_sum >= thr["pooled_tol"] * unpooled_sum
     device_gate = device_leg["fused_speedup"] >= (
@@ -639,7 +802,12 @@ def main(argv=None) -> int:
 
     cores = os.cpu_count() or 1
     gates = {
-        "pipeline_speedup_ge_1_2": piped.throughput / serial_sum >= thr["pipeline_speedup"],
+        # host/device overlap needs 2+ cores to exist at all — on 1 core the
+        # pipelined run IS the serial sum (same conditioning as the worker
+        # gate below)
+        "pipeline_speedup_ge_1_2": (
+            (piped.throughput / serial_sum >= thr["pipeline_speedup"]) if cores >= 2 else True
+        ),
         "pooled_ge_unpooled_per_worker_count": pooled_ge_unpooled,
         # acceptance: multi-worker pooled host-stage throughput >= 1.3x the
         # single-worker unpooled baseline, meaningful with 2+ cores
@@ -663,6 +831,20 @@ def main(argv=None) -> int:
         # acceptance: 2 replicas over the shared queue sustain >= 1.6x the
         # single-replica throughput on the sleep-controlled device model
         "replica_scaling_2x_ge_1_6": replica_leg["replica_scaling"] >= 1.6,
+        # acceptance: the latency tenant's measured p99 stays under the
+        # deadline-derived bound while the throughput tenant saturates
+        "latency_tenant_p99_under_bound": (
+            latency_leg["lat_completed"] > 0
+            and latency_leg["lat_p99_ms"] <= latency_leg["p99_bound_ms"]
+        ),
+        # acceptance: always-on histograms cost <= 3% throughput (full mode)
+        "telemetry_overhead_le_3pct": (
+            latency_leg["telemetry_on_frac_of_off"] >= thr["telemetry_tol"]
+        ),
+        # acceptance: telemetry-off runs allocate zero span rings
+        "telemetry_off_zero_ring_allocs": (
+            latency_leg["telemetry_off_ring_allocations"] == 0
+        ),
     }
     result = {
         "benchmark": "runtime_end_to_end",
@@ -686,6 +868,7 @@ def main(argv=None) -> int:
         "split_decode": split_leg,
         "fairness": fairness,
         "replica_mesh": replica_leg,
+        "latency": latency_leg,
         "stats_schema_version": rstats.schema_version,
         "device_program_serving": {
             "backend": rstats.device_program.backend,

@@ -5,7 +5,10 @@ at two input-fidelity conditions (regular + low-res-augmented, §5.3), hand
 the runtime the model set 𝒟, the native format set ℱ, and an accuracy
 constraint — it calibrates decode/exec throughputs, generates and ranks the
 𝒟 × ℱ plan space, splits preprocessing across host/device, and runs the
-corpus through the pipelined engine.
+corpus through the pipelined engine.  A second pass serves the same corpus
+request-by-request with span capture on, prints the per-stage latency
+breakdown (queue/decode/stage/dispatch/drain p50/p99 from the streaming
+histograms), and writes a Perfetto-loadable trace of the run.
 
     PYTHONPATH=src python examples/image_analytics.py
 """
@@ -25,7 +28,7 @@ from repro.preprocessing.formats import (
     THUMB_JPEG_161_Q95,
     THUMB_PNG_161,
 )
-from repro.runtime import RecalConfig, RuntimeConfig, SmolRuntime
+from repro.runtime import RecalConfig, RuntimeConfig, SmolRuntime, TelemetryConfig
 
 FORMATS = [FULL_JPEG_Q95, THUMB_PNG_161, THUMB_JPEG_161_Q95, THUMB_JPEG_161_Q75]
 COND_BY_KEY = {
@@ -80,7 +83,11 @@ def main():
         model_fns,
         calibration=stored[:8],
         config=RuntimeConfig(
-            batch_size=16, num_workers=2, min_accuracy=floor, recal=RecalConfig(every=48)
+            batch_size=16,
+            num_workers=2,
+            min_accuracy=floor,
+            recal=RecalConfig(every=48),
+            telemetry=TelemetryConfig(spans=True),  # capture the demo trace
         ),
     )
 
@@ -123,6 +130,30 @@ def main():
         best_naive = max(naive, key=lambda p: p.estimate.throughput)
         print(f"\nest. speedup over naive full-res plan: "
               f"{plan.estimate.throughput / best_naive.estimate.throughput:.2f}x")
+
+    # ---- request-level serving with tracing on ---------------------------
+    runtime.start_serving()
+    try:
+        for s in stored:
+            runtime.submit(s)
+        runtime.flush()
+        served = runtime.drain()
+    finally:
+        runtime.stop_serving()
+    ok = sum(1 for r in served if r.error is None)
+    lat = runtime.stats().latency
+    print(f"\nserved {ok}/{len(served)} requests; per-stage latency breakdown:")
+    print(f"  {'stage':9s} {'p50 ms':>9s} {'p99 ms':>9s}")
+    for stage in ("queue", "decode", "stage", "dispatch", "drain", "e2e"):
+        h = lat.stages.get(stage)
+        if h is not None and h.count:
+            print(f"  {stage:9s} {h.p50 * 1e3:9.2f} {h.p99 * 1e3:9.2f}")
+
+    trace_path = os.path.join(
+        os.path.dirname(os.path.abspath(__file__)), "image_analytics_trace.json"
+    )
+    n_spans = runtime.dump_trace(trace_path)
+    print(f"wrote {n_spans} spans to {trace_path} — open in https://ui.perfetto.dev")
 
 
 if __name__ == "__main__":

@@ -36,6 +36,7 @@ from __future__ import annotations
 
 import dataclasses
 import os
+import time
 from typing import Any, Callable, MutableMapping, Sequence
 
 import jax
@@ -372,7 +373,12 @@ class DevicePreprocProgram:
 
     Calling the program dispatches the whole batch once; ``dispatch_count``
     tracks Python-side dispatches so tests (and the engine) can assert the
-    one-dispatch-per-batch contract.
+    one-dispatch-per-batch contract.  ``build_seconds`` is the host-side
+    lowering/wrapping cost paid at compile time; ``first_dispatch_seconds``
+    is the wall time of dispatch #1 — jax.jit traces and XLA-compiles
+    synchronously on first call, so this is the cold-start cost a request
+    that misses the program cache actually experiences (telemetry tags the
+    dispatch span with it).
     """
 
     fn: Callable[[Any], Any]  # jitted (batch,) -> model outputs
@@ -384,6 +390,8 @@ class DevicePreprocProgram:
     in_meta: TensorMeta
     out_meta: TensorMeta  # preprocessing output (the DNN's input)
     dispatch_count: int = 0
+    build_seconds: float = 0.0
+    first_dispatch_seconds: float | None = None
     # split-decode programs only: the scaled-IDCT resolution divisor and the
     # coefficient staging layout this program was compiled for
     coeff_factor: int | None = None
@@ -400,6 +408,12 @@ class DevicePreprocProgram:
 
     def __call__(self, batch):
         self.dispatch_count += 1
+        if self.dispatch_count == 1:
+            t0 = time.perf_counter()
+            out = self.fn(_place(batch, self.device))
+            jax.block_until_ready(out)
+            self.first_dispatch_seconds = time.perf_counter() - t0
+            return out
         return self.fn(_place(batch, self.device))
 
     def lower(self, batch):
@@ -481,6 +495,7 @@ def compile_device_program(
     if cache is not None and key in cache:
         return cache[key]
 
+    t_build = time.perf_counter()
     low = lower_device_ops(device_ops, in_meta) if backend == "fused" else None
     if low is not None:
         stage = build_fused_stage(low, impl, interpret)
@@ -507,6 +522,7 @@ def compile_device_program(
         in_meta=in_meta,
         out_meta=out_meta,
         device=device,
+        build_seconds=time.perf_counter() - t_build,
     )
     if cache is not None:
         cache[key] = program
@@ -583,6 +599,7 @@ def compile_coeff_program(
     if cache is not None and key in cache:
         return cache[key]
 
+    t_build = time.perf_counter()
     unzigzag = np.asarray(dct_np.UNZIGZAG)
     rgb_mat = jnp.asarray(_YCBCR_TO_RGB)
     low = lower_device_ops(device_ops, pixel_meta)
@@ -656,6 +673,7 @@ def compile_coeff_program(
         coeff_factor=factor,
         coeff_layout=layout,
         device=device,
+        build_seconds=time.perf_counter() - t_build,
     )
     if cache is not None:
         cache[key] = program

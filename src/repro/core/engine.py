@@ -105,6 +105,11 @@ class PipelinedEngine:
         multi-tenant batch runs (see :meth:`run`'s ``tenants``): each
         item's decoded bytes are admitted against its tenant's budget, so
         admission charges the tenant that decoded them.
+      telemetry: optional :class:`~repro.runtime.telemetry.Telemetry` hub —
+        the worker pool feeds the ``decode`` histogram per item and each
+        retired batch feeds the ``dispatch`` histogram (dispatch →
+        retirement), so batch runs share the serving path's latency
+        surfaces.
     """
 
     def __init__(
@@ -121,6 +126,7 @@ class PipelinedEngine:
         memory: Any = None,
         worker_state_factory: Callable[[], Any] | None = None,
         tenant_budgets: Any = None,
+        telemetry: Any = None,
     ):
         # Deferred: repro.core must stay importable without repro.runtime
         # (runtime's facade imports this module at package-init time).
@@ -135,6 +141,7 @@ class PipelinedEngine:
         self.out_shape = tuple(out_shape)
         self.out_dtype = out_dtype
         self.worker_state_factory = worker_state_factory
+        self.telemetry = telemetry
         self.memory = memory or memory_mod.MemoryConfig()
         # Leased, reused staging buffers — the pinned-buffer pool of
         # Appendix A.  pooling=False keeps the allocate-per-batch baseline
@@ -181,6 +188,7 @@ class PipelinedEngine:
             budget=self._budget,
             item_nbytes=self._item_nbytes,
             budget_for=budget_for,
+            telemetry=self.telemetry,
         )
 
     def configure_tenants(self, tenant_cfgs: Sequence[Any]) -> None:
@@ -374,6 +382,12 @@ class PipelinedEngine:
             lease.release()  # staging buffer back to the pool
         if clock is not None:
             clock.retire(dispatch_t)
+        if self.telemetry is not None:
+            # dispatch -> retirement; an upper bound on device time (eager
+            # is_ready retirement keeps it tight), matching _DeviceClock
+            self.telemetry.record(
+                "dispatch", time.perf_counter() - dispatch_t
+            )
 
 
 def _array_is_ready(x) -> bool:

@@ -66,11 +66,18 @@ from repro.runtime.scheduler import (
 from repro.runtime.stats import (
     DeviceProgramSection,
     EngineSection,
+    LatencySection,
     MeshSection,
     RuntimeStats,
     SchedulerSection,
     SplitDecodeSection,
     TenantSection,
+)
+from repro.runtime.telemetry import (
+    HistogramSummary,
+    StreamingHistogram,
+    Telemetry,
+    TelemetryConfig,
 )
 from repro.runtime.workers import HostStream, WorkerPool
 
@@ -88,7 +95,9 @@ __all__ = [
     "EngineSection",
     "FaultInjector",
     "FrameArena",
+    "HistogramSummary",
     "HostStream",
+    "LatencySection",
     "MemoryBudget",
     "MemoryConfig",
     "MeshConfig",
@@ -110,6 +119,9 @@ __all__ = [
     "SplitDecodeOption",
     "SplitDecodeSection",
     "StageMeasurement",
+    "StreamingHistogram",
+    "Telemetry",
+    "TelemetryConfig",
     "TenantConfig",
     "TenantSection",
     "TenantStats",

@@ -61,12 +61,14 @@ from repro.runtime.scheduler import (
 from repro.runtime.stats import (
     DeviceProgramSection,
     EngineSection,
+    LatencySection,
     MeshSection,
     RuntimeStats,
     SchedulerSection,
     SplitDecodeSection,
     TenantSection,
 )
+from repro.runtime.telemetry import Telemetry, TelemetryConfig
 
 
 @dataclasses.dataclass
@@ -231,6 +233,9 @@ class RuntimeConfig:
     recal: RecalConfig = dataclasses.field(default_factory=RecalConfig)
     # replicated multi-device serving
     mesh: MeshConfig = dataclasses.field(default_factory=MeshConfig)
+    # tracing + metrics: always-on streaming latency histograms, opt-in
+    # per-request span capture (Perfetto export) — runtime/telemetry.py
+    telemetry: TelemetryConfig = dataclasses.field(default_factory=TelemetryConfig)
     # --- multi-tenant serving ---
     # per-tenant quotas / weights / pinned models; () = single-tenant.
     # Every TenantConfig becomes a scheduler tenant (weighted-fair service,
@@ -377,6 +382,9 @@ class SmolRuntime:
         self.model_fns = dict(model_fns)
         self.calibration = list(calibration)
         self.config = cfg
+        # one telemetry hub for the whole runtime: scheduler, engine and
+        # worker pool all record into it (shared clocks, shared histograms)
+        self.telemetry = Telemetry(cfg.telemetry)
         self._decode_time_override = decode_time
         self._decode_time_cache: dict[str, float] = {}
         self._decoded_meta_cache: dict[str, TensorMeta] = {}
@@ -778,6 +786,7 @@ class SmolRuntime:
                 batch_size=self.config.batch_size,
                 num_workers=self._num_workers,
                 memory=self.config.memory,
+                telemetry=self.telemetry,
             )
             if self.config.tenants:
                 # per-tenant children of the engine budget: batch-path
@@ -903,6 +912,7 @@ class SmolRuntime:
                 tenants=self.config.tenants,
                 num_replicas=len(targets),
                 replica_labels=[self._target_label(t) for t in targets],
+                telemetry=self.telemetry,
             )
             # tenants pinning their own model serve through their own
             # compiled plan: batches never mix across bindings
@@ -1049,6 +1059,8 @@ class SmolRuntime:
             if engine is not None
             else None
         )
+        digest = self.telemetry.summary()
+        latency = LatencySection(stages=digest["stages"], tenants=digest["tenants"])
         return RuntimeStats(
             num_workers=self._num_workers,
             measured_dispatch_overhead_s=self._measured_dispatch_s,
@@ -1059,4 +1071,46 @@ class SmolRuntime:
             mesh=mesh_section,
             device_program=device_program,
             split_decode=split_decode,
+            latency=latency,
         )
+
+    # ------------------------------------------------------------- telemetry
+    def dump_trace(self, path: str) -> int:
+        """Write captured request/batch spans as Chrome trace-event JSON
+        (load in Perfetto / ``chrome://tracing``).  Requires span capture
+        (``RuntimeConfig.telemetry.spans=True``); returns the span count
+        written (0 when capture is off or nothing was sampled)."""
+        return self.telemetry.dump_trace(path)
+
+    def metrics_text(self) -> str:
+        """Prometheus text exposition: the per-stage/per-tenant latency
+        histograms plus the runtime's request counters — one string, ready
+        to serve from a ``/metrics`` endpoint."""
+        extra: list[str] = []
+        if self._scheduler is not None:
+            extra.append(
+                "# HELP smol_requests_total Requests by tenant and terminal state."
+            )
+            extra.append("# TYPE smol_requests_total counter")
+            for name, ts in sorted(self._scheduler.tenants.items()):
+                for status, count in (
+                    ("completed", ts.completed),
+                    ("failed", ts.failed),
+                    ("rejected", ts.rejected),
+                ):
+                    extra.append(
+                        f'smol_requests_total{{tenant="{name}",status="{status}"}} '
+                        f"{count}"
+                    )
+        cache = self._device_programs.stats()
+        extra.append("# HELP smol_program_cache_events_total Program-cache events.")
+        extra.append("# TYPE smol_program_cache_events_total counter")
+        for event, count in (
+            ("hit", cache.hits),
+            ("miss", cache.misses),
+            ("eviction", cache.evictions),
+        ):
+            extra.append(
+                f'smol_program_cache_events_total{{event="{event}"}} {count}'
+            )
+        return self.telemetry.metrics_text(extra)

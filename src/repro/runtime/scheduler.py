@@ -70,6 +70,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import itertools
 import queue
 import threading
 import time
@@ -83,6 +84,7 @@ from repro.distributed.fault_tolerance import (
     plan_elastic_restart,
 )
 from repro.runtime.memory import MemoryBudget
+from repro.runtime.telemetry import ReqTimes, Telemetry
 
 DEFAULT_TENANT = "default"
 
@@ -269,7 +271,6 @@ class _TenantState:
         "vt_ingress",
         "vt_ready",
         "stats",
-        "meas_snapshot",
         "drain_queue",
     )
 
@@ -283,7 +284,6 @@ class _TenantState:
         self.vt_ingress = 0.0
         self.vt_ready = 0.0
         self.stats = TenantStats()
-        self.meas_snapshot = (0.0, 0, 0.0, 0)  # host_busy, host_items, dev_busy, completed
         # latency tenants only (max_wait_ms set): uids in submission order,
         # the drain-priority release queue
         self.drain_queue: collections.deque = collections.deque()
@@ -311,6 +311,7 @@ class RequestScheduler:
         tenants: Sequence[TenantConfig] | None = None,
         num_replicas: int | None = None,
         replica_labels: Sequence[str] | None = None,
+        telemetry: Telemetry | None = None,
     ):
         if admission not in ("block", "reject"):
             raise ValueError(f"admission must be 'block' or 'reject', got {admission!r}")
@@ -324,6 +325,12 @@ class RequestScheduler:
         self.admission_timeout_s = admission_timeout_s
         self.budget = budget  # shared/parent byte budget
         self.stats = SchedulerStats()
+        # one shared tracing/metrics hub: every stage timestamp below comes
+        # from telemetry's clock, and the occupancy windows the
+        # recalibrators read (measurement()) are fed by the same
+        # observations the latency histograms see
+        self.telemetry = telemetry if telemetry is not None else Telemetry()
+        self._worker_ids = itertools.count()  # decode-span worker labels
 
         self._default_binding = _Binding(host_fn, device_fn, out_shape, out_dtype)
         # replica mesh: one dispatcher per replica, all pulling from the
@@ -374,7 +381,6 @@ class RequestScheduler:
         self._rebind_lock = threading.Lock()
         self._stats_lock = threading.Lock()
         self._submit_lock = threading.Lock()
-        self._meas_snapshot = (0.0, 0, 0.0, 0)  # host_busy, host_items, dev_busy, completed
         self._next_uid = 0
         self._next_drain = 0
         self._inflight = 0
@@ -722,7 +728,7 @@ class RequestScheduler:
                 # (re)activation: clamp virtual time to the scheduler clock
                 # so an idle tenant can't hoard credit (bounded starvation)
                 state.vt_ingress = max(state.vt_ingress, self._vclock_ingress)
-            state.ingress.append((uid, item, time.perf_counter()))
+            state.ingress.append((uid, item, ReqTimes(time.perf_counter())))
             self._ingress_cond.notify()
         return uid
 
@@ -767,6 +773,14 @@ class RequestScheduler:
                         s.drain_queue.popleft()
                     out.append(req)
                 self._done_event.clear()
+            if out:
+                # the drain span: device completion -> reorder-buffer release
+                t_rel = time.perf_counter()
+                for req in out:
+                    if req.error is None:
+                        self.telemetry.observe_drain(
+                            req.tenant, req.uid, req.completed_at, t_rel
+                        )
             if out or deadline is None:
                 return out
             remaining = deadline - time.perf_counter()
@@ -795,41 +809,46 @@ class RequestScheduler:
             state = min(active, key=lambda s: s.vt_ingress)
             state.vt_ingress += 1.0 / state.config.weight
             self._vclock_ingress = state.vt_ingress
-            uid, item, t_submit = state.ingress.popleft()
-            return state, uid, item, t_submit
+            uid, item, tm = state.ingress.popleft()
+            tm.pick = time.perf_counter()  # queue span ends: WFQ pickup
+            return state, uid, item, tm
 
     def _host_worker(self) -> None:
+        wid = next(self._worker_ids)  # labels this thread's decode spans
         while True:
             msg = self._next_ingress()
             if msg is None:
                 return
-            state, uid, item, t_submit = msg
+            state, uid, item, tm = msg
             with self._rebind_lock:  # pin the current stage fn, call outside
                 host_fn = state.binding.host_fn
             t_in = time.perf_counter()
             try:
                 arr = host_fn(item)
             except BaseException as e:  # noqa: BLE001 — delivered via drain()
-                self._complete_error(state, uid, t_submit, e)
+                self._complete_error(state, uid, tm, e)
                 continue
             dt = time.perf_counter() - t_in
+            tm.decoded = time.perf_counter()
+            tm.worker = wid
+            self.telemetry.observe_host(state.config.name, dt)
             with self._stats_lock:
                 self.stats.host_busy_seconds += dt
                 self.stats.host_items += 1
                 state.stats.host_busy_seconds += dt
                 state.stats.host_items += 1
-            self._ready.put((state, uid, arr, t_submit))
+            self._ready.put((state, uid, arr, tm))
 
     # Batcher internals.  The per-tenant `ready` deques and the `vt_ready`
     # clocks are shared by every replica batcher (so tenant weights span
     # the mesh) — all access goes through _ready_lock.  _stash acquires it
     # itself; _pick_ready must be called with it held.
     def _stash(self, msg) -> None:
-        state, uid, arr, t_submit = msg
+        state, uid, arr, tm = msg
         with self._ready_lock:
             if not state.ready:
                 state.vt_ready = max(state.vt_ready, self._vclock_ready)
-            state.ready.append((uid, arr, t_submit))
+            state.ready.append((uid, arr, tm))
 
     def _pick_ready(self, candidates: list[_TenantState]) -> _TenantState:
         state = min(candidates, key=lambda s: s.vt_ready)
@@ -905,7 +924,7 @@ class RequestScheduler:
         if buf is None or buf.shape != shape or buf.dtype != dtype:
             buf = np.zeros(shape, dtype=dtype)
             bufs[id(binding)] = buf
-        metas: list[tuple[int, float, _TenantState, Any]] = []
+        metas: list[tuple[int, ReqTimes, _TenantState, Any]] = []
         self._stage(buf, metas, first, head)
         # the batch deadline is the tightest max_wait of any tenant with a
         # slot in it: a latency tenant's presence closes the batch early,
@@ -940,7 +959,7 @@ class RequestScheduler:
             except queue.Empty:
                 break
             if msg is self._STOP:
-                self._dispatch(binding, buf, metas, replica)
+                self._dispatch(binding, buf, metas, replica, t_open)
                 self._drain_pending(bufs, replica)
                 return False
             if msg is self._KICK:
@@ -953,7 +972,7 @@ class RequestScheduler:
                 leftover = any(s.ready for s in self._tenants.values())
             if leftover:
                 self._ready.put(self._KICK)
-        self._dispatch(binding, buf, metas, replica)
+        self._dispatch(binding, buf, metas, replica, t_open)
         return True
 
     def _drain_pending(self, bufs: dict, replica: _ReplicaState) -> None:
@@ -971,14 +990,15 @@ class RequestScheduler:
         """Copy one host output into the staging buffer; errors (e.g. an
         item preprocessed under a pre-rebind signature) fail that request
         instead of killing the batcher."""
-        uid, arr, t_submit = msg
+        uid, arr, tm = msg
         try:
             buf[len(metas)] = arr
         except (ValueError, TypeError) as e:
-            self._complete_error(state, uid, t_submit, e)
+            self._complete_error(state, uid, tm, e)
             return False
+        tm.staged = time.perf_counter()  # stage span ends: copied into batch
         # keep arr: a replica failure drains the item back to the queue
-        metas.append((uid, t_submit, state, arr))
+        metas.append((uid, tm, state, arr))
         return True
 
     def _requeue(self, metas: list) -> None:
@@ -986,10 +1006,10 @@ class RequestScheduler:
         their tenants' ready deques (uid order preserved) for re-dispatch
         on survivors."""
         with self._ready_lock:
-            for uid, t_submit, state, arr in reversed(metas):
+            for uid, tm, state, arr in reversed(metas):
                 if not state.ready:
                     state.vt_ready = max(state.vt_ready, self._vclock_ready)
-                state.ready.appendleft((uid, arr, t_submit))
+                state.ready.appendleft((uid, arr, tm))
 
     def _on_replica_failure(
         self, replica: _ReplicaState, metas: list, exc: ReplicaFailure
@@ -1013,8 +1033,8 @@ class RequestScheduler:
         # no survivors: complete the batch with the failure and flip the
         # scheduler into error-pump mode (loop top picks it up)
         self._fail_exc = exc
-        for uid, t_submit, state, _arr in metas:
-            self._complete_error(state, uid, t_submit, exc)
+        for uid, tm, state, _arr in metas:
+            self._complete_error(state, uid, tm, exc)
 
     def _error_pump(self) -> None:
         """All replicas are dead: complete everything still flowing through
@@ -1027,24 +1047,29 @@ class RequestScheduler:
                 for s in self._tenants.values():
                     while s.ready:
                         stranded.append((s, s.ready.popleft()))
-            for state, (uid, arr, t_submit) in stranded:
-                self._complete_error(state, uid, t_submit, exc)
+            for state, (uid, arr, tm) in stranded:
+                self._complete_error(state, uid, tm, exc)
             msg = self._ready.get()
             if msg is self._STOP:
                 return
             if msg is self._KICK:
                 continue
-            state, uid, arr, t_submit = msg
-            self._complete_error(state, uid, t_submit, exc)
+            state, uid, arr, tm = msg
+            self._complete_error(state, uid, tm, exc)
 
     def _dispatch(
-        self, binding: _Binding, buf: np.ndarray, metas: list, replica: _ReplicaState
+        self,
+        binding: _Binding,
+        buf: np.ndarray,
+        metas: list,
+        replica: _ReplicaState,
+        t_open: float | None = None,
     ) -> None:
         if not metas:
             return
         if self._fail_exc is not None:
-            for uid, t_submit, state, _arr in metas:
-                self._complete_error(state, uid, t_submit, self._fail_exc)
+            for uid, tm, state, _arr in metas:
+                self._complete_error(state, uid, tm, self._fail_exc)
             return
         if not replica.alive:
             # marked dead between forming and dispatching (fail_replica):
@@ -1062,13 +1087,35 @@ class RequestScheduler:
             self._on_replica_failure(replica, metas, e)
             return
         except BaseException as e:  # noqa: BLE001 — delivered via drain()
-            for uid, t_submit, state, _arr in metas:
-                self._complete_error(state, uid, t_submit, e)
+            for uid, tm, state, _arr in metas:
+                self._complete_error(state, uid, tm, e)
             return
         dt = time.perf_counter() - t_in
         now = time.perf_counter()
         per_tenant = collections.Counter(state.config.name for _, _, state, _ in metas)
         states = {state.config.name: state for _, _, state, _ in metas}
+        tel = self.telemetry
+        tel.observe_device_batch(dt, per_tenant)
+        for uid, tm, state, _arr in metas:
+            tm.done = now
+            tel.complete_request(state.config.name, uid, tm, replica=replica.index)
+        if tel.config.spans:
+            # batch span: open -> device done, linking member request spans;
+            # dispatch #1 of a compiled program is the cold start (jit
+            # traces + XLA compiles synchronously on first call)
+            tel.emit_span(
+                "batch",
+                "batch",
+                None,
+                tel.next_batch_id(),
+                t_open if t_open is not None else t_in,
+                now,
+                replica=replica.index,
+                size=len(metas),
+                uids=[m[0] for m in metas],
+                cold=getattr(device_fn, "dispatch_count", 0) == 1,
+                compile_s=getattr(device_fn, "first_dispatch_seconds", None),
+            )
         with self._stats_lock:
             self.stats.device_busy_seconds += dt
             self.stats.batches += 1
@@ -1084,24 +1131,26 @@ class RequestScheduler:
                 ts.batch_items += n
                 ts.completed += n
         with self._done_lock:
-            for row, (uid, t_submit, state, _arr) in enumerate(metas):
+            for row, (uid, tm, state, _arr) in enumerate(metas):
                 self._done[uid] = CompletedRequest(
-                    uid, out[row], t_submit, now, tenant=state.config.name
+                    uid, out[row], tm.submit, now, tenant=state.config.name
                 )
             self._done_event.set()
         for name, n in per_tenant.items():
             self._retire_admissions(states[name], n)
 
     def _complete_error(
-        self, state: _TenantState, uid: int, t_submit: float, exc: BaseException
+        self, state: _TenantState, uid: int, tm: ReqTimes, exc: BaseException
     ) -> None:
+        # failed requests stay out of the latency histograms: an error
+        # short-circuits the pipeline, so its timeline isn't a latency
         now = time.perf_counter()
         with self._stats_lock:
             self.stats.failed += 1
             state.stats.failed += 1
         with self._done_lock:
             self._done[uid] = CompletedRequest(
-                uid, None, t_submit, now, error=exc, tenant=state.config.name
+                uid, None, tm.submit, now, error=exc, tenant=state.config.name
             )
             self._done_event.set()
         self._retire_admissions(state, 1)
@@ -1126,38 +1175,22 @@ class RequestScheduler:
         the recalibrator) — scheduler-wide, or for one tenant.
 
         Host time is normalized by items that went through the host stage
-        and device time by completed items — dividing both by completions
-        would inflate the host figure whenever requests are still in flight.
-        Lifetime averages would bury a recent throughput shift under old
-        history, so each call consumes the window since the last one.
+        and device time by items that went through a device batch — dividing
+        both by completions would inflate the host figure whenever requests
+        are still in flight.  Lifetime averages would bury a recent
+        throughput shift under old history, so each call consumes the window
+        since the last one.  The windows come from the telemetry occupancy
+        accumulators — the recalibrators read the same measured stage times
+        the latency histograms are built from.
         """
         from repro.runtime.recalibration import StageMeasurement
 
-        with self._stats_lock:
-            if tenant is None:
-                src = self.stats
-                prev = self._meas_snapshot
-                cur = (
-                    src.host_busy_seconds,
-                    src.host_items,
-                    src.device_busy_seconds,
-                    src.completed,
-                )
-                self._meas_snapshot = cur
-            else:
-                state = self._state(tenant)
-                src = state.stats
-                prev = state.meas_snapshot
-                cur = (
-                    src.host_busy_seconds,
-                    src.host_items,
-                    src.device_busy_seconds,
-                    src.completed,
-                )
-                state.meas_snapshot = cur
-        host_busy, host_items = cur[0] - prev[0], cur[1] - prev[1]
-        dev_busy, completed = cur[2] - prev[2], cur[3] - prev[3]
+        if tenant is not None:
+            self._state(tenant)  # keep the unknown-tenant KeyError contract
+        host_busy, host_items, dev_busy, dev_items = self.telemetry.measurement_window(
+            ("scheduler", id(self)), tenant
+        )
         return StageMeasurement(
             host_seconds_per_item=host_busy / max(1, host_items),
-            device_seconds_per_item=dev_busy / max(1, completed),
+            device_seconds_per_item=dev_busy / max(1, dev_items),
         )

@@ -22,8 +22,11 @@ from typing import Any, Mapping
 from repro.core.device_compiler import ProgramCacheStats
 from repro.distributed.fault_tolerance import ElasticPlan
 from repro.runtime.scheduler import ReplicaSnapshot, SchedulerStats, TenantStats
+from repro.runtime.telemetry import HistogramSummary
 
-SCHEMA_VERSION = 1
+# v2: added the ``latency`` section (per-stage / per-tenant streaming
+# histogram summaries from runtime.telemetry).
+SCHEMA_VERSION = 2
 
 
 @dataclasses.dataclass(frozen=True)
@@ -85,6 +88,20 @@ class MeshSection:
 
 
 @dataclasses.dataclass(frozen=True)
+class LatencySection:
+    """Streaming-histogram latency digests (schema v2).
+
+    ``stages`` maps stage name (queue/decode/stage/dispatch/drain/e2e) to
+    the runtime-wide distribution summary; ``tenants`` nests the same per
+    tenant.  Summaries come from log-bucketed streaming histograms, so
+    quantiles are bucket-geometry estimates, not exact order statistics.
+    """
+
+    stages: Mapping[str, HistogramSummary]
+    tenants: Mapping[str, Mapping[str, HistogramSummary]]
+
+
+@dataclasses.dataclass(frozen=True)
 class RuntimeStats:
     """Versioned snapshot of the whole runtime (see module docstring)."""
 
@@ -98,6 +115,7 @@ class RuntimeStats:
     mesh: MeshSection | None = None
     device_program: DeviceProgramSection | None = None
     split_decode: SplitDecodeSection | None = None
+    latency: LatencySection | None = None
 
     def to_dict(self) -> dict[str, Any]:
         """JSON-safe mapping (stable wire format for the schema version)."""

@@ -146,6 +146,9 @@ class WorkerPool:
       budget_for: optional item-index → budget map for multi-tenant runs —
         each item's bytes are admitted against (and released to) its
         tenant's budget; indices it maps to None fall back to ``budget``.
+      telemetry: optional :class:`~repro.runtime.telemetry.Telemetry` hub —
+        each item's host-stage time feeds the shared ``decode`` latency
+        histogram (the same observations ``host_busy_seconds`` sums).
     """
 
     def __init__(
@@ -157,6 +160,7 @@ class WorkerPool:
         budget: MemoryBudget | None = None,
         item_nbytes: int = 0,
         budget_for: Callable[[int], MemoryBudget | None] | None = None,
+        telemetry: Any = None,
     ):
         self.host_fn = host_fn
         self.num_workers = max(1, int(num_workers))
@@ -165,6 +169,7 @@ class WorkerPool:
         self.budget = budget
         self.budget_for = budget_for
         self.item_nbytes = int(item_nbytes)
+        self.telemetry = telemetry
 
     # ------------------------------------------------------------- streaming
     def process(self, items: Sequence[Any]) -> HostStream:
@@ -215,7 +220,10 @@ class WorkerPool:
                         if self.worker_state_factory
                         else self.host_fn(items[idx])
                     )
-                    busy += time.perf_counter() - t_in
+                    dt = time.perf_counter() - t_in
+                    busy += dt
+                    if self.telemetry is not None:
+                        self.telemetry.record("decode", dt)
                     self._put(stream, (idx, arr))
             except BaseException as e:  # noqa: BLE001 — re-raised by join()
                 with stream._lock:

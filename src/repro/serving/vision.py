@@ -175,8 +175,28 @@ class VisionServingEngine:
     def stats(self):
         """Versioned runtime snapshot
         (:class:`~repro.runtime.RuntimeStats`): memory/threading occupancy,
-        per-tenant counters, the replica mesh, program-cache rates."""
+        per-tenant counters, the replica mesh, program-cache rates, and the
+        ``latency`` section (per-stage/per-tenant p50/p95/p99)."""
         return self.runtime.stats()
+
+    # ----------------------------------------------------------- telemetry
+    @property
+    def latency(self):
+        """Per-stage / per-tenant latency digests
+        (:class:`~repro.runtime.LatencySection`) — the streaming-histogram
+        p50/p95/p99 surface, without building the full stats snapshot."""
+        return self.runtime.stats().latency
+
+    def dump_trace(self, path: str) -> int:
+        """Write the captured request/batch span timeline as Chrome
+        trace-event JSON (open in Perfetto).  Needs
+        ``RuntimeConfig.telemetry.spans=True``; returns spans written."""
+        return self.runtime.dump_trace(path)
+
+    def metrics_text(self) -> str:
+        """Prometheus text exposition (latency histograms + request and
+        program-cache counters) — serve this from ``/metrics``."""
+        return self.runtime.metrics_text()
 
     @staticmethod
     def _to_response(r: CompletedRequest) -> VisionResponse:

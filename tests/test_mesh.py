@@ -38,6 +38,7 @@ from repro.runtime import (
     RuntimeConfig,
     RuntimeStats,
     SmolRuntime,
+    TelemetryConfig,
     TenantConfig,
 )
 
@@ -365,6 +366,67 @@ def test_facade_explicit_device_ordinals(corpus):
         _facade(corpus, mesh=MeshConfig(replicas=1, devices=(99,))).start_serving()
 
 
+@pytest.mark.skipif(not MULTIDEVICE, reason="needs >= 4 devices (CI mesh leg)")
+def test_traced_multitenant_mesh_run(corpus, tmp_path):
+    """Acceptance: a traced multi-tenant run on the 4-device mesh yields a
+    Perfetto-valid trace whose per-request spans tile the wall latency
+    (within 10%), and stats().latency carries per-tenant p50/p95/p99."""
+    rt = _facade(
+        corpus,
+        mesh=MeshConfig(replicas=2),
+        tenants=(TenantConfig("gold", weight=2.0), TenantConfig("bronze", max_wait_ms=2.0)),
+        telemetry=TelemetryConfig(spans=True),
+    )
+    rt.start_serving()
+    t_submit = {}
+    try:
+        for i, s in enumerate(corpus):
+            t0 = time.perf_counter()
+            uid = rt.submit(s, tenant="gold" if i % 2 == 0 else "bronze")
+            t_submit[uid] = t0
+        rt.flush()
+        done = rt.drain()
+        t_end = time.perf_counter()
+        stats = rt.stats()
+        path = tmp_path / "trace.json"
+        n_spans = rt.dump_trace(str(path))
+    finally:
+        rt.stop_serving()
+    assert all(d.error is None for d in done) and len(done) == len(corpus)
+
+    # schema v2 latency section reports per-tenant quantiles
+    assert stats.schema_version == 2
+    for tname in ("gold", "bronze"):
+        summ = stats.latency.tenants[tname]["e2e"]
+        assert summ.count == len(corpus) // 2
+        assert 0.0 < summ.p50 <= summ.p95 <= summ.p99 <= summ.max
+
+    # Perfetto-valid Chrome trace-event JSON with both track groups
+    assert n_spans > 0
+    doc = json.loads(path.read_text())
+    events = doc["traceEvents"]
+    procs = {
+        e["args"]["name"] for e in events if e.get("ph") == "M" and e["name"] == "process_name"
+    }
+    assert {"tenant:gold", "tenant:bronze", "replica mesh"} <= procs
+    batches = [e for e in events if e.get("ph") == "X" and e.get("cat") == "batch"]
+    assert batches and all("replica" in e["args"] and e["args"]["uids"] for e in batches)
+
+    # per-request spans (queue -> decode -> stage -> dispatch -> drain) sum
+    # to the measured wall latency within 10%
+    per_uid: dict[int, dict[str, float]] = {}
+    for e in events:
+        if e.get("ph") == "X" and e.get("cat") == "request":
+            per_uid.setdefault(e["args"]["uid"], {})[e["name"]] = e["dur"] / 1e6
+    assert len(per_uid) == len(corpus)
+    for d in done:
+        parts = per_uid[d.uid]
+        assert set(parts) == {"queue", "decode", "stage", "dispatch", "drain"}
+        total = sum(parts.values())
+        wall = t_end - t_submit[d.uid]
+        assert abs(total - wall) <= 0.10 * wall + 2e-3, (d.uid, total, wall)
+
+
 # ----------------------------------------------------- config deprecations
 def test_legacy_runtime_config_kwargs_warn_once_and_route():
     with pytest.warns(DeprecationWarning, match="device_backend") as rec:
@@ -418,12 +480,14 @@ def test_runtime_stats_schema_and_json_roundtrip(corpus):
     rt.run(corpus)
     stats = rt.stats()
     assert isinstance(stats, RuntimeStats)
-    assert stats.schema_version == 1
+    assert stats.schema_version == 2
     d = stats.to_dict()
     json.dumps(d)  # wire-safe end to end
-    assert d["schema_version"] == 1
+    assert d["schema_version"] == 2
     assert d["device_program"]["backend"] == "fused"
     assert "engine" in d and "tenants" in d
+    # v2: the latency section digests the streaming histograms
+    assert "latency" in d and "stages" in d["latency"]
 
 
 def test_stats_dict_access_deprecated(corpus):
