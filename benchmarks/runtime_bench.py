@@ -40,6 +40,18 @@ Two workloads, each probing the subsystem built for it:
   histograms-on throughput must be >= 97% of telemetry-off (full mode),
   and telemetry-off runs must allocate zero span rings.  ``--trace-out``
   additionally captures spans and writes the Perfetto trace JSON.
+* **cold start** (AOT program sets, ``RuntimeConfig.warmup``) — two fresh
+  runtimes (fresh model closures, fresh jit caches) serve identical
+  batches; with ``warmup=full`` the first batch must land <= 1.5x the
+  steady-state p50 (the program set absorbed every compile at startup),
+  while ``warmup=off`` must show the problem exists (first batch >= 5x
+  p50) and ``warmup=full`` must leave zero post-startup compiles.
+* **dispatch overlap** (double-buffered staging) — the engine's
+  double-buffered consumer vs synchronous staging on a deterministic
+  fake device (sleep-controlled H2D leg + serial compute stream):
+  double-buffered throughput must reach >= 1.15x synchronous on 2+
+  cores, with telemetry spans showing batch N+1's staging overlapping
+  batch N's in-flight dispatch.
 
 Writes ``BENCH_runtime.json`` at the repo root (override with ``--out``).
 ``--check BASELINE.json`` turns the run into a **regression gate**: any
@@ -643,6 +655,191 @@ def _run_latency_leg(args) -> dict:
     }
 
 
+def _run_coldstart_leg(args) -> dict:
+    """AOT warmup vs lazy compile: first-batch latency against steady p50.
+
+    Two fresh runtimes serve the same batched request stream through the
+    scheduler.  Each gets its own model closure, so each owns a fresh jit
+    cache — ``warmup="off"`` pays its jit trace + XLA compile on the first
+    request batch (the cold-start tail this PR kills), ``warmup="full"``
+    pays it inside ``start_serving()`` instead, where the AOT program set
+    compiles and executes every batch bucket before the first submit.  The
+    startup cost is reported, the gates compare first-batch latency to the
+    steady-state p50 of the remaining batches, and ``warmup=full`` must
+    leave ``programs_compiled_post_warmup == 0``.
+    """
+    import time
+
+    batch = 8
+    n_batches = 6 if args.smoke else 8
+    input_size = 64
+    fmt = ImageFormat("pjpeg", round(input_size * 256 / 224), 90)
+    corpus = make_corpus(n_batches * batch, 256, [fmt], seed=11)
+    model_spec = ModelSpec(
+        "cold-cnn", input_size, exec_throughput=3000.0,
+        accuracy_by_format={fmt.key: 1.0},
+    )
+
+    def run_once(warmup: str):
+        # fresh closure => fresh jit cache: every leg pays (or warms away)
+        # its own compiles, nothing leaks across legs
+        model = make_model(input_size, width=32, seed=31)
+        runtime = SmolRuntime(
+            [model_spec],
+            [fmt],
+            {"cold-cnn": model},
+            calibration=corpus[:8],
+            config=RuntimeConfig(batch_size=batch, num_workers=2, warmup=warmup),
+        )
+        t0 = time.perf_counter()
+        runtime.start_serving()  # warmup=full compiles + executes the set here
+        startup_s = time.perf_counter() - t0
+        lat = []
+        try:
+            for b in range(n_batches):
+                group = corpus[b * batch : (b + 1) * batch]
+                t0 = time.perf_counter()
+                for item in group:
+                    runtime.submit(item)
+                runtime.flush(timeout=120.0)
+                runtime.drain()
+                lat.append(time.perf_counter() - t0)
+        finally:
+            runtime.stop_serving()
+        return {
+            "startup_s": startup_s,
+            "lat": lat,
+            "post_compiles": runtime.programs_compiled_post_warmup,
+            "compile_seconds": runtime.program_compile_seconds_total,
+        }
+
+    warm = run_once("full")
+    cold = run_once("off")
+    warm_p50 = float(np.median(warm["lat"][1:]))
+    cold_p50 = float(np.median(cold["lat"][1:]))
+    return {
+        "batch": batch,
+        "n_batches": n_batches,
+        "warm_startup_s": round(warm["startup_s"], 3),
+        "cold_startup_s": round(cold["startup_s"], 3),
+        "warm_first_batch_ms": round(warm["lat"][0] * 1e3, 2),
+        "warm_steady_p50_ms": round(warm_p50 * 1e3, 2),
+        "warm_first_over_p50": round(warm["lat"][0] / warm_p50, 3) if warm_p50 else 0.0,
+        "cold_first_batch_ms": round(cold["lat"][0] * 1e3, 2),
+        "cold_steady_p50_ms": round(cold_p50 * 1e3, 2),
+        "cold_first_over_p50": round(cold["lat"][0] / cold_p50, 3) if cold_p50 else 0.0,
+        "warm_post_startup_compiles": warm["post_compiles"],
+        "cold_post_startup_compiles": cold["post_compiles"],
+        "warm_compile_seconds": round(warm["compile_seconds"], 3),
+        "cold_compile_seconds": round(cold["compile_seconds"], 3),
+    }
+
+
+def _run_overlap_leg(args) -> dict:
+    """Double-buffered vs synchronous staging on a deterministic fake device.
+
+    The fake device models what a real accelerator dispatch does: the call
+    itself blocks for ``stage_s`` (the synchronous H2D staging leg), then
+    compute completes ``compute_s`` later on a *serial* device stream
+    (``done_at`` watermark), and results only block at retirement.  With
+    synchronous staging the consumer thread pays fill + stage serially per
+    batch; double-buffered dispatch moves the staging leg onto the
+    dispatcher thread so it overlaps the consumer's filling of batch N+1.
+    Host rows are real megabyte-scale memcpys so the consumer-side fill is
+    honest work, and every stage time is sleep-controlled, so the leg
+    measures the engine's overlap — not box throughput.  A spans-on pass
+    counts stage intervals overlapping an in-flight dispatch interval.
+    """
+    import time
+
+    from repro.core.engine import PipelinedEngine
+    from repro.runtime import Telemetry, TelemetryConfig
+
+    stage_s = 0.002  # the dispatch call's synchronous H2D leg
+    compute_s = 0.002  # async device compute per batch (serial stream)
+    batch = 8
+    n_items = (24 if args.smoke else 48) * batch
+    row_shape = (512, 512)  # 1 MiB/row float32: staging memcpy is real work
+
+    class _FakeOut:
+        def __init__(self, arr, ready_at):
+            self._arr = arr
+            self._ready_at = ready_at
+
+        def is_ready(self):
+            return time.perf_counter() >= self._ready_at
+
+        def block_until_ready(self):
+            delay = self._ready_at - time.perf_counter()
+            if delay > 0:
+                time.sleep(delay)
+            return self
+
+        def __array__(self, dtype=None):
+            self.block_until_ready()
+            return self._arr if dtype is None else self._arr.astype(dtype)
+
+    class _FakeDevice:
+        def __init__(self):
+            self.stream_t = 0.0
+
+        def __call__(self, b):
+            time.sleep(stage_s)  # synchronous H2D on the calling thread
+            now = time.perf_counter()
+            done = max(now, self.stream_t) + compute_s
+            self.stream_t = done
+            return _FakeOut(np.full((len(b),), float(len(b)), np.float32), done)
+
+    row = np.zeros(row_shape, np.float32)
+
+    def host_fn(item):
+        return row  # the consumer's staging memcpy is the cost under test
+
+    def run_once(double_buffer: bool, telemetry=None) -> float:
+        eng = PipelinedEngine(
+            host_fn,
+            _FakeDevice(),
+            row_shape,
+            np.float32,
+            batch_size=batch,
+            num_workers=2,
+            jit=False,
+            double_buffer=double_buffer,
+            telemetry=telemetry,
+        )
+        t0 = time.perf_counter()
+        out, _ = eng.run(list(range(n_items)))
+        wall = time.perf_counter() - t0
+        assert len(out) == n_items
+        return n_items / wall
+
+    tput_db = tput_sync = 0.0
+    for _ in range(2):  # interleave so box noise lands on both legs
+        tput_db = max(tput_db, run_once(True))
+        tput_sync = max(tput_sync, run_once(False))
+
+    # span evidence: batch N+1's staging overlapping batch N's dispatch
+    tel = Telemetry(TelemetryConfig(spans=True))
+    run_once(True, telemetry=tel)
+    spans = tel.spans()
+    stages = [(s.t0, s.t1) for s in spans if s.kind == "batch" and s.name == "stage"]
+    disps = [(s.t0, s.t1) for s in spans if s.kind == "batch" and s.name == "dispatch"]
+    overlapped = sum(
+        1 for s0, s1 in stages if any(d0 < s1 and s0 < d1 for d0, d1 in disps)
+    )
+    return {
+        "stage_s": stage_s,
+        "compute_s": compute_s,
+        "batch": batch,
+        "items": n_items,
+        "tput_double_buffered": round(tput_db, 2),
+        "tput_synchronous": round(tput_sync, 2),
+        "db_speedup": round(tput_db / tput_sync, 3) if tput_sync else 0.0,
+        "stage_spans": len(stages),
+        "stage_spans_overlapping_dispatch": overlapped,
+    }
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     # defaults make the workload host-decode-bound (big stored images, small
@@ -771,6 +968,12 @@ def main(argv=None) -> int:
     # ---- latency SLO + telemetry overhead: p99 under contention -----------
     latency_leg = _run_latency_leg(args)
 
+    # ---- cold start: AOT program-set warmup vs compile-on-first-request ---
+    coldstart_leg = _run_coldstart_leg(args)
+
+    # ---- dispatch overlap: double-buffered vs synchronous staging ---------
+    overlap_leg = _run_overlap_leg(args)
+
     # the typed RuntimeStats schema is what dashboards consume — read the
     # balanced runtime's snapshot through it rather than an ad-hoc dict
     rstats = bal_runtime.stats()
@@ -789,6 +992,13 @@ def main(argv=None) -> int:
         # the telemetry-on/off runs are sleep-bound, so the full-mode gate
         # binds tight; smoke runners still jitter the host-side share
         "telemetry_tol": 0.90 if args.smoke else 0.97,
+        # cold start: the warmed first batch carries scheduler ramp noise on
+        # shared runners, and the cold ratio depends on how slow the box's
+        # XLA compile is relative to its steady batches
+        "coldstart_warm": 3.0 if args.smoke else 1.5,
+        "coldstart_cold": 3.0 if args.smoke else 5.0,
+        # overlap: sleep+memcpy controlled, but smoke runners time-share
+        "overlap_speedup": 1.1 if args.smoke else 1.15,
     }
     pooled_ge_unpooled = pooled_sum >= thr["pooled_tol"] * unpooled_sum
     device_gate = device_leg["fused_speedup"] >= (
@@ -845,6 +1055,34 @@ def main(argv=None) -> int:
         "telemetry_off_zero_ring_allocs": (
             latency_leg["telemetry_off_ring_allocations"] == 0
         ),
+        # acceptance: with warmup=full the first served batch lands within
+        # 1.5x the steady-state p50 — the AOT program set absorbed every
+        # jit trace + XLA compile at startup
+        "coldstart_warm_first_batch_le_1_5x_p50": (
+            0 < coldstart_leg["warm_first_over_p50"] <= thr["coldstart_warm"]
+        ),
+        # ... while warmup=off shows the tail this kills: first batch >= 5x
+        "coldstart_cold_first_batch_ge_5x_p50": (
+            coldstart_leg["cold_first_over_p50"] >= thr["coldstart_cold"]
+        ),
+        # acceptance: warmup=full leaves zero request-path compiles
+        "warmup_full_zero_post_startup_compiles": (
+            coldstart_leg["warm_post_startup_compiles"] == 0
+        ),
+        # acceptance: double-buffered dispatch >= 1.15x synchronous staging;
+        # overlapping the staging leg with compute needs a second core
+        "double_buffer_ge_1_15x_sync": (
+            (overlap_leg["db_speedup"] >= thr["overlap_speedup"])
+            if cores >= 2
+            else True
+        ),
+        # the spans must actually show stage/compute overlap (batch N+1's
+        # staging interval intersecting an in-flight dispatch interval)
+        "double_buffer_spans_show_overlap": (
+            (overlap_leg["stage_spans_overlapping_dispatch"] > 0)
+            if cores >= 2
+            else True
+        ),
     }
     result = {
         "benchmark": "runtime_end_to_end",
@@ -869,6 +1107,8 @@ def main(argv=None) -> int:
         "fairness": fairness,
         "replica_mesh": replica_leg,
         "latency": latency_leg,
+        "coldstart": coldstart_leg,
+        "overlap": overlap_leg,
         "stats_schema_version": rstats.schema_version,
         "device_program_serving": {
             "backend": rstats.device_program.backend,

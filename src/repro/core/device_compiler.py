@@ -67,10 +67,32 @@ def default_interpret() -> bool:
 
 
 # ------------------------------------------------------- dispatch calibration
-_MEASURED_DISPATCH_S: float | None = None
+_MEASURED_DISPATCH_S: dict[tuple[str, str], float] = {}
 
 
-def measure_dispatch_overhead(iters: int = 24, force: bool = False) -> float:
+def _dispatch_memo_key(device: Any = None) -> tuple[str, str]:
+    """Memo identity for dispatch-overhead measurements: (platform, kind).
+
+    A mesh over heterogeneous or virtual devices must not reuse one
+    device's measured overhead for another kind — the memo is keyed by
+    what is actually being dispatched to, not cached process-wide.
+    """
+    if device is not None and hasattr(device, "device_set"):
+        device = min(device.device_set, key=lambda d: d.id)
+    if device is None:
+        devices = jax.devices()
+        device = devices[0] if devices else None
+    if device is None:
+        return (jax.default_backend(), "")
+    return (
+        getattr(device, "platform", jax.default_backend()),
+        str(getattr(device, "device_kind", "")),
+    )
+
+
+def measure_dispatch_overhead(
+    iters: int = 24, force: bool = False, device: Any = None
+) -> float:
     """Measured per-dispatch launch overhead: one *empty* device dispatch.
 
     Times a trivial jitted program (compile + first run outside the clock)
@@ -78,15 +100,18 @@ def measure_dispatch_overhead(iters: int = 24, force: bool = False) -> float:
     floor any device dispatch pays before doing work.  The result feeds the
     placement cost model's ``device_dispatch_overhead_s`` so fused-group
     costing binds by *measurement* instead of a config knob (ROADMAP item).
-    Cached per process: the overhead is a property of the backend/runtime,
-    not of any one plan.
+    Cached per (backend, device kind): the overhead is a property of the
+    dispatch target, not of any one plan — and not of the whole process,
+    which may host a mesh of unlike devices.
     """
-    global _MEASURED_DISPATCH_S
-    if _MEASURED_DISPATCH_S is not None and not force:
-        return _MEASURED_DISPATCH_S
+    key = _dispatch_memo_key(device)
+    if key in _MEASURED_DISPATCH_S and not force:
+        return _MEASURED_DISPATCH_S[key]
     import time
 
     x = jnp.zeros((8,), jnp.float32)
+    if device is not None and not hasattr(device, "device_set"):
+        x = jax.device_put(x, device)
     fn = jax.jit(lambda v: v + 1.0)
     jax.block_until_ready(fn(x))  # compile + warm outside the clock
     best = float("inf")
@@ -94,7 +119,7 @@ def measure_dispatch_overhead(iters: int = 24, force: bool = False) -> float:
         t0 = time.perf_counter()
         jax.block_until_ready(fn(x))
         best = min(best, time.perf_counter() - t0)
-    _MEASURED_DISPATCH_S = best
+    _MEASURED_DISPATCH_S[key] = best
     return best
 
 
@@ -106,6 +131,7 @@ class ProgramCacheStats:
     hits: int  # program reuses (cache lookups that found a program)
     misses: int  # compiles (insertions of a freshly-built program)
     evictions: int  # LRU removals forced by max_entries
+    pinned: int = 0  # entries held non-evictable by a bound ProgramSet
 
 
 class ProgramCache(MutableMapping):
@@ -120,6 +146,13 @@ class ProgramCache(MutableMapping):
     eviction" hazard.  LRU keeps every *active* tenant's program resident:
     a program serving traffic is re-looked-up on each placement move or
     scheduler rebind and therefore never at the cold end.
+
+    Warm AOT :class:`ProgramSet` entries are *pinned* (refcounted, one pin
+    per bound set): eviction skips pinned keys, so LRU churn from other
+    tenants can never silently undo a startup warmup.  When every entry is
+    pinned the cache is allowed to exceed ``max_entries`` rather than
+    evict a warm program — the facade warns at warmup time when the
+    configured bound is smaller than the warmup set.
     """
 
     def __init__(self, max_entries: int = 16):
@@ -127,6 +160,7 @@ class ProgramCache(MutableMapping):
             raise ValueError(f"max_entries must be >= 1, got {max_entries}")
         self.max_entries = int(max_entries)
         self._data: dict = {}  # insertion/recency ordered (py3.7+ dicts)
+        self._pins: dict = {}  # key -> pin refcount
         self._hits = 0
         self._misses = 0
         self._evictions = 0
@@ -144,11 +178,34 @@ class ProgramCache(MutableMapping):
             self._misses += 1
         self._data[key] = program
         while len(self._data) > self.max_entries:
-            self._data.pop(next(iter(self._data)))  # cold end
+            # never victimise the entry being inserted: when everything
+            # older is pinned, warmup's compile-then-pin sequence must find
+            # its fresh program still resident
+            victim = next(
+                (k for k in self._data if k != key and k not in self._pins), None
+            )
+            if victim is None:
+                break  # everything else resident is pinned: grow past the bound
+            self._data.pop(victim)
             self._evictions += 1
+
+    def pin(self, key) -> None:
+        """Hold ``key`` non-evictable (refcounted; raises when absent)."""
+        if key not in self._data:
+            raise KeyError(key)
+        self._pins[key] = self._pins.get(key, 0) + 1
+
+    def unpin(self, key) -> None:
+        """Drop one pin on ``key`` (no-op when not pinned)."""
+        n = self._pins.get(key, 0)
+        if n <= 1:
+            self._pins.pop(key, None)
+        else:
+            self._pins[key] = n - 1
 
     def __delitem__(self, key) -> None:
         del self._data[key]
+        self._pins.pop(key, None)
 
     def __contains__(self, key) -> bool:  # no stats: peek, not use
         return key in self._data
@@ -166,6 +223,7 @@ class ProgramCache(MutableMapping):
             hits=self._hits,
             misses=self._misses,
             evictions=self._evictions,
+            pinned=len(self._pins),
         )
 
 
@@ -392,6 +450,16 @@ class DevicePreprocProgram:
     dispatch_count: int = 0
     build_seconds: float = 0.0
     first_dispatch_seconds: float | None = None
+    # the staged batch size this program was compiled for (a ProgramSet
+    # holds one program per bucketed size)
+    batch_size: int = 0
+    # invoked as listener(program, first_dispatch_seconds) when dispatch #1
+    # pays the jit trace + XLA compile — the facade counts post-warmup
+    # compiles and emits "compile" telemetry spans through it
+    compile_listener: Callable[["DevicePreprocProgram", float], None] | None = None
+    # True while ProgramSet.warm() is executing this program: the listener
+    # can tell a startup warmup compile from a cold request-path compile
+    _warming: bool = False
     # split-decode programs only: the scaled-IDCT resolution divisor and the
     # coefficient staging layout this program was compiled for
     coeff_factor: int | None = None
@@ -413,6 +481,8 @@ class DevicePreprocProgram:
             out = self.fn(_place(batch, self.device))
             jax.block_until_ready(out)
             self.first_dispatch_seconds = time.perf_counter() - t0
+            if self.compile_listener is not None:
+                self.compile_listener(self, self.first_dispatch_seconds)
             return out
         return self.fn(_place(batch, self.device))
 
@@ -427,6 +497,98 @@ def _jit(raw: Callable, donate: bool) -> Callable:
     if donate and jax.default_backend() != "cpu":
         return jax.jit(raw, donate_argnums=(0,))
     return jax.jit(raw)
+
+
+# ------------------------------------------------------------- program sets
+def batch_buckets(batch_size: int) -> tuple[int, ...]:
+    """Bucketed dispatch sizes for one configured max batch, ascending.
+
+    Every power of two strictly below ``batch_size`` plus the exact size —
+    the SHARK-Engine ``prefill_bs{N}`` idiom.  A partial batch of ``n``
+    items dispatches through the smallest covering bucket instead of
+    tracing a fresh program for every ragged tail shape.
+    """
+    if batch_size < 1:
+        raise ValueError(f"batch_size must be >= 1, got {batch_size}")
+    buckets = {int(batch_size)}
+    b = 1
+    while b < batch_size:
+        buckets.add(b)
+        b <<= 1
+    return tuple(sorted(buckets))
+
+
+@dataclasses.dataclass
+class ProgramSet:
+    """AOT program set for one (plan geometry, replica device) pair.
+
+    One :class:`DevicePreprocProgram` per bucketed batch size, compiled
+    ahead of time so steady-state serving never pays a jit trace or XLA
+    compile: batch formation closes a ragged batch to :meth:`bucket_for`'s
+    smallest covering bucket, dispatches the staged buffer's ``[:bucket]``
+    prefix, and reads back only the real rows — padded lanes never reach a
+    retired result.  ``warm()`` (``RuntimeConfig.warmup="full"``) executes
+    each entry once on zeros, moving every first-dispatch compile into
+    startup.
+    """
+
+    programs: dict[int, DevicePreprocProgram]  # bucket -> program, ascending
+    geometry: tuple = ()  # the plan's staging-geometry bin (shape, dtype)
+    device: Any = None
+
+    def __post_init__(self):
+        if not self.programs:
+            raise ValueError("ProgramSet needs at least one program")
+        self.programs = dict(sorted(self.programs.items()))
+
+    @property
+    def buckets(self) -> tuple[int, ...]:
+        return tuple(self.programs)
+
+    @property
+    def max_batch(self) -> int:
+        return next(reversed(self.programs))
+
+    def bucket_for(self, n: int) -> int | None:
+        """Smallest bucket covering ``n`` rows (None when n exceeds the set)."""
+        for b in self.programs:
+            if b >= n:
+                return b
+        return None
+
+    def program_for(self, n: int) -> tuple[DevicePreprocProgram, int] | None:
+        """(program, bucket) dispatching ``n`` staged rows, or None."""
+        b = self.bucket_for(n)
+        if b is None:
+            return None
+        return self.programs[b], b
+
+    def keys(self) -> tuple:
+        """Program-cache keys of every entry (for pin/unpin bookkeeping)."""
+        return tuple(p.key for p in self.programs.values())
+
+    def warm(self) -> int:
+        """Execute each not-yet-dispatched entry once on zeros.
+
+        The first dispatch of a jitted program traces and XLA-compiles
+        synchronously; running it here (blocking until ready) is what turns
+        "compiled at startup" into "never compiles on the request path".
+        Returns the number of programs warmed.
+        """
+        warmed = 0
+        for bucket, prog in self.programs.items():
+            if prog.dispatch_count:
+                continue
+            zeros = np.zeros(
+                (bucket, *prog.in_meta.shape), np.dtype(prog.in_meta.dtype)
+            )
+            prog._warming = True
+            try:
+                jax.block_until_ready(prog(zeros))
+            finally:
+                prog._warming = False
+            warmed += 1
+        return warmed
 
 
 def program_cache_key(
@@ -522,6 +684,7 @@ def compile_device_program(
         in_meta=in_meta,
         out_meta=out_meta,
         device=device,
+        batch_size=batch_size,
         build_seconds=time.perf_counter() - t_build,
     )
     if cache is not None:
@@ -673,6 +836,7 @@ def compile_coeff_program(
         coeff_factor=factor,
         coeff_layout=layout,
         device=device,
+        batch_size=batch_size,
         build_seconds=time.perf_counter() - t_build,
     )
     if cache is not None:

@@ -31,6 +31,7 @@ from __future__ import annotations
 
 import dataclasses
 import queue
+import threading
 import time
 from typing import Any, Callable, Sequence
 
@@ -106,10 +107,20 @@ class PipelinedEngine:
         item's decoded bytes are admitted against its tenant's budget, so
         admission charges the tenant that decoded them.
       telemetry: optional :class:`~repro.runtime.telemetry.Telemetry` hub —
-        the worker pool feeds the ``decode`` histogram per item and each
-        retired batch feeds the ``dispatch`` histogram (dispatch →
-        retirement), so batch runs share the serving path's latency
-        surfaces.
+        the worker pool feeds the ``decode`` histogram per item, staging
+        handoffs feed the ``stage`` histogram and each retired batch feeds
+        the ``dispatch`` histogram (dispatch → retirement), so batch runs
+        share the serving path's latency surfaces.
+      double_buffer: dispatch batches from a dedicated dispatcher thread
+        fed by a bounded staging queue, so batch N+1's device_put (the
+        synchronous H2D leg of an async dispatch) overlaps batch N's
+        compute and the consumer never stalls on staging.  ``False`` keeps
+        the synchronous-staging loop (the bench's overlap baseline).
+      program_set: optional :class:`~repro.core.device_compiler.ProgramSet`
+        of AOT bucket programs — ragged tail batches dispatch through the
+        smallest covering bucket's warm program (``buf[:bucket]``) instead
+        of tracing a fresh shape; only real rows are read at retirement, so
+        padded lanes never leak into outputs.
     """
 
     def __init__(
@@ -127,6 +138,8 @@ class PipelinedEngine:
         worker_state_factory: Callable[[], Any] | None = None,
         tenant_budgets: Any = None,
         telemetry: Any = None,
+        double_buffer: bool = True,
+        program_set: Any = None,
     ):
         # Deferred: repro.core must stay importable without repro.runtime
         # (runtime's facade imports this module at package-init time).
@@ -142,11 +155,16 @@ class PipelinedEngine:
         self.out_dtype = out_dtype
         self.worker_state_factory = worker_state_factory
         self.telemetry = telemetry
+        self.double_buffer = double_buffer
+        self.program_set = program_set
         self.memory = memory or memory_mod.MemoryConfig()
         # Leased, reused staging buffers — the pinned-buffer pool of
-        # Appendix A.  pooling=False keeps the allocate-per-batch baseline
-        # (what the bench sweeps against).
-        self._pool = self.memory.build_pool()
+        # Appendix A — behind the TransferPool's bounded slot count: at most
+        # ring_slots + 1 staging buffers exist (filling + queued + in
+        # flight), so the double-buffered consumer backpressures instead of
+        # racing ahead of the device.  pooling=False keeps the
+        # allocate-per-batch baseline (what the bench sweeps against).
+        self._transfer = self.memory.build_transfer_pool(ring_slots + 1)
         self._budget = self.memory.build_budget()
         self.tenant_budgets = dict(tenant_budgets) if tenant_budgets else None
         self._item_nbytes = int(np.prod(self.out_shape, dtype=np.int64)) * np.dtype(
@@ -164,14 +182,20 @@ class PipelinedEngine:
         self._warmed = False
 
     # ------------------------------------------------------------- memory API
-    def _acquire_staging(self):
-        """One batch staging buffer: a pool lease, or a fresh allocation in
-        the unpooled baseline.  Returns (array, lease-or-None)."""
+    def _acquire_staging(self, liveness_check: Callable[[], None] | None = None):
+        """One batch staging buffer leased from the bounded transfer pool.
+
+        Blocks while every slot is staged or in flight (backpressure);
+        ``liveness_check`` runs between waits so a consumer blocked on a
+        dead dispatcher raises its error instead of hanging.  Returns
+        (array, lease)."""
         shape = (self.batch_size, *self.out_shape)
-        if self._pool is not None:
-            lease = self._pool.lease(shape, self.out_dtype)
-            return lease.array, lease
-        return np.zeros(shape, dtype=self.out_dtype), None
+        while True:
+            lease = self._transfer.lease(shape, self.out_dtype, timeout=0.1)
+            if lease is not None:
+                return lease.array, lease
+            if liveness_check is not None:
+                liveness_check()
 
     def _make_worker_pool(self, tenants: Sequence[str] | None = None):
         from repro.runtime.workers import WorkerPool
@@ -212,7 +236,11 @@ class PipelinedEngine:
         }
 
     def pool_stats(self):
-        return self._pool.stats() if self._pool is not None else None
+        pool = self._transfer.buffers
+        return pool.stats() if pool is not None else None
+
+    def transfer_stats(self):
+        return self._transfer.stats()
 
     def budget_stats(self):
         return self._budget.stats() if self._budget is not None else None
@@ -278,11 +306,14 @@ class PipelinedEngine:
                 f"tenants ({len(tenants)}) must align with items ({n})"
             )
         if not self._warmed:
-            # Warm up the compiled graph outside the measured window (once
-            # per engine — chunked callers reuse the compilation).
-            warm = np.zeros((self.batch_size, *self.out_shape), dtype=self.out_dtype)
-            jax.block_until_ready(self.device_fn(warm))
-            self._warmed = True
+            if self.device_program is not None and self.device_program.dispatch_count:
+                self._warmed = True  # AOT-warmed program: already compiled + run
+            else:
+                # Warm up the compiled graph outside the measured window
+                # (once per engine — chunked callers reuse the compilation).
+                warm = np.zeros((self.batch_size, *self.out_shape), dtype=self.out_dtype)
+                jax.block_until_ready(self.device_fn(warm))
+                self._warmed = True
 
         tenant_items: dict[str, int] | None = None
         tenant_bytes: dict[str, int] | None = None
@@ -294,6 +325,59 @@ class PipelinedEngine:
         stream = self._make_worker_pool(tenants).process(items)
 
         outputs: list[Any] = [None] * n if return_outputs else []
+        consume = (
+            self._consume_double_buffered if self.double_buffer else self._consume_sync
+        )
+        try:
+            n_batches = consume(
+                stream, outputs, return_outputs, tenants, tenant_items, tenant_bytes, clock
+            )
+        finally:
+            stream.cancel()
+            stream.wait()  # joins threads + reconciles leaked admissions
+        dt = time.perf_counter() - t0
+        if stream.errors:
+            raise stream.errors[0]
+        return outputs, EngineStats(
+            "pipelined",
+            n,
+            dt,
+            n_batches,
+            host_busy_seconds=stream.host_busy_seconds,
+            device_busy_seconds=clock.busy,
+            pool_stats=self.pool_stats(),
+            budget_stats=self.budget_stats(),
+            tenant_items=tenant_items,
+            tenant_bytes=tenant_bytes,
+        )
+
+    # ------------------------------------------------------- consumer loops
+    def _stage_row(self, stream, msg, buf, batch_idx, tenants, tenant_items, tenant_bytes):
+        idx, arr = msg
+        buf[len(batch_idx)] = arr
+        stream.release_item(idx)  # staged: decoded bytes retire
+        if tenants is not None:
+            name = tenants[idx]
+            tenant_items[name] = tenant_items.get(name, 0) + 1
+            tenant_bytes[name] = tenant_bytes.get(name, 0) + self._item_nbytes
+        batch_idx.append(idx)
+
+    def _dispatch_fn(self, count: int):
+        """The program dispatching ``count`` staged rows: the smallest
+        covering AOT bucket when a ProgramSet is bound (a ragged tail runs
+        a warm program on ``buf[:bucket]`` instead of tracing a fresh
+        shape), else the full-batch fn.  Returns (fn, rows-or-None)."""
+        if self.program_set is not None and count < self.batch_size:
+            hit = self.program_set.program_for(count)
+            if hit is not None:
+                return hit
+        return self.device_fn, None
+
+    def _consume_sync(
+        self, stream, outputs, return_outputs, tenants, tenant_items, tenant_bytes, clock
+    ) -> int:
+        """Synchronous-staging consumer: each batch's dispatch (and its
+        synchronous H2D leg) runs inline on this thread."""
         # in-flight entries: (row->item indices, device output, dispatch
         # time, staging lease to release at retirement)
         in_flight: list[tuple[list[int], Any, float, Any]] = []
@@ -305,8 +389,9 @@ class PipelinedEngine:
             nonlocal buf, lease, batch_idx, n_batches
             if count == 0:
                 return
+            fn, rows = self._dispatch_fn(count)
             dispatch_t = time.perf_counter()
-            dev_out = self.device_fn(buf)  # async dispatch
+            dev_out = fn(buf if rows is None else buf[:rows])  # async dispatch
             in_flight.append((list(batch_idx[:count]), dev_out, dispatch_t, lease))
             n_batches += 1
             if len(in_flight) >= self.ring_slots:
@@ -334,14 +419,9 @@ class PipelinedEngine:
                     continue
                 if msg is None:
                     break
-                idx, arr = msg
-                buf[len(batch_idx)] = arr
-                stream.release_item(idx)  # staged: decoded bytes retire
-                if tenants is not None:
-                    name = tenants[idx]
-                    tenant_items[name] = tenant_items.get(name, 0) + 1
-                    tenant_bytes[name] = tenant_bytes.get(name, 0) + self._item_nbytes
-                batch_idx.append(idx)
+                self._stage_row(
+                    stream, msg, buf, batch_idx, tenants, tenant_items, tenant_bytes
+                )
                 if len(batch_idx) == self.batch_size:
                     flush(self.batch_size)
             if batch_idx:  # ragged tail: pad (padding rows are stale; fine)
@@ -351,43 +431,154 @@ class PipelinedEngine:
         finally:
             if lease is not None:
                 lease.release()  # the partially-filled buffer never dispatched
-            stream.cancel()
-            stream.wait()  # joins threads + reconciles leaked admissions
-        dt = time.perf_counter() - t0
-        if stream.errors:
-            raise stream.errors[0]
-        return outputs, EngineStats(
-            "pipelined",
-            n,
-            dt,
-            n_batches,
-            host_busy_seconds=stream.host_busy_seconds,
-            device_busy_seconds=clock.busy,
-            pool_stats=self.pool_stats(),
-            budget_stats=self.budget_stats(),
-            tenant_items=tenant_items,
-            tenant_bytes=tenant_bytes,
-        )
+        return n_batches
+
+    def _consume_double_buffered(
+        self, stream, outputs, return_outputs, tenants, tenant_items, tenant_bytes, clock
+    ) -> int:
+        """Double-buffered consumer: a dispatcher thread drains a bounded
+        staging queue, so batch N+1's device_put + dispatch overlap batch
+        N's compute while this thread only fills staging buffers.
+        ``jax.block_until_ready`` happens at retirement only (dispatcher
+        side) — the consumer never waits on the device."""
+        stage_q: queue.Queue = queue.Queue(maxsize=2)
+        disp_errors: list[BaseException] = []
+        stopped = threading.Event()
+
+        def dispatcher():
+            in_flight: list[tuple[list[int], Any, float, Any]] = []
+            current = None  # lease taken off the queue, not yet in in_flight
+            try:
+                while True:
+                    try:
+                        msg = stage_q.get(timeout=0.002 if in_flight else None)
+                    except queue.Empty:
+                        while in_flight and _array_is_ready(in_flight[0][1]):
+                            self._retire(in_flight.pop(0), outputs, return_outputs, clock)
+                        continue
+                    if msg is None:
+                        break
+                    idxs, dbuf, dlease, t_staged = msg
+                    current = dlease
+                    fn, rows = self._dispatch_fn(len(idxs))
+                    dispatch_t = time.perf_counter()
+                    dev_out = fn(dbuf if rows is None else dbuf[:rows])
+                    t_called = time.perf_counter()
+                    if self.telemetry is not None:
+                        # queue wait + the dispatch call's synchronous H2D
+                        # leg — staging cost the consumer no longer pays
+                        self.telemetry.record("stage", t_called - t_staged)
+                        if self.telemetry.config.spans:
+                            self.telemetry.emit_span(
+                                "batch", "stage", None,
+                                self.telemetry.next_batch_id(),
+                                t_staged, t_called, replica=0, size=len(idxs),
+                            )
+                    in_flight.append((idxs, dev_out, dispatch_t, dlease))
+                    current = None  # ownership moved into the ring
+                    if len(in_flight) >= self.ring_slots:
+                        self._retire(in_flight.pop(0), outputs, return_outputs, clock)
+                    while in_flight and _array_is_ready(in_flight[0][1]):
+                        self._retire(in_flight.pop(0), outputs, return_outputs, clock)
+                while in_flight:
+                    self._retire(in_flight.pop(0), outputs, return_outputs, clock)
+            except BaseException as e:  # noqa: BLE001 - re-raised by the consumer
+                disp_errors.append(e)
+                if current is not None:
+                    current.release()
+                for _idxs, _out, _t, dlease in in_flight:
+                    if dlease is not None:
+                        dlease.release()
+            finally:
+                stopped.set()
+
+        thread = threading.Thread(target=dispatcher, name="engine-dispatcher", daemon=True)
+        thread.start()
+
+        def check_dispatcher():
+            if disp_errors:
+                raise disp_errors[0]
+
+        def enqueue(msg):
+            while True:
+                check_dispatcher()
+                try:
+                    stage_q.put(msg, timeout=0.05)
+                    return
+                except queue.Full:
+                    continue
+
+        n_batches = 0
+        batch_idx: list[int] = []
+        buf, lease = self._acquire_staging(check_dispatcher)
+        try:
+            while True:
+                try:
+                    msg = stream.get(timeout=0.1)
+                except queue.Empty:
+                    check_dispatcher()
+                    continue
+                if msg is None:
+                    break
+                self._stage_row(
+                    stream, msg, buf, batch_idx, tenants, tenant_items, tenant_bytes
+                )
+                if len(batch_idx) == self.batch_size:
+                    enqueue((batch_idx, buf, lease, time.perf_counter()))
+                    n_batches += 1
+                    batch_idx = []
+                    buf, lease = self._acquire_staging(check_dispatcher)
+            if batch_idx:  # ragged tail: bucketed dispatch masks the padding
+                enqueue((batch_idx, buf, lease, time.perf_counter()))
+                n_batches += 1
+                batch_idx, buf, lease = [], None, None
+        finally:
+            if lease is not None:
+                lease.release()  # the partially-filled buffer never dispatched
+            while True:  # hand the dispatcher its shutdown sentinel
+                try:
+                    stage_q.put(None, timeout=0.05)
+                    break
+                except queue.Full:
+                    if stopped.is_set():
+                        break
+            thread.join()
+            while True:  # error path: staged-but-never-dispatched leases
+                try:
+                    left = stage_q.get_nowait()
+                except queue.Empty:
+                    break
+                if left is not None and left[2] is not None:
+                    left[2].release()
+        if disp_errors:
+            raise disp_errors[0]
+        return n_batches
 
     # -------------------------------------------------------------- helpers
     def _retire(self, entry, outputs, return_outputs: bool, clock: "_DeviceClock | None" = None):
         idxs, dev_out, dispatch_t, lease = entry
-        if return_outputs:
-            host_out = np.asarray(dev_out)
-            for row, idx in enumerate(idxs):
-                outputs[idx] = host_out[row]
-        else:
-            jax.block_until_ready(dev_out)
-        if lease is not None:
-            lease.release()  # staging buffer back to the pool
+        try:
+            if return_outputs:
+                host_out = np.asarray(dev_out)
+                for row, idx in enumerate(idxs):
+                    outputs[idx] = host_out[row]
+            else:
+                jax.block_until_ready(dev_out)
+        finally:
+            if lease is not None:
+                lease.release()  # staging buffer back to the pool
+        now = time.perf_counter()
         if clock is not None:
             clock.retire(dispatch_t)
         if self.telemetry is not None:
             # dispatch -> retirement; an upper bound on device time (eager
             # is_ready retirement keeps it tight), matching _DeviceClock
-            self.telemetry.record(
-                "dispatch", time.perf_counter() - dispatch_t
-            )
+            self.telemetry.record("dispatch", now - dispatch_t)
+            if self.telemetry.config.spans:
+                self.telemetry.emit_span(
+                    "batch", "dispatch", None, self.telemetry.next_batch_id(),
+                    dispatch_t, now, replica=0, size=len(idxs),
+                )
 
 
 def _array_is_ready(x) -> bool:

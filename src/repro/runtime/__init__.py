@@ -45,6 +45,9 @@ from repro.runtime.memory import (
     MemoryBudget,
     MemoryConfig,
     PoolStats,
+    TransferLease,
+    TransferPool,
+    TransferPoolStats,
 )
 from repro.runtime.recalibration import (
     RecalibrationEvent,
@@ -125,6 +128,9 @@ __all__ = [
     "TenantConfig",
     "TenantSection",
     "TenantStats",
+    "TransferLease",
+    "TransferPool",
+    "TransferPoolStats",
     "WorkerPool",
     "WorkerRecalibrationEvent",
     "WorkerRecalibrator",

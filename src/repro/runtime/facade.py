@@ -246,6 +246,16 @@ class RuntimeConfig:
     # multi-model tenants churn programs — and every replica holds its own
     # program instance — so the cache must not grow without bound
     program_cache_entries: int = 16
+    # AOT program-set warmup (kills compile-on-first-request cold starts):
+    #   "off"  — compile each program on first dispatch (legacy behaviour)
+    #   "lazy" — build + pin one program per batch bucket × replica at
+    #            compile time; XLA compilation still happens on first use
+    #   "full" — additionally execute every entry once on zeros at startup,
+    #            so steady-state serving never JITs
+    warmup: str = "off"
+    # dispatch batches from a dedicated engine thread so batch N+1's H2D
+    # staging overlaps batch N's compute (False = synchronous staging)
+    double_buffer: bool = True
     # deprecated flat spellings of the sub-config fields above
     device_backend: dataclasses.InitVar[str | None] = None
     fused_impl: dataclasses.InitVar[str | None] = None
@@ -302,6 +312,10 @@ class RuntimeConfig:
                     setattr(self, sub, dataclasses.replace(getattr(self, sub), **kwargs))
         if self.program_cache_entries < 1:
             raise ValueError("program_cache_entries must be >= 1")
+        if self.warmup not in ("off", "lazy", "full"):
+            raise ValueError(
+                f"warmup must be 'off', 'lazy' or 'full', got {self.warmup!r}"
+            )
         self.tenants = tuple(self.tenants)
         names = [t.name for t in self.tenants]
         if len(names) != len(set(names)):
@@ -338,6 +352,10 @@ class CompiledPlan:
     # non-None when this plan runs the split-decode placement: the costed
     # scaled-IDCT factor / staging layout the program was compiled for
     coeff: SplitDecodeOption | None = None
+    # AOT bucket programs, one ProgramSet per replica target (empty when
+    # RuntimeConfig.warmup == "off"): partial batches dispatch the smallest
+    # covering bucket's warm program instead of tracing a fresh shape
+    program_sets: tuple[Any, ...] = ()
     # Built lazily: only the batch path needs the engine's staging buffers;
     # the serving path feeds the RequestScheduler directly.
     engine: PipelinedEngine | None = None
@@ -405,6 +423,15 @@ class SmolRuntime:
         # measured per-dispatch launch overhead (lazily filled when the
         # config leaves device_dispatch_overhead_s at None)
         self._measured_dispatch_s: float | None = None
+        # cold-compile observability: every DevicePreprocProgram this
+        # runtime compiles reports its first dispatch (the jit trace + XLA
+        # compile) through _on_program_compiled.  _warmup_done flips once
+        # start_serving() finishes — compiles after that are request-path
+        # cold starts, which warmup="full" promises to eliminate.
+        self._warmup_done = False
+        self._programs_compiled_post_warmup = 0
+        self._program_compile_seconds = 0.0
+        self._compile_span_seq = 0
         self._recalibrator: Recalibrator | None = None
         # multi-tenant state: tenants pinning their own model get their own
         # plan, compiled program, and recalibrator (per-tenant splits)
@@ -522,7 +549,11 @@ class SmolRuntime:
 
     # ------------------------------------------------------------- compiling
     def _coeff_stage_fns(
-        self, plan: QueryPlan, coeff: SplitDecodeOption, device: Any = None
+        self,
+        plan: QueryPlan,
+        coeff: SplitDecodeOption,
+        device: Any = None,
+        batch_size: int | None = None,
     ):
         """Split-decode path (§6.4): host stops after the entropy stage and
         stages one quantized-coefficient tensor per item
@@ -544,7 +575,7 @@ class SmolRuntime:
                 header,
                 chain,
                 self.model_fns[plan.model.name],
-                self.config.batch_size,
+                batch_size or self.config.batch_size,
                 factor=coeff.factor,
                 layout=coeff.layout,
                 impl=self.config.device.fused_impl,
@@ -554,6 +585,7 @@ class SmolRuntime:
             )
         except ValueError:
             return None
+        program.compile_listener = self._on_program_compiled
         out_shape = tuple(program.in_meta.shape)  # staged_coeff_shape(header, layout)
         out_dtype = np.dtype(program.in_meta.dtype)
         layout = coeff.layout
@@ -572,7 +604,13 @@ class SmolRuntime:
 
         return host_fn, program, out_shape, out_dtype
 
-    def _stage_fns(self, plan: QueryPlan, placement: Placement, device: Any = None):
+    def _stage_fns(
+        self,
+        plan: QueryPlan,
+        placement: Placement,
+        device: Any = None,
+        batch_size: int | None = None,
+    ):
         fmt = plan.fmt
         host_ops = list(placement.host_ops)
         device_ops = list(placement.device_ops)
@@ -596,14 +634,56 @@ class SmolRuntime:
             device_ops,
             out_meta,
             model_fn,
-            self.config.batch_size,
+            batch_size or self.config.batch_size,
             backend=self.config.device.backend,
             impl=self.config.device.fused_impl,
             model_key=plan.model.name,
             cache=self._device_programs,
             device=device,
         )
+        program.compile_listener = self._on_program_compiled
         return host_fn, program, out_shape, out_dtype
+
+    def _on_program_compiled(
+        self, prog: DevicePreprocProgram, first_dispatch_seconds: float
+    ) -> None:
+        """Compile listener: a program's dispatch #1 just paid the jit
+        trace + XLA compile.  Feeds the cold-compile counters
+        (``metrics_text``) and emits a "compile" span when capture is on —
+        warmup-pass compiles are tagged, request-path ones count."""
+        self._program_compile_seconds += prog.build_seconds + first_dispatch_seconds
+        if self._warmup_done and not prog._warming:
+            self._programs_compiled_post_warmup += 1
+        tel = self.telemetry
+        if tel.config.spans:
+            t1 = time.perf_counter()
+            self._compile_span_seq += 1
+            tel.emit_span(
+                "compile",
+                f"jit_compile[bs={prog.batch_size}]",
+                None,
+                self._compile_span_seq,
+                t1 - first_dispatch_seconds,
+                t1,
+                impl=prog.impl,
+                backend=prog.backend,
+                batch=prog.batch_size,
+                warmup=prog._warming,
+                build_s=prog.build_seconds,
+            )
+
+    @property
+    def programs_compiled_post_warmup(self) -> int:
+        """Device programs that XLA-compiled on the request path — after
+        ``start_serving()`` finished and outside any warmup pass.  Stays 0
+        under ``warmup="full"``; that is the cold-start guarantee."""
+        return self._programs_compiled_post_warmup
+
+    @property
+    def program_compile_seconds_total(self) -> float:
+        """Cumulative build + first-dispatch (trace/compile) seconds across
+        every program this runtime compiled, warmup included."""
+        return self._program_compile_seconds
 
     def compile(self, plan: QueryPlan | None = None, force: bool = False) -> CompiledPlan:
         if self._compiled is not None and plan is None and not force:
@@ -733,16 +813,91 @@ class SmolRuntime:
             else:
                 _, prog, _, _ = self._stage_fns(plan, placement, device=target)
             programs.append(prog)
+        program_sets: tuple[Any, ...] = ()
+        if self.config.warmup != "off":
+            program_sets = tuple(
+                self._build_program_set(plan, placement, used_coeff, target, prog)
+                for target, prog in zip(targets, programs)
+            )
+            pinned = self._device_programs.stats().pinned
+            if pinned > self.config.program_cache_entries:
+                warnings.warn(
+                    f"program_cache_entries={self.config.program_cache_entries} "
+                    f"is smaller than the {pinned} pinned warmup programs; the "
+                    "cache will hold above its bound — raise "
+                    "program_cache_entries to cover the warmup set",
+                    RuntimeWarning,
+                    stacklevel=3,
+                )
+            if self.config.warmup == "full":
+                for ps in program_sets:
+                    ps.warm()
         return CompiledPlan(
             plan, placement, host_fn, programs[0], out_shape, out_dtype,
             device_program=programs[0], coeff=used_coeff,
-            device_programs=tuple(programs),
+            device_programs=tuple(programs), program_sets=program_sets,
         )
+
+    def _build_program_set(
+        self,
+        plan: QueryPlan,
+        placement: Placement,
+        coeff: SplitDecodeOption | None,
+        target: Any,
+        full_program: DevicePreprocProgram,
+    ):
+        """AOT bucket programs for one replica target.
+
+        One program per power-of-two batch bucket (plus the exact batch
+        size), every one pinned in the program cache so LRU churn from
+        other tenants can't undo the warmup while this plan is bound.
+        Sharded targets keep only buckets their group size divides.
+        """
+        group = len(getattr(target, "device_set", ())) or 1
+        programs: dict[int, DevicePreprocProgram] = {}
+        # descending: the already-compiled full-size program is pinned before
+        # smaller-bucket compiles can LRU-evict it from a tight cache
+        for bucket in reversed(device_compiler.batch_buckets(self.config.batch_size)):
+            if bucket % group:
+                continue  # sharded batches need the batch axis divisible
+            if bucket == self.config.batch_size:
+                prog = full_program
+            elif coeff is not None:
+                staged = self._coeff_stage_fns(
+                    plan, coeff, device=target, batch_size=bucket
+                )
+                if staged is None:  # pragma: no cover - full-size compile worked
+                    continue
+                prog = staged[1]
+            else:
+                _, prog, _, _ = self._stage_fns(
+                    plan, placement, device=target, batch_size=bucket
+                )
+            self._device_programs.pin(prog.key)
+            programs[bucket] = prog
+        return device_compiler.ProgramSet(
+            programs=programs,
+            geometry=(tuple(full_program.in_meta.shape), full_program.in_meta.dtype),
+            device=target,
+        )
+
+    def _release_program_sets(self, compiled: CompiledPlan | None) -> None:
+        """Unpin a replaced plan's warm programs — pins live only while
+        their plan is bound; the programs stay cached but become evictable."""
+        if compiled is None:
+            return
+        for ps in compiled.program_sets:
+            for key in ps.keys():
+                self._device_programs.unpin(key)
 
     def _compile_placement(
         self, plan: QueryPlan, placement: Placement, coeff: Any = _COEFF_FROM_PLAN
     ) -> CompiledPlan:
+        old = self._compiled
         self._compiled = self._build_compiled(plan, placement, coeff=coeff)
+        # unpin AFTER the rebuild: programs shared between the plans stay
+        # pinned across the swap instead of racing an eviction window
+        self._release_program_sets(old)
         return self._compiled
 
     # --------------------------------------------------------------- tenants
@@ -771,7 +926,9 @@ class SmolRuntime:
             return self.compile()
         if tenant not in self._tenant_compiled or force:
             plan = self.tenant_plan(tenant)
+            old = self._tenant_compiled.get(tenant)
             self._tenant_compiled[tenant] = self._build_compiled(plan, plan.placement)
+            self._release_program_sets(old)
             self._tenant_recals[tenant] = self._make_recalibrator(plan)
         return self._tenant_compiled[tenant]
 
@@ -787,6 +944,10 @@ class SmolRuntime:
                 num_workers=self._num_workers,
                 memory=self.config.memory,
                 telemetry=self.telemetry,
+                double_buffer=self.config.double_buffer,
+                program_set=(
+                    compiled.program_sets[0] if compiled.program_sets else None
+                ),
             )
             if self.config.tenants:
                 # per-tenant children of the engine budget: batch-path
@@ -821,6 +982,7 @@ class SmolRuntime:
                     list(self._compiled.device_programs) or self._compiled.device_fn,
                     out_shape=self._compiled.out_shape,
                     out_dtype=self._compiled.out_dtype,
+                    program_sets=self._compiled.program_sets or None,
                 )
         # second knob: resize the producer pool from the same measurement
         # (no recompile — the engine reads num_workers per run, the
@@ -913,6 +1075,7 @@ class SmolRuntime:
                 num_replicas=len(targets),
                 replica_labels=[self._target_label(t) for t in targets],
                 telemetry=self.telemetry,
+                program_sets=compiled.program_sets or None,
             )
             # tenants pinning their own model serve through their own
             # compiled plan: batches never mix across bindings
@@ -925,8 +1088,12 @@ class SmolRuntime:
                         list(tc.device_programs) or tc.device_fn,
                         tc.out_shape,
                         tc.out_dtype,
+                        program_sets=tc.program_sets or None,
                     )
         self._scheduler.start()
+        # everything compiled from here on is a post-warmup (request-path)
+        # compile — the observability counters and the bench gate key on it
+        self._warmup_done = True
 
     def fail_replica(self, index: int) -> None:
         """Fault hook: take serving replica ``index`` out of the mesh (see
@@ -975,12 +1142,14 @@ class SmolRuntime:
         if changed:
             fresh = self._build_compiled(compiled.plan, placement, coeff=recal.chosen_coeff)
             self._tenant_compiled[tenant] = fresh
+            self._release_program_sets(compiled)
             self._scheduler.bind_tenant(
                 tenant,
                 fresh.host_fn,
                 list(fresh.device_programs) or fresh.device_fn,
                 fresh.out_shape,
                 fresh.out_dtype,
+                program_sets=fresh.program_sets or None,
             )
         return changed
 
@@ -1072,6 +1241,8 @@ class SmolRuntime:
             device_program=device_program,
             split_decode=split_decode,
             latency=latency,
+            programs_compiled_post_warmup=self._programs_compiled_post_warmup,
+            program_compile_seconds_total=self._program_compile_seconds,
         )
 
     # ------------------------------------------------------------- telemetry
@@ -1113,4 +1284,23 @@ class SmolRuntime:
             extra.append(
                 f'smol_program_cache_events_total{{event="{event}"}} {count}'
             )
+        extra.append(
+            "# HELP smol_programs_compiled_post_warmup_total Device programs "
+            "JIT-compiled on the request path after warmup finished (0 under "
+            "warmup=full in steady state)."
+        )
+        extra.append("# TYPE smol_programs_compiled_post_warmup_total counter")
+        extra.append(
+            f"smol_programs_compiled_post_warmup_total "
+            f"{self._programs_compiled_post_warmup}"
+        )
+        extra.append(
+            "# HELP smol_program_compile_seconds_total Cumulative build + "
+            "first-dispatch compile seconds across all device programs."
+        )
+        extra.append("# TYPE smol_program_compile_seconds_total counter")
+        extra.append(
+            f"smol_program_compile_seconds_total "
+            f"{self._program_compile_seconds:.6f}"
+        )
         return self.telemetry.metrics_text(extra)

@@ -65,10 +65,15 @@ class MemoryConfig:
     max_pending: int | None = None  # scheduler admission: max in-flight requests
     admission: str = "block"  # "block" (backpressure) | "reject" (shed load)
     admission_timeout_s: float = 30.0
+    # outstanding H2D staging buffers for double-buffered dispatch; 0 = auto
+    # (the engine sizes the pool to its dispatch ring + 1)
+    transfer_slots: int = 0
 
     def __post_init__(self):
         if self.admission not in ("block", "reject"):
             raise ValueError(f"admission must be 'block' or 'reject', got {self.admission!r}")
+        if self.transfer_slots < 0:
+            raise ValueError(f"transfer_slots must be >= 0, got {self.transfer_slots}")
 
     def build_pool(self) -> "BufferPool | None":
         return (
@@ -82,6 +87,14 @@ class MemoryConfig:
 
     def build_budget(self) -> "MemoryBudget | None":
         return MemoryBudget(self.budget_bytes) if self.budget_bytes else None
+
+    def build_transfer_pool(self, default_slots: int) -> "TransferPool":
+        """Staging-buffer pool for the engine's dispatch pipeline.
+
+        Wraps :meth:`build_pool` (or fresh per-lease allocation when pooling
+        is off) behind the bounded slot count double-buffered dispatch needs.
+        """
+        return TransferPool(self.transfer_slots or default_slots, buffers=self.build_pool())
 
 
 # ----------------------------------------------------------------------- pool
@@ -193,6 +206,115 @@ class BufferPool:
                 leases_reused=self._leases_reused,
                 bytes_in_use=self._bytes_in_use,
                 high_water_bytes=self._high_water,
+            )
+
+
+# -------------------------------------------------------------- transfer pool
+@dataclasses.dataclass(frozen=True)
+class TransferPoolStats:
+    slots: int  # maximum concurrently-leased staging buffers
+    leases_issued: int
+    leases_active: int
+    blocked_seconds: float  # time lessees spent waiting on a free slot
+    pool: "PoolStats | None" = None  # backing BufferPool occupancy, if pooled
+
+
+class TransferLease:
+    """One pinned staging slot: a host buffer plus its bounded-slot token.
+
+    Releasing returns the buffer to the backing :class:`BufferPool` (when
+    pooled) and frees the slot for the next staging batch.  Strict
+    release-once, same as :class:`BufferLease`.
+    """
+
+    __slots__ = ("array", "_pool", "_inner", "_released")
+
+    def __init__(self, array: np.ndarray, pool: "TransferPool", inner: "BufferLease | None"):
+        self.array = array
+        self._pool = pool
+        self._inner = inner
+        self._released = False
+
+    def release(self) -> None:
+        if self._released:
+            raise RuntimeError("transfer lease released twice")
+        self._released = True
+        if self._inner is not None:
+            self._inner.release()
+        self._pool._give_back()
+
+    def __enter__(self) -> np.ndarray:
+        return self.array
+
+    def __exit__(self, *exc) -> None:
+        self.release()
+
+
+class TransferPool:
+    """Bounded pool of host→device staging buffers (double-buffered dispatch).
+
+    The engine's dispatch pipeline keeps several batches alive at once: the
+    one being filled by the consumer, the one(s) queued for the dispatcher,
+    and the ones in flight on the device.  This pool bounds that set to
+    ``slots`` buffers — ``lease`` blocks when every slot is staged or in
+    flight, which is exactly the backpressure that stops the consumer from
+    racing ahead of the device.  Buffer storage reuses :class:`BufferPool`
+    when one is supplied; otherwise each lease allocates fresh (the
+    pooling-off baseline).
+    """
+
+    def __init__(self, slots: int, buffers: "BufferPool | None" = None):
+        if slots < 1:
+            raise ValueError(f"transfer slots must be >= 1, got {slots}")
+        self.slots = int(slots)
+        self.buffers = buffers
+        self._sem = threading.Semaphore(self.slots)
+        self._lock = threading.Lock()
+        self._leases_issued = 0
+        self._leases_active = 0
+        self._blocked_seconds = 0.0
+
+    def lease(
+        self, shape: tuple[int, ...], dtype: Any, timeout: float | None = None
+    ) -> "TransferLease | None":
+        """Lease one staging buffer, blocking for a free slot.
+
+        Returns ``None`` on timeout so callers waiting on a dead producer
+        can notice instead of hanging on the semaphore forever.
+        """
+        import time
+
+        t0 = time.perf_counter()
+        if not self._sem.acquire(timeout=timeout):
+            with self._lock:
+                self._blocked_seconds += time.perf_counter() - t0
+            return None
+        waited = time.perf_counter() - t0
+        if self.buffers is not None:
+            inner = self.buffers.lease(shape, dtype)
+            array = inner.array
+        else:
+            inner = None
+            array = np.zeros(shape, np.dtype(dtype))
+        with self._lock:
+            self._blocked_seconds += waited
+            self._leases_issued += 1
+            self._leases_active += 1
+        return TransferLease(array, self, inner)
+
+    def _give_back(self) -> None:
+        with self._lock:
+            self._leases_active -= 1
+        self._sem.release()
+
+    def stats(self) -> TransferPoolStats:
+        with self._lock:
+            return TransferPoolStats(
+                slots=self.slots,
+                leases_issued=self._leases_issued,
+                leases_active=self._leases_active,
+                blocked_seconds=self._blocked_seconds,
+                pool=self.buffers.stats() if self.buffers is not None else None,
             )
 
 

@@ -238,11 +238,19 @@ class _Binding:
     side is one compiled program per replica (a single program is
     replicated across all dispatchers)."""
 
-    __slots__ = ("host_fn", "device_fns", "out_shape", "out_dtype", "item_nbytes")
+    __slots__ = (
+        "host_fn",
+        "device_fns",
+        "program_sets",
+        "out_shape",
+        "out_dtype",
+        "item_nbytes",
+    )
 
-    def __init__(self, host_fn, device_fn, out_shape, out_dtype):
+    def __init__(self, host_fn, device_fn, out_shape, out_dtype, program_sets=None):
         self.host_fn = host_fn
         self.device_fns = _as_device_fns(device_fn)
+        self.program_sets = tuple(program_sets) if program_sets else ()
         self.retarget(out_shape, out_dtype)
 
     @property
@@ -251,6 +259,22 @@ class _Binding:
 
     def device_fn_for(self, replica: int):
         return self.device_fns[replica % len(self.device_fns)]
+
+    def dispatch_fn_for(self, replica: int, n: int):
+        """Program for an ``n``-item batch on ``replica``.
+
+        With an AOT :class:`ProgramSet` bound, a ragged batch dispatches
+        through the smallest pre-compiled bucket covering ``n`` (the batch
+        buffer is sliced to the bucket, padding lanes never reach outputs).
+        Returns ``(fn, bucket)``; ``bucket=None`` means dispatch the full
+        buffer through the plain per-replica program.
+        """
+        if self.program_sets and n:
+            ps = self.program_sets[replica % len(self.program_sets)]
+            hit = ps.program_for(n)
+            if hit is not None:
+                return hit
+        return self.device_fns[replica % len(self.device_fns)], None
 
     def retarget(self, out_shape, out_dtype) -> None:
         self.out_shape = tuple(out_shape)
@@ -312,6 +336,7 @@ class RequestScheduler:
         num_replicas: int | None = None,
         replica_labels: Sequence[str] | None = None,
         telemetry: Telemetry | None = None,
+        program_sets: Sequence[Any] | None = None,
     ):
         if admission not in ("block", "reject"):
             raise ValueError(f"admission must be 'block' or 'reject', got {admission!r}")
@@ -332,7 +357,9 @@ class RequestScheduler:
         self.telemetry = telemetry if telemetry is not None else Telemetry()
         self._worker_ids = itertools.count()  # decode-span worker labels
 
-        self._default_binding = _Binding(host_fn, device_fn, out_shape, out_dtype)
+        self._default_binding = _Binding(
+            host_fn, device_fn, out_shape, out_dtype, program_sets=program_sets
+        )
         # replica mesh: one dispatcher per replica, all pulling from the
         # shared fair queue.  ``device_fn`` as a sequence gives each replica
         # its own compiled program; a single callable is replicated.
@@ -550,6 +577,7 @@ class RequestScheduler:
         out_shape: tuple[int, ...] | None = None,
         out_dtype: Any = None,
         timeout: float = 60.0,
+        program_sets: Sequence[Any] | None = None,
     ) -> None:
         """Swap the *default* binding's stage functions (and signature).
 
@@ -565,6 +593,7 @@ class RequestScheduler:
             b = self._default_binding
             b.host_fn = host_fn
             b.device_fns = _as_device_fns(device_fn)
+            b.program_sets = tuple(program_sets) if program_sets else ()
             # safe to retarget the budget reservation size: flush() left
             # zero requests admitted under the old footprint
             b.retarget(
@@ -580,6 +609,7 @@ class RequestScheduler:
         out_shape: tuple[int, ...],
         out_dtype: Any,
         timeout: float = 60.0,
+        program_sets: Sequence[Any] | None = None,
     ) -> None:
         """Pin ``tenant`` to its own compiled plan (model/placement).
 
@@ -592,7 +622,9 @@ class RequestScheduler:
         if self._running:
             self.flush(timeout=timeout)
         with self._rebind_lock:
-            state.binding = _Binding(host_fn, device_fn, out_shape, out_dtype)
+            state.binding = _Binding(
+                host_fn, device_fn, out_shape, out_dtype, program_sets=program_sets
+            )
 
     def resize_workers(self, num_workers: int) -> None:
         """Retune the host-worker count online (the recalibration knob).
@@ -1080,9 +1112,15 @@ class RequestScheduler:
             return
         t_in = time.perf_counter()
         with self._rebind_lock:
-            device_fn = binding.device_fn_for(replica.index)
+            device_fn, bucket = binding.dispatch_fn_for(replica.index, len(metas))
         try:
-            out = np.asarray(device_fn(buf))  # blocks until device done
+            # ragged batch + AOT program set: slice to the smallest warm
+            # bucket covering the batch; unbucketed dispatch runs the full
+            # max_batch buffer.  Either way padding lanes stop here — the
+            # completion loop below reads only rows < len(metas).
+            out = np.asarray(
+                device_fn(buf if bucket is None else buf[:bucket])
+            )  # blocks until device done
         except ReplicaFailure as e:
             self._on_replica_failure(replica, metas, e)
             return
@@ -1112,6 +1150,7 @@ class RequestScheduler:
                 now,
                 replica=replica.index,
                 size=len(metas),
+                bucket=bucket,
                 uids=[m[0] for m in metas],
                 cold=getattr(device_fn, "dispatch_count", 0) == 1,
                 compile_s=getattr(device_fn, "first_dispatch_seconds", None),

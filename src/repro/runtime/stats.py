@@ -116,6 +116,10 @@ class RuntimeStats:
     device_program: DeviceProgramSection | None = None
     split_decode: SplitDecodeSection | None = None
     latency: LatencySection | None = None
+    # cold-compile observability (additive, still schema v2): request-path
+    # compiles after warmup finished, and cumulative compile wall time
+    programs_compiled_post_warmup: int = 0
+    program_compile_seconds_total: float = 0.0
 
     def to_dict(self) -> dict[str, Any]:
         """JSON-safe mapping (stable wire format for the schema version)."""

@@ -497,6 +497,12 @@ class Telemetry:
                 pid = pid_of("replica mesh")
                 tid = int(s.args.get("replica", 0))
                 thread_label = f"replica{tid}"
+            elif s.kind == "compile":
+                # jit/warmup compile events get their own process so the
+                # cold-start cost is visually separable from serving tracks
+                pid = pid_of("compiler")
+                tid = 0
+                thread_label = "jit"
             else:
                 pid = pid_of(f"tenant:{s.tenant}")
                 tid = s.uid

@@ -27,6 +27,13 @@ one, and — when a tenant pins its own ``model`` — a dedicated compiled
 plan with its own recalibrated host/device split.
 :meth:`VisionServingEngine.stats` exposes pool/budget/queue occupancy,
 per-tenant counters, and program-cache hit/eviction rates for dashboards.
+
+Cold starts are controlled by ``RuntimeConfig.warmup``: ``"full"``
+AOT-compiles and executes the whole bucketed program set (every
+power-of-two batch size × replica) inside :meth:`VisionServingEngine.start`,
+so the first real request is served by an already-warm program —
+:attr:`programs_compiled_post_warmup` staying at 0 is the steady-state
+invariant dashboards should alert on.
 """
 
 from __future__ import annotations
@@ -158,6 +165,18 @@ class VisionServingEngine:
         """Chosen scaled-IDCT resolution divisor (0 = pixel path/off)."""
         info = self.split_decode
         return info.factor if info is not None else 0
+
+    @property
+    def warmup(self) -> str:
+        """The configured AOT warmup mode: ``off`` | ``lazy`` | ``full``."""
+        return self.runtime.config.warmup
+
+    @property
+    def programs_compiled_post_warmup(self) -> int:
+        """Device programs JIT-compiled on the request path after
+        :meth:`start` finished — 0 under ``warmup='full'`` in steady state
+        (the cold-start alarm counter; also exported by ``metrics_text``)."""
+        return self.runtime.programs_compiled_post_warmup
 
     @property
     def replicas(self):
