@@ -26,6 +26,16 @@ Two workloads, each probing the subsystem built for it:
   full-resolution 4:2:0 program (CPU parity floor / >= 1.2x accelerator
   gate — the scaled IDCT is strictly less math and factor^2 fewer pixels
   downstream).
+* **cascade serving** (the typed Query API + progressive rendition
+  refetch) — a 2-stage probe/heavy cascade serves every item from the
+  cheap plan target (the probe model on the pre-scaled thumbnail
+  rendition; see the leg docstring for why the coefficient path doesn't
+  bind on a 48px stored rendition) and internally refetches the
+  uncertain 25% to the heavy model at full resolution; its throughput
+  must beat serving the identical corpus through the heavy model
+  all-full-resolution by >= 1.3x at matched predictions, and a
+  sleep-controlled 4:1 tenant window where EVERY item refetches must
+  hold the weighted-fairness ratio within +/- 25%.
 * **multi-tenant fairness** (the weighted-fair scheduler) — two tenants
   with 4:1 weights saturate a device-bound scheduler; the observed
   per-tenant throughput ratio must land at 4:1 +/- 25%, and the
@@ -364,6 +374,225 @@ def _run_split_decode_leg(args, reps: int) -> dict:
     )
     out["parity_all"] = all(v["parity_ok"] for v in variants.values())
     return out
+
+
+def _run_cascade_leg(args) -> dict:
+    """2-stage cascade with progressive rendition refetch vs all-full-res.
+
+    Stage 0 serves every item from the *cheap plan target* — the probe
+    model's best plan, which lands on the pre-scaled thumbnail rendition
+    (on CPU no reduced scaled-IDCT factor fits a 48px stored rendition,
+    so the cheap stage is its pixel path; the coefficient-domain cheap
+    stage is unit-tested in test_query_api).  Items whose max-softmax
+    confidence clears the stage threshold exit with the probe's
+    prediction; the uncertain rest are internally resubmitted to stage
+    1's full-resolution target running the expensive model.  The baseline
+    serves the identical corpus as ``ClassificationQuery`` items on a
+    runtime that only has the expensive model at full resolution.  Both
+    legs ride the typed Query API through the serving scheduler, and the
+    heavy model shares the probe's brightness-driven decision function
+    (plus a sub-resolution conv term that can't be folded away), so the
+    gates are: cascade throughput >= 1.3x all-full-res (full mode) at
+    *matched predictions*.  A second sleep-controlled window checks that
+    internal refetches keep billing the submitting tenant's virtual time:
+    two tenants at 4:1 weights where EVERY item refetches must still
+    complete within 4:1 +/- 25%.
+    """
+    import threading
+    import time
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.runtime import (
+        CascadeQuery,
+        CascadeStageSpec,
+        ClassificationQuery,
+        RequestRoute,
+        TenantConfig,
+    )
+    from repro.runtime.scheduler import RequestScheduler
+
+    input_size = 32
+    fmt_full = ImageFormat("jpeg", None, 90)
+    fmt_thumb = ImageFormat("jpeg", 48, 85)
+    size = 240
+    n = 48 if args.smoke else 128
+    n_dark = n // 4  # 25% uncertain -> refetched at full resolution
+    rng = np.random.default_rng(13)
+
+    def _img(mean):
+        base = rng.normal(size=(size // 8, size // 8, 3))
+        x = np.kron(base, np.ones((8, 8, 1))) * 20 + mean
+        x += rng.normal(scale=4.0, size=x.shape)
+        return StoredImage.from_array(
+            np.clip(x, 0, 255).astype(np.uint8), [fmt_full, fmt_thumb]
+        )
+
+    dark_flags = np.zeros(n, bool)
+    dark_flags[:n_dark] = True
+    rng.shuffle(dark_flags)
+    corpus = [_img(80 if dark else 205) for dark in dark_flags]
+
+    def probe_model(x):  # class-0 logit rides the normalized mean: bright
+        m = jnp.mean(x, axis=(1, 2, 3))  # images are confident, dark ones
+        z = jnp.zeros((x.shape[0], 7), jnp.float32)  # fall through
+        return z.at[:, 0].set(m * 12.0)
+
+    ks = jax.random.split(jax.random.PRNGKey(5), 3)
+    w0 = jax.random.normal(ks[0], (3, 3, 3, 32), jnp.float32) * 0.1
+    w1 = jax.random.normal(ks[1], (3, 3, 32, 32), jnp.float32) * 0.05
+    head = jax.random.normal(ks[2], (32, 7), jnp.float32) * 0.1
+
+    def heavy_model(x):
+        # the probe's decision function plus a deliberately expensive conv
+        # term scaled below the logits' float32 resolution: predictions
+        # stay bitwise comparable across stages, the cost does not
+        def conv(y, w):
+            return jax.lax.conv_general_dilated(
+                y, w, (1, 1), "SAME", dimension_numbers=("NCHW", "HWIO", "NCHW")
+            )
+
+        y = jax.nn.relu(conv(x, w0))
+        y = jax.nn.relu(conv(y, w1))
+        return probe_model(x) + 1e-7 * (y.mean(axis=(2, 3)) @ head)
+
+    probe = ModelSpec(
+        "probe", input_size, exec_throughput=20_000.0,
+        accuracy_by_format={fmt_full.key: 0.95, fmt_thumb.key: 0.92},
+    )
+    heavy = ModelSpec(
+        "heavy", input_size, exec_throughput=400.0,
+        accuracy_by_format={fmt_full.key: 0.97, fmt_thumb.key: 0.50},
+    )
+    stages = (
+        CascadeStageSpec(threshold=0.6, model="probe"),
+        CascadeStageSpec(model="heavy"),
+    )
+    cascade_rt = SmolRuntime(
+        [probe, heavy], [fmt_full, fmt_thumb],
+        {"probe": probe_model, "heavy": heavy_model},
+        calibration=corpus[:4],
+        config=RuntimeConfig(
+            batch_size=16, num_workers=2, max_wait_ms=1.0, min_accuracy=0.9
+        ),
+    )
+    base_rt = SmolRuntime(
+        [heavy], [fmt_full], {"heavy": heavy_model},
+        calibration=corpus[:4],
+        config=RuntimeConfig(batch_size=16, num_workers=2, max_wait_ms=1.0),
+    )
+
+    def timed(rt, make_query):
+        t0 = time.perf_counter()
+        for img in corpus:
+            rt.submit(make_query(img))
+        rt.flush(timeout=300.0)
+        wall = time.perf_counter() - t0
+        done = rt.drain()
+        preds = [r.prediction for r in done]
+        return n / wall, preds
+
+    cascade_rt.start_serving()
+    base_rt.start_serving()
+    try:
+        # warm pass: compile the baseline program AND (via one dark item
+        # that fails the threshold) both cascade stage programs + the
+        # refetch path outside the clock
+        warm_bright = corpus[int(np.flatnonzero(~dark_flags)[0])]
+        warm_dark = corpus[int(np.flatnonzero(dark_flags)[0])]
+        base_rt.submit(ClassificationQuery(image=warm_bright))
+        cascade_rt.submit(CascadeQuery(image=warm_bright, stages=stages))
+        cascade_rt.submit(CascadeQuery(image=warm_dark, stages=stages))
+        base_rt.flush(timeout=300.0)
+        cascade_rt.flush(timeout=300.0)
+        base_rt.drain()
+        cascade_rt.drain()
+        tput_cascade = tput_full = 0.0
+        for _ in range(2):  # best-of-2, interleaved
+            t, preds_cascade = timed(
+                cascade_rt, lambda img: CascadeQuery(image=img, stages=stages)
+            )
+            tput_cascade = max(tput_cascade, t)
+            t, preds_full = timed(base_rt, lambda img: ClassificationQuery(image=img))
+            tput_full = max(tput_full, t)
+        stats = cascade_rt.stats()
+    finally:
+        cascade_rt.stop_serving()
+        base_rt.stop_serving()
+    sec = stats.cascade
+
+    # ---- refetch fairness: 4:1 weights with every item refetching ---------
+    def host_fn(item):
+        return np.full((4,), float(item), np.float32)
+
+    def device_fn(batch):
+        time.sleep(0.003)  # device stream is the bottleneck
+        return batch
+
+    sched = RequestScheduler(
+        host_fn, device_fn, (4,), np.float32,
+        max_batch=4, num_workers=2, max_wait_ms=1.0,
+        tenants=[
+            TenantConfig("gold", weight=4.0, max_pending=16),
+            TenantConfig("bronze", weight=1.0, max_pending=16),
+        ],
+    )
+    sched.start()
+    expensive = sched.make_binding(host_fn, device_fn, (4,), np.float32)
+
+    def on_stage1(uid, out):
+        return None
+
+    def on_stage0(uid, out):
+        return float(out[0]), RequestRoute(
+            binding=expensive, on_result=on_stage1, stage=1
+        )
+
+    window_s = 0.8 if args.smoke else 1.5
+    stop_at = time.perf_counter() + window_s
+
+    def feeder(name):
+        i = 0
+        while time.perf_counter() < stop_at:
+            sched.submit(i, tenant=name, route=RequestRoute(on_result=on_stage0))
+            i += 1
+
+    try:
+        threads = [
+            threading.Thread(target=feeder, args=(nm,)) for nm in ("gold", "bronze")
+        ]
+        for t in threads:
+            t.start()
+        while time.perf_counter() < stop_at:
+            time.sleep(0.02)
+        counts = {nm: sched.tenants[nm].completed for nm in ("gold", "bronze")}
+        for t in threads:
+            t.join()
+        sched.flush(timeout=60.0)
+        refetched = sched.stats.refetched_items
+    finally:
+        sched.stop()
+
+    return {
+        "items": n,
+        "image_size": size,
+        "dark_fraction": round(n_dark / n, 3),
+        "threshold": 0.6,
+        "factor": sec.factor if sec is not None else 1,
+        "stage0_exits": sec.stages[0].exits if sec is not None else 0,
+        "stage1_items": sec.stages[1].items if sec is not None else 0,
+        "refetched_items": sec.refetched_items if sec is not None else 0,
+        "cascade_tput": round(tput_cascade, 2),
+        "full_res_tput": round(tput_full, 2),
+        "cascade_speedup": round(tput_cascade / tput_full, 3) if tput_full else 0.0,
+        "predictions_match": preds_cascade == preds_full,
+        "refetch_window_s": window_s,
+        "refetch_gold_completed": counts["gold"],
+        "refetch_bronze_completed": counts["bronze"],
+        "refetch_observed_ratio": round(counts["gold"] / max(1, counts["bronze"]), 3),
+        "refetch_refetched_items": refetched,
+    }
 
 
 def _run_fairness_leg(args) -> dict:
@@ -959,6 +1188,9 @@ def main(argv=None) -> int:
     # ---- split decode: 4:4:4 vs 4:2:0 vs scaled factor -------------------
     split_leg = _run_split_decode_leg(args, reps)
 
+    # ---- cascade serving: progressive rendition refetch vs all-full-res ---
+    cascade_leg = _run_cascade_leg(args)
+
     # ---- multi-tenant fairness: weighted-fair scheduling under saturation -
     fairness = _run_fairness_leg(args)
 
@@ -999,6 +1231,10 @@ def main(argv=None) -> int:
         "coldstart_cold": 3.0 if args.smoke else 5.0,
         # overlap: sleep+memcpy controlled, but smoke runners time-share
         "overlap_speedup": 1.1 if args.smoke else 1.15,
+        # cascade: decode-bound with a 25% refetch fraction, so the full-
+        # mode expectation is well above 1.3x; smoke runners time-share the
+        # decode pool, so the smoke gate is a breakage detector
+        "cascade_speedup": 1.05 if args.smoke else 1.3,
     }
     pooled_ge_unpooled = pooled_sum >= thr["pooled_tol"] * unpooled_sum
     device_gate = device_leg["fused_speedup"] >= (
@@ -1033,6 +1269,18 @@ def main(argv=None) -> int:
         # ... and the scaled-IDCT program is never slower than the full-res
         # 4:2:0 program (CPU parity floor / >=1.2x accelerator gate)
         "split_decode_scaled_ge_full": split_gate,
+        # acceptance: a 2-stage cascade on the scaled rendition beats
+        # serving everything at full resolution by >= 1.3x (full mode) ...
+        "cascade_speedup_ge_1_3": (
+            cascade_leg["cascade_speedup"] >= thr["cascade_speedup"]
+        ),
+        # ... without changing a single prediction vs the full-res baseline
+        "cascade_predictions_match_full_res": cascade_leg["predictions_match"],
+        # acceptance: internal refetches bill the submitting tenant — 4:1
+        # weights hold within +/- 25% when every item refetches
+        "cascade_refetch_fairness_4to1_within_25pct": (
+            3.0 <= cascade_leg["refetch_observed_ratio"] <= 5.0
+        ),
         # acceptance: 2 tenants at 4:1 weights -> observed throughput ratio
         # 4:1 +/- 25% under saturation ...
         "fairness_ratio_4to1_within_25pct": 3.0 <= fairness["observed_ratio"] <= 5.0,
@@ -1104,6 +1352,7 @@ def main(argv=None) -> int:
         "pipeline_speedup": round(piped.throughput / serial_sum, 3),
         "device_path": device_leg,
         "split_decode": split_leg,
+        "cascade": cascade_leg,
         "fairness": fairness,
         "replica_mesh": replica_leg,
         "latency": latency_leg,

@@ -28,7 +28,16 @@ from repro.preprocessing.formats import (
     THUMB_JPEG_161_Q95,
     THUMB_PNG_161,
 )
-from repro.runtime import RecalConfig, RuntimeConfig, SmolRuntime, TelemetryConfig
+from repro.runtime import (
+    AggregationQuery,
+    CascadeQuery,
+    CascadeStageSpec,
+    ClassificationQuery,
+    RecalConfig,
+    RuntimeConfig,
+    SmolRuntime,
+    TelemetryConfig,
+)
 
 FORMATS = [FULL_JPEG_Q95, THUMB_PNG_161, THUMB_JPEG_161_Q95, THUMB_JPEG_161_Q75]
 COND_BY_KEY = {
@@ -132,14 +141,45 @@ def main():
               f"{plan.estimate.throughput / best_naive.estimate.throughput:.2f}x")
 
     # ---- request-level serving with tracing on ---------------------------
+    # typed query API (§3.2): classification per item, a cascade pass whose
+    # uncertain items progressively refetch the full-res rendition, and an
+    # aggregation query that closes its CI on the serving path
+    # the briefly-trained probe is diffident (max-softmax ~0.13 over 10
+    # classes), so the demo threshold sits at its median confidence; a
+    # converged probe would use something like 0.85
+    stages = (
+        CascadeStageSpec(threshold=0.127, model="cnn-s-aug"),
+        CascadeStageSpec(model="cnn-l-reg"),
+    )
     runtime.start_serving()
     try:
         for s in stored:
-            runtime.submit(s)
+            runtime.submit(ClassificationQuery(image=s))
         runtime.flush()
         served = runtime.drain()
+
+        for s in stored:
+            runtime.submit(CascadeQuery(image=s, stages=stages))
+        runtime.flush()
+        cascaded = runtime.drain()
+
+        agg = runtime.submit(AggregationQuery(corpus=stored, eps=0.25))
     finally:
         runtime.stop_serving()
+
+    exits = sum(1 for r in cascaded if r.ok and r.exit_stage == 0)
+    refetched = sum(1 for r in cascaded if r.ok and r.refetched)
+    print(f"\ncascade: {exits}/{len(cascaded)} items exited from the cheap "
+          f"rendition, {refetched} refetched full resolution")
+    sec = runtime.stats().cascade
+    if sec is not None:
+        for st in sec.stages:
+            print(f"  stage {st.stage}: {st.items} items, {st.exits} exits "
+                  f"(pass-through {st.pass_fraction:.2f})")
+    print(f"aggregation: estimate {agg.estimate:.3f} +/- {agg.ci_halfwidth:.3f} "
+          f"({agg.num_target_invocations}/{agg.num_specialized_invocations} "
+          f"target refetches)")
+
     ok = sum(1 for r in served if r.error is None)
     lat = runtime.stats().latency
     print(f"\nserved {ok}/{len(served)} requests; per-stage latency breakdown:")

@@ -25,6 +25,47 @@ import numpy as np
 Z_FOR_DELTA = {0.05: 1.96, 0.01: 2.576, 0.1: 1.645}
 
 
+def z_for_delta(delta: float) -> float:
+    """Two-sided critical value z with P(|Z| > z) = delta for Z ~ N(0, 1).
+
+    Table lookup for the common deltas, otherwise an inverse-normal
+    rational approximation (Acklam), accurate to ~1e-9 — previously any
+    unlisted delta silently fell back to the 0.05 value.
+    """
+    if not 0.0 < delta < 1.0:
+        raise ValueError(f"delta must be in (0, 1), got {delta}")
+    if delta in Z_FOR_DELTA:
+        return Z_FOR_DELTA[delta]
+    # z = Phi^-1(1 - delta/2) via Acklam's rational approximation.
+    p = 1.0 - delta / 2.0
+    a = (-3.969683028665376e01, 2.209460984245205e02, -2.759285104469687e02,
+         1.383577518672690e02, -3.066479806614716e01, 2.506628277459239e00)
+    b = (-5.447609879822406e01, 1.615858368580409e02, -1.556989798598866e02,
+         6.680131188771972e01, -1.328068155288572e01)
+    c = (-7.784894002430293e-03, -3.223964580411365e-01, -2.400758277161838e00,
+         -2.549732539343734e00, 4.374664141464968e00, 2.938163982698783e00)
+    d = (7.784695709041462e-03, 3.224671290700398e-01, 2.445134137142996e00,
+         3.754408661907416e00)
+    p_low = 0.02425
+    if p < p_low:
+        q = np.sqrt(-2.0 * np.log(p))
+        x = (((((c[0] * q + c[1]) * q + c[2]) * q + c[3]) * q + c[4]) * q + c[5]) / (
+            (((d[0] * q + d[1]) * q + d[2]) * q + d[3]) * q + 1.0
+        )
+    elif p <= 1.0 - p_low:
+        q = p - 0.5
+        r = q * q
+        x = (((((a[0] * r + a[1]) * r + a[2]) * r + a[3]) * r + a[4]) * r + a[5]) * q / (
+            ((((b[0] * r + b[1]) * r + b[2]) * r + b[3]) * r + b[4]) * r + 1.0
+        )
+    else:
+        q = np.sqrt(-2.0 * np.log(1.0 - p))
+        x = -(((((c[0] * q + c[1]) * q + c[2]) * q + c[3]) * q + c[4]) * q + c[5]) / (
+            (((d[0] * q + d[1]) * q + d[2]) * q + d[3]) * q + 1.0
+        )
+    return float(x)
+
+
 @dataclasses.dataclass
 class AggregationResult:
     estimate: float
@@ -54,7 +95,7 @@ def control_variate_aggregate(
     """
     n = len(specialized_all)
     max_samples = max_samples or n
-    z = Z_FOR_DELTA.get(delta, 1.96)
+    z = z_for_delta(delta)
     rng = np.random.default_rng(seed)
     perm = rng.permutation(n)
 

@@ -30,6 +30,12 @@ class CascadeResult:
     exit_stage: np.ndarray  # (N,) stage index each item exited at
     pass_fractions: tuple[float, ...]  # fraction of items reaching each stage
 
+    @property
+    def exit_counts(self) -> tuple[int, ...]:
+        """Number of items that exited at each stage."""
+        n_stages = len(self.pass_fractions)
+        return tuple(int((self.exit_stage == s).sum()) for s in range(n_stages))
+
 
 def _softmax_conf(logits: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
     z = logits - logits.max(axis=-1, keepdims=True)
@@ -56,11 +62,20 @@ class Cascade:
         for s, stage in enumerate(self.stages):
             pass_fractions.append(len(alive) / n)
             if len(alive) == 0:
-                continue
+                # Everything exited earlier: the remaining stages see zero
+                # items, so skip their apply_fn entirely.
+                pass_fractions.extend(0.0 for _ in self.stages[s + 1 :])
+                break
             logits = np.asarray(stage.apply_fn(x))
-            labels, conf = _softmax_conf(logits)
             last = s == len(self.stages) - 1
-            exits = np.ones_like(conf, dtype=bool) if last else conf >= stage.confidence_threshold
+            if last:
+                # The final stage keeps every remaining item: argmax alone
+                # decides the label, no need to normalize a softmax.
+                labels = logits.argmax(axis=-1)
+                exits = np.ones(len(alive), dtype=bool)
+            else:
+                labels, conf = _softmax_conf(logits)
+                exits = conf >= stage.confidence_threshold
             preds[alive[exits]] = labels[exits]
             exit_stage[alive[exits]] = s
             alive = alive[~exits]

@@ -36,6 +36,17 @@ from repro.runtime.facade import (
     RuntimeConfig,
     SmolRuntime,
 )
+from repro.runtime.query import (
+    AggregationQuery,
+    AggregationQueryResult,
+    CascadeQuery,
+    CascadeQueryResult,
+    CascadeStageSpec,
+    ClassificationQuery,
+    ClassificationResult,
+    Query,
+    QueryResult,
+)
 from repro.runtime.memory import (
     ArenaStats,
     BudgetStats,
@@ -50,6 +61,8 @@ from repro.runtime.memory import (
     TransferPoolStats,
 )
 from repro.runtime.recalibration import (
+    CascadeRecalibrationEvent,
+    CascadeRecalibrator,
     RecalibrationEvent,
     Recalibrator,
     StageMeasurement,
@@ -60,6 +73,7 @@ from repro.runtime.scheduler import (
     DEFAULT_TENANT,
     CompletedRequest,
     ReplicaSnapshot,
+    RequestRoute,
     RequestScheduler,
     SchedulerSaturated,
     SchedulerStats,
@@ -67,6 +81,8 @@ from repro.runtime.scheduler import (
     TenantStats,
 )
 from repro.runtime.stats import (
+    CascadeSection,
+    CascadeStageStats,
     DeviceProgramSection,
     EngineSection,
     LatencySection,
@@ -85,10 +101,21 @@ from repro.runtime.telemetry import (
 from repro.runtime.workers import HostStream, WorkerPool
 
 __all__ = [
+    "AggregationQuery",
+    "AggregationQueryResult",
     "ArenaStats",
     "BudgetStats",
     "BufferLease",
     "BufferPool",
+    "CascadeQuery",
+    "CascadeQueryResult",
+    "CascadeRecalibrationEvent",
+    "CascadeRecalibrator",
+    "CascadeSection",
+    "CascadeStageSpec",
+    "CascadeStageStats",
+    "ClassificationQuery",
+    "ClassificationResult",
     "CompiledPlan",
     "CompletedRequest",
     "DEFAULT_TENANT",
@@ -106,11 +133,14 @@ __all__ = [
     "MeshConfig",
     "MeshSection",
     "PoolStats",
+    "Query",
+    "QueryResult",
     "RecalConfig",
     "RecalibrationEvent",
     "Recalibrator",
     "ReplicaFailure",
     "ReplicaSnapshot",
+    "RequestRoute",
     "RequestScheduler",
     "RunReport",
     "RuntimeConfig",

@@ -19,6 +19,7 @@ preprocessing, placement, batching, pipelining) is the runtime's job.
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 import warnings
 from typing import Any, Callable, Mapping, Sequence
@@ -42,8 +43,22 @@ from repro.core.planner import ModelSpec, Planner, QueryPlan
 from repro.preprocessing import ops as P
 from repro.preprocessing.formats import ImageFormat, StoredImage
 from repro.preprocessing.ops import TensorMeta
+from repro.core.aggregation import control_variate_aggregate
+from repro.core.cascade import _softmax_conf
 from repro.runtime.memory import MemoryConfig
+from repro.runtime.query import (
+    AggregationQuery,
+    AggregationQueryResult,
+    CascadeQuery,
+    CascadeQueryResult,
+    ClassificationQuery,
+    ClassificationResult,
+    Query,
+    QueryResult,
+)
 from repro.runtime.recalibration import (
+    CascadeRecalibrationEvent,
+    CascadeRecalibrator,
     RecalibrationEvent,
     Recalibrator,
     StageMeasurement,
@@ -55,10 +70,13 @@ from repro.distributed.sharding import batch_sharding
 from repro.runtime.scheduler import (
     DEFAULT_TENANT,
     CompletedRequest,
+    RequestRoute,
     RequestScheduler,
     TenantConfig,
 )
 from repro.runtime.stats import (
+    CascadeSection,
+    CascadeStageStats,
     DeviceProgramSection,
     EngineSection,
     LatencySection,
@@ -373,6 +391,46 @@ class RunReport:
         return self.stats.throughput
 
 
+class _CascadeContext:
+    """Live serving state of one tenant's two-stage cascade.
+
+    Holds the compiled stage targets (cheap = scaled split decode, built
+    with its own ProgramSets; expensive = full-resolution pixel path), the
+    scheduler bindings routed requests dispatch through, the cheap stage's
+    current decode factor, and the exit counters the stats section and the
+    :class:`CascadeRecalibrator` read.  ``win_*`` counters reset on every
+    recalibration window; lifetime counters never do.
+    """
+
+    def __init__(
+        self,
+        tenant: str,
+        threshold: float,
+        cheap: CompiledPlan,
+        expensive: CompiledPlan,
+        cheap_binding: Any,
+        expensive_binding: Any,
+        factor: int,
+        candidates: tuple[int, ...],
+        recal: CascadeRecalibrator,
+    ):
+        self.tenant = tenant
+        self.threshold = threshold
+        self.cheap = cheap
+        self.expensive = expensive
+        self.cheap_binding = cheap_binding
+        self.expensive_binding = expensive_binding
+        self.factor = factor
+        self.candidates = candidates
+        self.recal = recal
+        self.lock = threading.Lock()
+        self.stage_items = [0, 0]  # items that entered each stage
+        self.stage_exits = [0, 0]  # items whose prediction exited there
+        self.refetched = 0
+        self.win_items = 0  # recalibration-window deltas
+        self.win_refetched = 0
+
+
 class SmolRuntime:
     """Facade wiring planner → placement → pipelined engine → serving."""
 
@@ -446,6 +504,17 @@ class SmolRuntime:
         self._num_workers = self.config.num_workers
         self._worker_recal: WorkerRecalibrator | None = None
         self.worker_recalibrations: list[WorkerRecalibrationEvent] = []
+        # --- typed query serving (§3.2 query classes) ---
+        # uid -> query kind for drain() to wrap results; cascade uids also
+        # record (exit_stage, refetched) once the scheduler resolves them
+        self._typed_queries: dict[int, str] = {}
+        self._cascade_results: dict[int, tuple[int, bool]] = {}
+        # live cascade contexts keyed on (tenant, stage models, threshold);
+        # aggregation (cheap, expensive) stage targets keyed on tenant
+        self._cascades: dict[tuple, _CascadeContext] = {}
+        self._agg_targets: dict[str, tuple] = {}
+        self._legacy_submit_warned = False
+        self.cascade_recalibrations: list[CascadeRecalibrationEvent] = []
 
     # ----------------------------------------------------------- calibration
     def _decode_time(self, fmt: ImageFormat) -> float:
@@ -619,8 +688,22 @@ class SmolRuntime:
         out_shape, out_dtype = tuple(out_meta.shape), np.dtype(out_meta.dtype)
         model_fn = self.model_fns[plan.model.name]
 
+        in_shape = tuple(in_meta.shape)
+
         def host_fn(item):
-            x = item.decode(fmt) if hasattr(item, "decode") else item
+            if hasattr(item, "decode"):
+                x = item.decode(fmt)
+                # enforce the shape contract at decode, not at the stage
+                # boundary: a full-host placement would otherwise normalize
+                # any input through its resize and mask corpus drift that a
+                # device-heavy placement rejects
+                if tuple(np.shape(x)) != in_shape:
+                    raise ValueError(
+                        f"decoded {tuple(np.shape(x))}, expected {in_shape}; "
+                        "the corpus must be shape-uniform with the calibration set"
+                    )
+            else:
+                x = item
             x = P.apply_chain_host(host_ops, x)
             x = np.asarray(x, dtype=out_dtype)
             if x.shape != out_shape:
@@ -1102,15 +1185,412 @@ class SmolRuntime:
             raise RuntimeError("start_serving() before fail_replica()")
         self._scheduler.fail_replica(index)
 
-    def submit(self, item: Any, tenant: str = DEFAULT_TENANT) -> int:
+    def submit(
+        self, item: Any, tenant: str = DEFAULT_TENANT
+    ) -> int | AggregationQueryResult:
+        """Submit one typed query (§3.2 query classes).
+
+        - :class:`ClassificationQuery` — returns the uid; ``drain()``
+          yields a :class:`ClassificationResult`.
+        - :class:`CascadeQuery` — returns the uid; stage 1 serves from the
+          cheap scaled rendition and uncertain items are internally
+          refetched at full resolution; ``drain()`` yields a
+          :class:`CascadeQueryResult` (prediction + exit stage).
+        - :class:`AggregationQuery` — runs synchronously (the full cheap
+          scan plus sampled target refetches ride the serving scheduler)
+          and returns the :class:`AggregationQueryResult` directly.
+
+        Bare (non-Query) items keep the pre-PR-9 behaviour — submitted to
+        the tenant's plan target, drained as raw ``CompletedRequest`` — via
+        a deprecation alias that warns once per runtime.
+        """
         if self._scheduler is None:
             raise RuntimeError("start_serving() before submit()")
+        if isinstance(item, Query):
+            if isinstance(item, ClassificationQuery):
+                uid = self._scheduler.submit(item.image, tenant=tenant)
+                self._typed_queries[uid] = "classify"
+                return uid
+            if isinstance(item, CascadeQuery):
+                return self._submit_cascade(item, tenant)
+            if isinstance(item, AggregationQuery):
+                return self._run_aggregation(item, tenant)
+            raise TypeError(f"unsupported query type: {type(item).__name__}")
+        if not self._legacy_submit_warned:
+            self._legacy_submit_warned = True
+            warnings.warn(
+                "bare-image submit() is deprecated; wrap the item in a typed "
+                "query (ClassificationQuery / CascadeQuery / AggregationQuery)"
+                " — warned once per runtime",
+                DeprecationWarning,
+                stacklevel=2,
+            )
         return self._scheduler.submit(item, tenant=tenant)
 
-    def drain(self, timeout: float | None = None) -> list[CompletedRequest]:
+    def drain(
+        self, timeout: float | None = None
+    ) -> list[CompletedRequest | QueryResult]:
+        """Completed requests since the last call, in uid order.
+
+        Typed queries come back as :class:`QueryResult` subclasses; bare
+        legacy submissions stay raw ``CompletedRequest`` objects.
+        """
         if self._scheduler is None:
             raise RuntimeError("start_serving() before drain()")
-        return self._scheduler.drain(timeout=timeout)
+        done = self._scheduler.drain(timeout=timeout)
+        if not self._typed_queries:
+            return done
+        out: list[CompletedRequest | QueryResult] = []
+        for r in done:
+            kind = self._typed_queries.pop(r.uid, None)
+            if kind is None:
+                out.append(r)
+                continue
+            scores = None if r.error is not None else np.asarray(r.output)
+            pred = int(np.argmax(scores)) if scores is not None else None
+            if kind == "classify":
+                out.append(
+                    ClassificationResult(
+                        uid=r.uid,
+                        tenant=r.tenant,
+                        latency=r.latency,
+                        error=r.error,
+                        prediction=pred,
+                        scores=scores,
+                    )
+                )
+            else:  # cascade
+                exit_stage, refetched = self._cascade_results.pop(r.uid, (0, False))
+                out.append(
+                    CascadeQueryResult(
+                        uid=r.uid,
+                        tenant=r.tenant,
+                        latency=r.latency,
+                        error=r.error,
+                        prediction=pred,
+                        scores=scores,
+                        exit_stage=exit_stage,
+                        refetched=refetched,
+                    )
+                )
+        return out
+
+    # ------------------------------------------------- cascades & aggregates
+    def _binding_for(self, compiled: CompiledPlan) -> Any:
+        """A scheduler binding dispatching through ``compiled``'s programs."""
+        return self._scheduler.make_binding(
+            compiled.host_fn,
+            list(compiled.device_programs) or compiled.device_fn,
+            compiled.out_shape,
+            compiled.out_dtype,
+            program_sets=compiled.program_sets or None,
+        )
+
+    def _plan_for_model(self, model: str | None, tenant: str) -> QueryPlan:
+        """Best feasible plan for one cascade stage's model (``None`` = the
+        tenant's own plan) — same resolution rule as pinned tenants."""
+        if model is None:
+            return self.tenant_plan(tenant)
+        plans = [p for p in self.planner().generate() if p.model.name == model]
+        if self.config.min_accuracy is not None:
+            ok = [p for p in plans if p.estimate.accuracy >= self.config.min_accuracy]
+            plans = ok or plans  # a named stage model must serve
+        if not plans:
+            raise ValueError(f"cascade stage: no feasible plan for model {model!r}")
+        return max(plans, key=lambda p: p.estimate.throughput)
+
+    def _coeff_cost_args(self, plan: QueryPlan) -> dict[str, Any]:
+        device_rate = self.config.device_ops_per_sec or (
+            self.config.host_ops_per_sec * DEFAULT_DEVICE_SPEEDUP
+        )
+        return dict(
+            host_entropy_time=self._entropy_time(plan.fmt),
+            dnn_device_time=1.0 / plan.model.exec_throughput,
+            device_ops_per_sec=device_rate,
+            device_dispatch_overhead_s=self._dispatch_overhead(),
+        )
+
+    def _cheap_option(self, plan: QueryPlan, factor: int) -> SplitDecodeOption | None:
+        """The split-decode option pricing ``plan`` at one scaled factor
+        (None when the stream is ineligible or the factor invalid)."""
+        geom = self._coeff_geometry(plan.fmt)
+        if geom is None or geom.channels != 3:
+            return None
+        opts = placement_mod.enumerate_coeff_options(
+            list(plan.dag_plan.ops),
+            geom,
+            factors=(factor,),
+            **self._coeff_cost_args(plan),
+        )
+        return opts[0] if opts else None
+
+    def _cheap_compiled(self, plan: QueryPlan) -> tuple[CompiledPlan, int, tuple[int, ...]]:
+        """Cheap-stage target: scaled split decode at the planner-chosen
+        reduced factor; ineligible streams (non-SJPG, grayscale) fall back
+        to the plan's own compiled path.  Returns
+        ``(compiled, factor, candidate_factors)``."""
+        geom = self._coeff_geometry(plan.fmt)
+        if geom is not None and geom.channels != 3:
+            geom = None
+        if geom is None:
+            return self._build_compiled(plan, plan.placement), 1, (1,)
+        chain = list(plan.dag_plan.ops)
+        cost_args = self._coeff_cost_args(plan)
+        options = placement_mod.enumerate_coeff_options(chain, geom, **cost_args)
+        if not options:
+            return self._build_compiled(plan, plan.placement), 1, (1,)
+        chosen = placement_mod.choose_coeff_option(
+            chain, geom, policy="scaled", **cost_args
+        )
+        if chosen is None or chosen.factor == 1:
+            # no reduced factor fits this stream (e.g. a pre-scaled stored
+            # rendition already near the resize target): the cheap stage IS
+            # the plan's own pixel path — a full-res coefficient program
+            # would only move the IDCT onto the device, not shrink the work
+            return self._build_compiled(plan, plan.placement), 1, (1,)
+        compiled = self._build_compiled(plan, plan.placement, coeff=chosen)
+        if compiled.coeff is None:  # the stream refused the coeff program
+            return compiled, 1, (1,)
+        candidates = tuple(sorted({o.factor for o in options}))
+        return compiled, compiled.coeff.factor, candidates
+
+    def _cascade_ctx(self, tenant: str, query: CascadeQuery) -> _CascadeContext:
+        stage0, stage1 = query.stages
+        key = (tenant, stage0.model, stage1.model, stage0.threshold)
+        ctx = self._cascades.get(key)
+        if ctx is not None:
+            return ctx
+        cheap_plan = self._plan_for_model(stage0.model, tenant)
+        exp_plan = self._plan_for_model(stage1.model, tenant)
+        cheap, factor, candidates = self._cheap_compiled(cheap_plan)
+        # the expensive stage always decodes the full-resolution pixels —
+        # a different compiled target (and ProgramSet bucket family) than
+        # the cheap scaled program, so refetches land on warm programs
+        expensive = self._build_compiled(exp_plan, exp_plan.placement, coeff=None)
+        recal = CascadeRecalibrator(
+            factor,
+            stage0.threshold,
+            candidates=candidates,
+            alpha=self.config.recal.alpha,
+            hysteresis=self.config.recal.hysteresis,
+            tenant=tenant,
+        )
+        ctx = _CascadeContext(
+            tenant,
+            stage0.threshold,
+            cheap,
+            expensive,
+            self._binding_for(cheap),
+            self._binding_for(expensive),
+            factor,
+            candidates,
+            recal,
+        )
+        self._cascades[key] = ctx
+        return ctx
+
+    def _submit_cascade(self, query: CascadeQuery, tenant: str) -> int:
+        """Stage 1 on the cheap rendition; uncertain items refetch.
+
+        The stage-0 route's ``on_result`` inspects the max-softmax
+        confidence inside the scheduler's completion path: confident items
+        exit with the cheap scores, the rest return a (full-res item,
+        stage-1 route) directive and the scheduler resubmits them to the
+        expensive binding under the same uid/tenant (uid order and fair-
+        share billing both survive the refetch).
+        """
+        ctx = self._cascade_ctx(tenant, query)
+        image = query.image
+        results = self._cascade_results
+
+        def on_stage1(uid: int, out: Any):
+            with ctx.lock:
+                ctx.stage_items[1] += 1
+                ctx.stage_exits[1] += 1
+            return None
+
+        def on_stage0(uid: int, out: Any):
+            _, conf = _softmax_conf(np.asarray(out)[None, :])
+            passed = float(conf[0]) < ctx.threshold
+            with ctx.lock:
+                ctx.stage_items[0] += 1
+                ctx.win_items += 1
+                if passed:
+                    ctx.refetched += 1
+                    ctx.win_refetched += 1
+                else:
+                    ctx.stage_exits[0] += 1
+            if not passed:
+                results[uid] = (0, False)
+                return None
+            results[uid] = (1, True)
+            return image, RequestRoute(
+                binding=ctx.expensive_binding, on_result=on_stage1, stage=1
+            )
+
+        uid = self._scheduler.submit(
+            image,
+            tenant=tenant,
+            route=RequestRoute(
+                binding=ctx.cheap_binding, on_result=on_stage0, stage=0
+            ),
+        )
+        self._typed_queries[uid] = "cascade"
+        return uid
+
+    def _scan(
+        self,
+        items: Sequence[Any],
+        binding: Any,
+        tenant: str,
+        value_fn: Callable[[np.ndarray], float],
+        timeout: float = 600.0,
+    ) -> np.ndarray:
+        """Score ``items`` through one routed binding, returning
+        ``value_fn`` of each score row in submission order.  Results come
+        back through per-item sinks (out-of-band of ``drain()``), so an
+        aggregation query never perturbs concurrent serving consumers."""
+        n = len(items)
+        vals = np.zeros(n, dtype=np.float64)
+        if n == 0:
+            return vals
+        errs: list[BaseException] = []
+        remaining = [n]
+        lock = threading.Lock()
+        all_done = threading.Event()
+
+        def make_sink(i: int):
+            def sink(uid: int, out: Any, err: BaseException | None) -> None:
+                with lock:
+                    if err is not None:
+                        errs.append(err)
+                    else:
+                        vals[i] = value_fn(np.asarray(out))
+                    remaining[0] -= 1
+                    if remaining[0] == 0:
+                        all_done.set()
+
+            return sink
+
+        for i, item in enumerate(items):
+            self._scheduler.submit(
+                item, tenant=tenant, route=RequestRoute(binding=binding, sink=make_sink(i))
+            )
+        if not all_done.wait(timeout=timeout):
+            raise RuntimeError(
+                f"aggregation scan timed out: {remaining[0]}/{n} items outstanding"
+            )
+        if errs:
+            raise errs[0]
+        return vals
+
+    def _run_aggregation(
+        self, query: AggregationQuery, tenant: str
+    ) -> AggregationQueryResult:
+        """The s(x) full scan rides the cheapest rendition over the whole
+        corpus; ``control_variate_aggregate`` then drives sampled target-
+        model refetches at full resolution until the CI closes."""
+        t0 = time.perf_counter()
+        ctx = self._agg_targets.get(tenant)
+        if ctx is None:
+            plan = self.tenant_plan(tenant)
+            cheap, _factor, _cands = self._cheap_compiled(plan)
+            expensive = self._build_compiled(plan, plan.placement, coeff=None)
+            ctx = (cheap, expensive, self._binding_for(cheap), self._binding_for(expensive))
+            self._agg_targets[tenant] = ctx
+        _cheap, _expensive, cheap_binding, exp_binding = ctx
+        value_fn = query.value_fn or (lambda row: float(np.argmax(row)))
+        corpus = list(query.corpus)
+        s_all = self._scan(corpus, cheap_binding, tenant, value_fn)
+
+        def target_fn(indices: np.ndarray) -> np.ndarray:
+            sel = [corpus[i] for i in np.asarray(indices).tolist()]
+            return self._scan(sel, exp_binding, tenant, value_fn)
+
+        res = control_variate_aggregate(
+            s_all,
+            target_fn,
+            eps=query.eps,
+            delta=query.delta,
+            batch=query.batch,
+            min_samples=query.min_samples,
+            max_samples=query.max_samples,
+            seed=query.seed,
+        )
+        return AggregationQueryResult(
+            uid=-1,
+            tenant=tenant,
+            latency=time.perf_counter() - t0,
+            estimate=res.estimate,
+            ci_halfwidth=res.ci_halfwidth,
+            num_target_invocations=res.num_target_invocations,
+            num_specialized_invocations=res.num_specialized_invocations,
+            variance_reduction=res.variance_reduction,
+        )
+
+    def cascade_recalibrate(self, tenant: str = DEFAULT_TENANT) -> bool:
+        """Re-pick the cascade's cheap-stage decode factor from the pass-
+        through rate measured since the last call.
+
+        The measured window combines the cascade exit counters with the
+        tenant's telemetry occupancy window (its own consumer key — the
+        split recalibrator's window is untouched): the expensive stage is
+        priced from the planner estimate and the cheap stage from the
+        measured occupancy net of the refetch share.  On a factor move the
+        cheap stage is recompiled at the new factor and the stage binding
+        swapped in place; in-flight routes finish on the old programs.
+        """
+        ctx = None
+        for key in reversed(list(self._cascades)):
+            if key[0] == tenant:
+                ctx = self._cascades[key]
+                break
+        if ctx is None:
+            raise RuntimeError(f"no cascade has served tenant {tenant!r}")
+        host_busy, _h_items, dev_busy, _d_items = self.telemetry.measurement_window(
+            ("cascade", id(self)), tenant
+        )
+        with ctx.lock:
+            items, refetched = ctx.win_items, ctx.win_refetched
+            ctx.win_items = 0
+            ctx.win_refetched = 0
+        if items <= 0:
+            return False
+        full_spi = 1.0 / max(ctx.expensive.plan.estimate.throughput, 1e-9)
+        total_busy = host_busy + dev_busy
+        if total_busy > 0:
+            # window busy-time = items*cheap + refetched*full, solved for cheap
+            cheap_spi = max((total_busy - refetched * full_spi) / items, 1e-9)
+        else:
+            cheap_spi = 1.0 / max(ctx.cheap.plan.estimate.throughput, 1e-9)
+        ctx.recal.observe(ctx.factor, items, refetched, cheap_spi, full_spi)
+        n_events = len(ctx.recal.events)
+        new_factor, changed = ctx.recal.update()
+        if changed:
+            # factor 1 is the pixel path, not a full-res coefficient program
+            option = (
+                self._cheap_option(ctx.cheap.plan, new_factor)
+                if new_factor > 1
+                else None
+            )
+            if option is None and new_factor > 1:
+                changed = False  # stream can't serve that factor: hold
+                ctx.recal.factor = ctx.factor
+            else:
+                old = ctx.cheap
+                fresh = self._build_compiled(
+                    ctx.cheap.plan, ctx.cheap.plan.placement, coeff=option
+                )
+                ctx.cheap = fresh
+                ctx.cheap_binding = self._binding_for(fresh)
+                self._release_program_sets(old)
+                ctx.factor = new_factor
+        if len(ctx.recal.events) > n_events:
+            event = ctx.recal.events[-1]
+            if not changed and event.changed:
+                event = dataclasses.replace(event, new_factor=event.old_factor)
+            self.cascade_recalibrations.append(event)
+        return changed
 
     def flush(self, timeout: float = 60.0) -> None:
         if self._scheduler is not None:
@@ -1119,6 +1599,16 @@ class SmolRuntime:
     def stop_serving(self) -> None:
         if self._scheduler is not None:
             self._scheduler.stop()
+        # cascade/aggregation stage targets pin their own warm programs;
+        # drop the pins with the serving session (contexts rebuild lazily)
+        for ctx in self._cascades.values():
+            self._release_program_sets(ctx.cheap)
+            self._release_program_sets(ctx.expensive)
+        for cheap, expensive, _cb, _eb in self._agg_targets.values():
+            self._release_program_sets(cheap)
+            self._release_program_sets(expensive)
+        self._cascades.clear()
+        self._agg_targets.clear()
 
     def serving_recalibrate(self, tenant: str | None = None) -> bool:
         """Recalibrate a split from the serving scheduler's measurements.
@@ -1228,6 +1718,32 @@ class SmolRuntime:
             if engine is not None
             else None
         )
+        cascade_section = None
+        if self._cascades:
+            ctxs = list(self._cascades.values())
+            items = [0, 0]
+            exits = [0, 0]
+            refetched = 0
+            for ctx in ctxs:
+                for s in range(2):
+                    items[s] += ctx.stage_items[s]
+                    exits[s] += ctx.stage_exits[s]
+                refetched += ctx.refetched
+            latest = ctxs[-1]
+            cascade_section = CascadeSection(
+                stages=(
+                    CascadeStageStats(0, items[0], exits[0], 1.0),
+                    CascadeStageStats(
+                        1,
+                        items[1],
+                        exits[1],
+                        items[1] / items[0] if items[0] else 0.0,
+                    ),
+                ),
+                refetched_items=refetched,
+                factor=latest.factor,
+                threshold=latest.threshold,
+            )
         digest = self.telemetry.summary()
         latency = LatencySection(stages=digest["stages"], tenants=digest["tenants"])
         return RuntimeStats(
@@ -1241,6 +1757,7 @@ class SmolRuntime:
             device_program=device_program,
             split_decode=split_decode,
             latency=latency,
+            cascade=cascade_section,
             programs_compiled_post_warmup=self._programs_compiled_post_warmup,
             program_compile_seconds_total=self._program_compile_seconds,
         )

@@ -479,3 +479,155 @@ class Recalibrator:
             factors=(option.factor,),
         )
         return fresh[0].est_throughput if fresh else option.est_throughput
+
+
+@dataclasses.dataclass
+class CascadeRecalibrationEvent:
+    old_factor: int
+    new_factor: int
+    pass_rate: float  # EWMA pass-through fraction measured at old_factor
+    cheap_seconds_per_item: float  # cheap-stage cost measured at old_factor
+    full_seconds_per_item: float  # expensive-stage cost (refetch path)
+    predicted_cost: float  # seconds/item predicted at new_factor
+    threshold: float  # the stage's confidence threshold (accuracy floor)
+    tenant: str = ""
+
+    @property
+    def changed(self) -> bool:
+        return self.new_factor != self.old_factor
+
+
+class CascadeRecalibrator:
+    """Co-optimizes the cascade's cheap-stage decode factor against the
+    pass-through rate measured online (tentpole of the §3.2 serving mode).
+
+    The expected cost per cascade item is
+
+        cost(f) = cheap_spi(f) + pass_rate(f) * full_spi
+
+    — every item pays the cheap scaled-decode scan at factor ``f``, and
+    the fraction that fails the confidence threshold additionally pays
+    the full-resolution refetch.  A coarser factor shrinks ``cheap_spi``
+    (fewer coefficient FLOPs, smaller staging) but *raises* the pass
+    rate (lower-fidelity inputs score less confidently), so the optimum
+    moves with the measured distribution, not just the planner's static
+    per-factor costs.
+
+    Per-factor pass rates and cheap-stage costs are EWMA-tracked from
+    the facade's cascade exit counters + the telemetry occupancy windows
+    (the same feed the split/worker recalibrators read).  Factors never
+    served are priced by scaling the current factor's observations:
+    cheap cost by ``(f_now / f_cand)**2`` (scaled IDCT output area) and
+    pass rate linearly in the factor ratio, clamped to [0, 1] — a
+    deliberately rough prior the next measured window immediately
+    corrects.  Moves are hysteresis-damped like the split recalibrator.
+
+    The confidence ``threshold`` is the query's accuracy contract, so it
+    is honored as a floor rather than searched: the recalibrator only
+    optimizes the (factor) axis of the paper's (factor, threshold)
+    trade, reporting the threshold in every event.
+    """
+
+    def __init__(
+        self,
+        factor: int,
+        threshold: float,
+        candidates: Sequence[int] = (4, 2, 1),
+        alpha: float = 0.5,
+        hysteresis: float = 0.1,
+        tenant: str = "",
+    ):
+        if factor not in candidates:
+            raise ValueError(f"factor {factor} not in candidates {tuple(candidates)}")
+        self.factor = factor
+        self.threshold = threshold
+        self.candidates = tuple(candidates)
+        self.alpha = alpha
+        self.hysteresis = hysteresis
+        self.tenant = tenant
+        self._pass_rate: dict[int, float] = {}  # EWMA per factor
+        self._cheap_spi: dict[int, float] = {}  # EWMA per factor
+        self._full_spi: float | None = None
+        self.events: list[CascadeRecalibrationEvent] = []
+
+    def _ewma(self, old: float | None, new: float) -> float:
+        return new if old is None else (1.0 - self.alpha) * old + self.alpha * new
+
+    def observe(
+        self,
+        factor: int,
+        items: int,
+        refetched: int,
+        cheap_seconds_per_item: float,
+        full_seconds_per_item: float | None = None,
+    ) -> None:
+        """Fold one measurement window in.
+
+        ``items`` cascade items entered the cheap stage at ``factor``;
+        ``refetched`` of them failed the threshold and paid the full-
+        resolution refetch.  ``cheap_seconds_per_item`` is the measured
+        cheap-stage occupancy; ``full_seconds_per_item`` the refetch
+        path's (None when no item passed through this window).
+        """
+        if items <= 0:
+            return
+        rate = min(1.0, max(0.0, refetched / items))
+        self._pass_rate[factor] = self._ewma(self._pass_rate.get(factor), rate)
+        if cheap_seconds_per_item > 0:
+            self._cheap_spi[factor] = self._ewma(
+                self._cheap_spi.get(factor), cheap_seconds_per_item
+            )
+        if full_seconds_per_item is not None and full_seconds_per_item > 0:
+            self._full_spi = self._ewma(self._full_spi, full_seconds_per_item)
+
+    def _predict(self, factor: int) -> float | None:
+        """Expected seconds/item at ``factor`` under current estimates."""
+        now = self.factor
+        cheap = self._cheap_spi.get(factor)
+        if cheap is None:
+            base = self._cheap_spi.get(now)
+            if base is None:
+                return None
+            cheap = base * (now / factor) ** 2
+        rate = self._pass_rate.get(factor)
+        if rate is None:
+            base = self._pass_rate.get(now)
+            if base is None:
+                return None
+            rate = min(1.0, max(0.0, base * (factor / now)))
+        full = self._full_spi if self._full_spi is not None else 0.0
+        return cheap + rate * full
+
+    def update(self) -> tuple[int, bool]:
+        """Re-pick the cheap-stage factor; returns (factor, changed).
+
+        The move only happens when the best candidate's predicted cost
+        beats staying put by the hysteresis margin — a noisy window
+        cannot thrash the facade into recompiling stage bindings.
+        """
+        old = self.factor
+        stay = self._predict(old)
+        if stay is None or stay <= 0:
+            return old, False  # nothing measured yet: hold
+        best, best_cost = old, stay
+        for f in self.candidates:
+            cost = self._predict(f)
+            if cost is not None and cost < best_cost:
+                best, best_cost = f, cost
+        event = CascadeRecalibrationEvent(
+            old_factor=old,
+            new_factor=best,
+            pass_rate=self._pass_rate.get(old, 0.0),
+            cheap_seconds_per_item=self._cheap_spi.get(old, 0.0),
+            full_seconds_per_item=self._full_spi or 0.0,
+            predicted_cost=best_cost,
+            threshold=self.threshold,
+            tenant=self.tenant,
+        )
+        if best == old or best_cost >= stay / (1.0 + self.hysteresis):
+            event = dataclasses.replace(event, new_factor=old, predicted_cost=stay)
+            self.events.append(event)
+            return old, False
+        self.factor = best
+        self.events.append(event)
+        return best, True

@@ -148,6 +148,7 @@ class TenantStats:
     host_busy_seconds: float = 0.0
     device_busy_seconds: float = 0.0  # batch device time, attributed per item
     admission_blocked_seconds: float = 0.0
+    refetched: int = 0  # items internally resubmitted (cascade pass-through)
 
 
 @dataclasses.dataclass
@@ -178,6 +179,7 @@ class SchedulerStats:
     admission_blocked_seconds: float = 0.0  # time submit() spent backpressured
     replica_failures: int = 0  # replicas lost from the serving mesh
     redispatched_items: int = 0  # items drained off failed replicas + re-served
+    refetched_items: int = 0  # cascade pass-throughs resubmitted internally
 
     @property
     def mean_batch_size(self) -> float:
@@ -282,6 +284,52 @@ class _Binding:
         self.item_nbytes = int(np.prod(self.out_shape, dtype=np.int64)) * np.dtype(
             out_dtype
         ).itemsize
+
+
+class RequestRoute:
+    """Per-request routing directive for cascade / aggregation serving.
+
+    A routed request rides the normal pipe (WFQ pickup, batching, budget
+    admission all bill the submitting tenant) but may deviate at three
+    points:
+
+    * ``binding`` — serve this request from a specific compiled plan
+      (e.g. a cascade stage's cheap scaled-decode target) instead of the
+      tenant's bound plan.  Batches only mix requests on the *same*
+      effective binding.
+    * ``on_result(uid, output) -> None | (next_item, next_route)`` —
+      inspect the device output at dispatch retirement.  Returning a
+      ``(item, route)`` pair *refetches*: the request re-enters the same
+      tenant's ingress under the SAME uid (so drain order and fairness
+      accounting are preserved — the second pass bills the same tenant's
+      virtual time) with the new payload/route.  Returning ``None``
+      completes normally.
+    * ``sink(uid, output, error)`` — consume the completion instead of
+      parking it in the drain reorder buffer (aggregation scans retire
+      thousands of internal requests no caller will ever drain).  The
+      uid is marked drained-ahead so the global drain prefix skips it.
+
+    ``submitted_at`` / ``admitted_nbytes`` are stamped at first submit
+    and carried across refetches: end-to-end latency spans every stage,
+    and admission retires exactly the bytes it charged.
+    """
+
+    __slots__ = ("binding", "on_result", "sink", "stage",
+                 "submitted_at", "admitted_nbytes")
+
+    def __init__(
+        self,
+        binding: _Binding | None = None,
+        on_result: Callable[[int, Any], Any] | None = None,
+        sink: Callable[[int, Any, BaseException | None], None] | None = None,
+        stage: int = 0,
+    ):
+        self.binding = binding
+        self.on_result = on_result
+        self.sink = sink
+        self.stage = stage
+        self.submitted_at: float | None = None
+        self.admitted_nbytes: int | None = None
 
 
 class _TenantState:
@@ -656,10 +704,12 @@ class RequestScheduler:
         self.num_workers = num_workers
 
     # ---------------------------------------------------------------- submit
-    def _admit(self, state: _TenantState) -> None:
+    def _admit(self, state: _TenantState, nbytes: int | None = None) -> None:
         """Admission control: bound the tenant's pending requests and
         in-flight bytes.  Saturation is per tenant — one tenant exhausting
-        its quota never raises for another."""
+        its quota never raises for another.  ``nbytes`` overrides the
+        tenant binding's per-item footprint (routed requests stage through
+        a different binding's signature)."""
         t0 = time.perf_counter()
         blocked = 0.0
         cfg = state.config
@@ -689,7 +739,8 @@ class RequestScheduler:
             self._inflight += 1
             self._idle.clear()
         budget = state.budget if state.budget is not None else self.budget
-        nbytes = state.binding.item_nbytes
+        if nbytes is None:
+            nbytes = state.binding.item_nbytes
         if budget is not None and nbytes:
             if self.admission == "reject":
                 admitted = budget.try_admit(nbytes)
@@ -735,7 +786,26 @@ class RequestScheduler:
             self.stats.rejected += 1
             state.stats.rejected += 1
 
-    def submit(self, item: Any, tenant: str = DEFAULT_TENANT) -> int:
+    def make_binding(
+        self,
+        host_fn: Callable,
+        device_fn: Callable | Sequence[Callable],
+        out_shape: tuple[int, ...],
+        out_dtype: Any,
+        program_sets: Sequence[Any] | None = None,
+    ) -> _Binding:
+        """Build a standalone binding for routed requests (cascade stages,
+        aggregation scans) without binding any tenant to it."""
+        return _Binding(
+            host_fn, device_fn, out_shape, out_dtype, program_sets=program_sets
+        )
+
+    def submit(
+        self,
+        item: Any,
+        tenant: str = DEFAULT_TENANT,
+        route: RequestRoute | None = None,
+    ) -> int:
         if not self._running:
             raise RuntimeError("scheduler is not running; call start() first")
         if self._fail_exc is not None:
@@ -743,24 +813,39 @@ class RequestScheduler:
                 "scheduler mesh has no live replicas"
             ) from self._fail_exc
         state = self._state(tenant)
-        self._admit(state)
+        if route is not None:
+            # stamp the admission footprint once: refetches re-use it, and
+            # retirement releases exactly what was charged even when a
+            # later stage's binding has a different signature
+            if route.admitted_nbytes is None:
+                binding = route.binding if route.binding is not None else state.binding
+                route.admitted_nbytes = binding.item_nbytes
+            self._admit(state, nbytes=route.admitted_nbytes)
+        else:
+            self._admit(state)
         with self._submit_lock:
             uid = self._next_uid
             self._next_uid += 1
-            if state.config.max_wait_ms is not None:
+            if state.config.max_wait_ms is not None and (
+                route is None or route.sink is None
+            ):
                 # latency tenant: record the uid for drain priority (its
                 # completion may leave the reorder buffer ahead of
-                # throughput tenants' backlog)
+                # throughput tenants' backlog).  Sink-routed requests never
+                # enter the reorder buffer, so they stay out of the queue.
                 state.drain_queue.append(uid)
         with self._stats_lock:
             self.stats.submitted += 1
             state.stats.submitted += 1
+        now = time.perf_counter()
+        if route is not None and route.submitted_at is None:
+            route.submitted_at = now
         with self._ingress_cond:
             if not state.ingress:
                 # (re)activation: clamp virtual time to the scheduler clock
                 # so an idle tenant can't hoard credit (bounded starvation)
                 state.vt_ingress = max(state.vt_ingress, self._vclock_ingress)
-            state.ingress.append((uid, item, ReqTimes(time.perf_counter())))
+            state.ingress.append((uid, item, ReqTimes(now), route))
             self._ingress_cond.notify()
         return uid
 
@@ -841,9 +926,9 @@ class RequestScheduler:
             state = min(active, key=lambda s: s.vt_ingress)
             state.vt_ingress += 1.0 / state.config.weight
             self._vclock_ingress = state.vt_ingress
-            uid, item, tm = state.ingress.popleft()
+            uid, item, tm, route = state.ingress.popleft()
             tm.pick = time.perf_counter()  # queue span ends: WFQ pickup
-            return state, uid, item, tm
+            return state, uid, item, tm, route
 
     def _host_worker(self) -> None:
         wid = next(self._worker_ids)  # labels this thread's decode spans
@@ -851,14 +936,17 @@ class RequestScheduler:
             msg = self._next_ingress()
             if msg is None:
                 return
-            state, uid, item, tm = msg
+            state, uid, item, tm, route = msg
             with self._rebind_lock:  # pin the current stage fn, call outside
-                host_fn = state.binding.host_fn
+                if route is not None and route.binding is not None:
+                    host_fn = route.binding.host_fn
+                else:
+                    host_fn = state.binding.host_fn
             t_in = time.perf_counter()
             try:
                 arr = host_fn(item)
             except BaseException as e:  # noqa: BLE001 — delivered via drain()
-                self._complete_error(state, uid, tm, e)
+                self._complete_error(state, uid, tm, e, route)
                 continue
             dt = time.perf_counter() - t_in
             tm.decoded = time.perf_counter()
@@ -869,18 +957,27 @@ class RequestScheduler:
                 self.stats.host_items += 1
                 state.stats.host_busy_seconds += dt
                 state.stats.host_items += 1
-            self._ready.put((state, uid, arr, tm))
+            self._ready.put((state, uid, arr, tm, route))
 
     # Batcher internals.  The per-tenant `ready` deques and the `vt_ready`
     # clocks are shared by every replica batcher (so tenant weights span
     # the mesh) — all access goes through _ready_lock.  _stash acquires it
     # itself; _pick_ready must be called with it held.
     def _stash(self, msg) -> None:
-        state, uid, arr, tm = msg
+        state, uid, arr, tm, route = msg
         with self._ready_lock:
             if not state.ready:
                 state.vt_ready = max(state.vt_ready, self._vclock_ready)
-            state.ready.append((uid, arr, tm))
+            state.ready.append((uid, arr, tm, route))
+
+    @staticmethod
+    def _entry_binding(state: _TenantState, entry: tuple) -> _Binding:
+        """Effective binding of one ready-deque entry: its route override
+        (cascade stage / aggregation scan target) or the tenant's plan."""
+        route = entry[3]
+        if route is not None and route.binding is not None:
+            return route.binding
+        return state.binding
 
     def _pick_ready(self, candidates: list[_TenantState]) -> _TenantState:
         state = min(candidates, key=lambda s: s.vt_ready)
@@ -948,8 +1045,8 @@ class RequestScheduler:
             if not active:
                 return True
             first = self._pick_ready(active)
+            binding = self._entry_binding(first, first.ready[0])
             head = first.ready.popleft()
-        binding = first.binding
         with self._rebind_lock:  # signature may change across rebinds
             shape, dtype = (self.max_batch, *binding.out_shape), binding.out_dtype
         buf = bufs.get(id(binding))
@@ -966,11 +1063,12 @@ class RequestScheduler:
         while len(metas) < self.max_batch:
             if not replica.alive:
                 break  # dispatch path drains the partial batch back
-            # only tenants sharing this batch's compiled plan may join it
+            # only tenants whose head-of-line request targets this batch's
+            # compiled plan may join it (routed requests carry their own)
             with self._ready_lock:
                 cands = [
                     s for s in self._tenants.values()
-                    if s.ready and s.binding is binding
+                    if s.ready and self._entry_binding(s, s.ready[0]) is binding
                 ]
                 if cands:
                     state = self._pick_ready(cands)
@@ -1022,15 +1120,15 @@ class RequestScheduler:
         """Copy one host output into the staging buffer; errors (e.g. an
         item preprocessed under a pre-rebind signature) fail that request
         instead of killing the batcher."""
-        uid, arr, tm = msg
+        uid, arr, tm, route = msg
         try:
             buf[len(metas)] = arr
         except (ValueError, TypeError) as e:
-            self._complete_error(state, uid, tm, e)
+            self._complete_error(state, uid, tm, e, route)
             return False
         tm.staged = time.perf_counter()  # stage span ends: copied into batch
         # keep arr: a replica failure drains the item back to the queue
-        metas.append((uid, tm, state, arr))
+        metas.append((uid, tm, state, arr, route))
         return True
 
     def _requeue(self, metas: list) -> None:
@@ -1038,10 +1136,10 @@ class RequestScheduler:
         their tenants' ready deques (uid order preserved) for re-dispatch
         on survivors."""
         with self._ready_lock:
-            for uid, tm, state, arr in reversed(metas):
+            for uid, tm, state, arr, route in reversed(metas):
                 if not state.ready:
                     state.vt_ready = max(state.vt_ready, self._vclock_ready)
-                state.ready.appendleft((uid, arr, tm))
+                state.ready.appendleft((uid, arr, tm, route))
 
     def _on_replica_failure(
         self, replica: _ReplicaState, metas: list, exc: ReplicaFailure
@@ -1065,8 +1163,8 @@ class RequestScheduler:
         # no survivors: complete the batch with the failure and flip the
         # scheduler into error-pump mode (loop top picks it up)
         self._fail_exc = exc
-        for uid, tm, state, _arr in metas:
-            self._complete_error(state, uid, tm, exc)
+        for uid, tm, state, _arr, route in metas:
+            self._complete_error(state, uid, tm, exc, route)
 
     def _error_pump(self) -> None:
         """All replicas are dead: complete everything still flowing through
@@ -1079,15 +1177,15 @@ class RequestScheduler:
                 for s in self._tenants.values():
                     while s.ready:
                         stranded.append((s, s.ready.popleft()))
-            for state, (uid, arr, tm) in stranded:
-                self._complete_error(state, uid, tm, exc)
+            for state, (uid, arr, tm, route) in stranded:
+                self._complete_error(state, uid, tm, exc, route)
             msg = self._ready.get()
             if msg is self._STOP:
                 return
             if msg is self._KICK:
                 continue
-            state, uid, arr, tm = msg
-            self._complete_error(state, uid, tm, exc)
+            state, uid, arr, tm, route = msg
+            self._complete_error(state, uid, tm, exc, route)
 
     def _dispatch(
         self,
@@ -1100,8 +1198,8 @@ class RequestScheduler:
         if not metas:
             return
         if self._fail_exc is not None:
-            for uid, tm, state, _arr in metas:
-                self._complete_error(state, uid, tm, self._fail_exc)
+            for uid, tm, state, _arr, route in metas:
+                self._complete_error(state, uid, tm, self._fail_exc, route)
             return
         if not replica.alive:
             # marked dead between forming and dispatching (fail_replica):
@@ -1125,17 +1223,40 @@ class RequestScheduler:
             self._on_replica_failure(replica, metas, e)
             return
         except BaseException as e:  # noqa: BLE001 — delivered via drain()
-            for uid, tm, state, _arr in metas:
-                self._complete_error(state, uid, tm, e)
+            for uid, tm, state, _arr, route in metas:
+                self._complete_error(state, uid, tm, e, route)
             return
         dt = time.perf_counter() - t_in
         now = time.perf_counter()
-        per_tenant = collections.Counter(state.config.name for _, _, state, _ in metas)
-        states = {state.config.name: state for _, _, state, _ in metas}
+        per_tenant = collections.Counter(state.config.name for _, _, state, _, _ in metas)
+        states = {state.config.name: state for _, _, state, _, _ in metas}
         tel = self.telemetry
         tel.observe_device_batch(dt, per_tenant)
-        for uid, tm, state, _arr in metas:
+        # Route the batch's rows.  An on_result directive returning
+        # (next_item, next_route) *refetches*: the request re-enters the
+        # same tenant's ingress under the SAME uid (second pass bills the
+        # same tenant's virtual time; the drain prefix waits, preserving
+        # uid order).  Everything else finishes — into the reorder buffer,
+        # or a route's sink.
+        refetch: list = []  # (state, uid, tm, route, (next_item, next_route))
+        finish: list = []  # (row, uid, tm, state, route)
+        errors: list = []  # (uid, tm, state, route, exc)
+        for row, (uid, tm, state, _arr, route) in enumerate(metas):
             tm.done = now
+            if route is not None and route.on_result is not None:
+                try:
+                    nxt = route.on_result(uid, out[row])
+                except BaseException as e:  # noqa: BLE001 — delivered via drain()
+                    errors.append((uid, tm, state, route, e))
+                    continue
+                if nxt is not None:
+                    refetch.append((state, uid, tm, route, nxt))
+                    continue
+            finish.append((row, uid, tm, state, route))
+        # only finishing requests land in the latency histograms: a
+        # refetched item's end-to-end span covers every stage, recorded
+        # when its final pass retires
+        for _row, uid, tm, state, _route in finish:
             tel.complete_request(state.config.name, uid, tm, replica=replica.index)
         if tel.config.spans:
             # batch span: open -> device done, linking member request spans;
@@ -1155,11 +1276,24 @@ class RequestScheduler:
                 cold=getattr(device_fn, "dispatch_count", 0) == 1,
                 compile_s=getattr(device_fn, "first_dispatch_seconds", None),
             )
+            for state, uid, tm, route, _nxt in refetch:
+                # the cheap-stage pass this item just finished before its
+                # full-resolution resubmission
+                tel.emit_span(
+                    "refetch",
+                    f"stage{route.stage}",
+                    state.config.name,
+                    uid,
+                    tm.submit,
+                    now,
+                    stage=route.stage,
+                )
         with self._stats_lock:
             self.stats.device_busy_seconds += dt
             self.stats.batches += 1
             self.stats.batch_items += len(metas)
-            self.stats.completed += len(metas)
+            self.stats.completed += len(finish)
+            self.stats.refetched_items += len(refetch)
             replica.batches += 1
             replica.items += len(metas)
             for name, n in per_tenant.items():
@@ -1168,18 +1302,65 @@ class RequestScheduler:
                 # proportion to the slots they filled
                 ts.device_busy_seconds += dt * n / len(metas)
                 ts.batch_items += n
-                ts.completed += n
+            for _row, _uid, _tm, state, _route in finish:
+                state.stats.completed += 1
+            for state, _uid, _tm, _route, _nxt in refetch:
+                state.stats.refetched += 1
+        sink_calls: list = []
+        retire_group: collections.Counter = collections.Counter()
         with self._done_lock:
-            for row, (uid, tm, state, _arr) in enumerate(metas):
-                self._done[uid] = CompletedRequest(
-                    uid, out[row], tm.submit, now, tenant=state.config.name
+            woke = False
+            for row, uid, tm, state, route in finish:
+                if route is not None and route.sink is not None:
+                    # consumed out-of-band: mark drained-ahead so the
+                    # global uid prefix skips it
+                    self._drained_ahead.add(uid)
+                    sink_calls.append((route, uid, out[row]))
+                    continue
+                t_submit = (
+                    route.submitted_at
+                    if route is not None and route.submitted_at is not None
+                    else tm.submit
                 )
-            self._done_event.set()
-        for name, n in per_tenant.items():
+                self._done[uid] = CompletedRequest(
+                    uid, out[row], t_submit, now, tenant=state.config.name
+                )
+                woke = True
+            if woke or sink_calls:
+                self._done_event.set()
+        for route, uid, val in sink_calls:
+            route.sink(uid, val, None)
+        for _row, _uid, _tm, state, route in finish:
+            if route is not None:
+                self._retire_admissions(state, 1, nbytes=route.admitted_nbytes)
+            else:
+                retire_group[state.config.name] += 1
+        for name, n in retire_group.items():
             self._retire_admissions(states[name], n)
+        for uid, tm, state, route, exc in errors:
+            self._complete_error(state, uid, tm, exc, route)
+        if refetch:
+            t_re = time.perf_counter()
+            with self._ingress_cond:
+                for state, uid, _tm, route, (next_item, next_route) in refetch:
+                    if next_route is None:
+                        next_route = RequestRoute()
+                    # carry the original admission footprint and submit
+                    # time across the refetch
+                    next_route.submitted_at = route.submitted_at
+                    next_route.admitted_nbytes = route.admitted_nbytes
+                    if not state.ingress:
+                        state.vt_ingress = max(state.vt_ingress, self._vclock_ingress)
+                    state.ingress.append((uid, next_item, ReqTimes(t_re), next_route))
+                self._ingress_cond.notify_all()
 
     def _complete_error(
-        self, state: _TenantState, uid: int, tm: ReqTimes, exc: BaseException
+        self,
+        state: _TenantState,
+        uid: int,
+        tm: ReqTimes,
+        exc: BaseException,
+        route: RequestRoute | None = None,
     ) -> None:
         # failed requests stay out of the latency histograms: an error
         # short-circuits the pipeline, so its timeline isn't a latency
@@ -1187,18 +1368,35 @@ class RequestScheduler:
         with self._stats_lock:
             self.stats.failed += 1
             state.stats.failed += 1
-        with self._done_lock:
-            self._done[uid] = CompletedRequest(
-                uid, None, tm.submit, now, error=exc, tenant=state.config.name
+        if route is not None and route.sink is not None:
+            with self._done_lock:
+                self._drained_ahead.add(uid)
+                self._done_event.set()
+            route.sink(uid, None, exc)
+        else:
+            t_submit = (
+                route.submitted_at
+                if route is not None and route.submitted_at is not None
+                else tm.submit
             )
-            self._done_event.set()
-        self._retire_admissions(state, 1)
+            with self._done_lock:
+                self._done[uid] = CompletedRequest(
+                    uid, None, t_submit, now, error=exc, tenant=state.config.name
+                )
+                self._done_event.set()
+        self._retire_admissions(
+            state, 1, nbytes=route.admitted_nbytes if route is not None else None
+        )
 
-    def _retire_admissions(self, state: _TenantState, count: int) -> None:
+    def _retire_admissions(
+        self, state: _TenantState, count: int, nbytes: int | None = None
+    ) -> None:
         """Return ``count`` completed requests' admission: the tenant's
-        pending slots and budget bytes (waking any blocked submitters)."""
+        pending slots and budget bytes (waking any blocked submitters).
+        ``nbytes`` overrides the per-item footprint for routed requests."""
         budget = state.budget if state.budget is not None else self.budget
-        nbytes = state.binding.item_nbytes
+        if nbytes is None:
+            nbytes = state.binding.item_nbytes
         if budget is not None and nbytes:
             for _ in range(count):
                 budget.release(nbytes)

@@ -26,7 +26,9 @@ from repro.runtime.telemetry import HistogramSummary
 
 # v2: added the ``latency`` section (per-stage / per-tenant streaming
 # histogram summaries from runtime.telemetry).
-SCHEMA_VERSION = 2
+# v3: added the ``cascade`` section (per-stage exit counters + measured
+# pass fractions of the cascade serving mode, progressive refetch).
+SCHEMA_VERSION = 3
 
 
 @dataclasses.dataclass(frozen=True)
@@ -102,6 +104,33 @@ class LatencySection:
 
 
 @dataclasses.dataclass(frozen=True)
+class CascadeStageStats:
+    """One cascade stage's serving counters."""
+
+    stage: int
+    items: int  # items that entered this stage
+    exits: int  # items whose prediction exited here
+    pass_fraction: float  # measured fraction of all items reaching this stage
+
+
+@dataclasses.dataclass(frozen=True)
+class CascadeSection:
+    """Cascade serving-mode counters (schema v3, progressive refetch).
+
+    ``stages`` carries per-stage exit counts and the measured pass
+    fractions (stage 0's is 1.0 by construction); ``refetched_items`` is
+    the number of pass-throughs internally resubmitted to the expensive
+    stage; ``factor`` / ``threshold`` are the cheap stage's current
+    scaled-decode factor and confidence threshold.
+    """
+
+    stages: tuple[CascadeStageStats, ...]
+    refetched_items: int
+    factor: int
+    threshold: float
+
+
+@dataclasses.dataclass(frozen=True)
 class RuntimeStats:
     """Versioned snapshot of the whole runtime (see module docstring)."""
 
@@ -116,6 +145,7 @@ class RuntimeStats:
     device_program: DeviceProgramSection | None = None
     split_decode: SplitDecodeSection | None = None
     latency: LatencySection | None = None
+    cascade: CascadeSection | None = None  # cascade serving mode (schema v3)
     # cold-compile observability (additive, still schema v2): request-path
     # compiles after warmup finished, and cumulative compile wall time
     programs_compiled_post_warmup: int = 0

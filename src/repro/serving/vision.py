@@ -46,6 +46,7 @@ import numpy as np
 from repro.core.planner import ModelSpec
 from repro.preprocessing.formats import ImageFormat, StoredImage
 from repro.runtime import DEFAULT_TENANT, CompletedRequest, RuntimeConfig, SmolRuntime
+from repro.runtime.query import AggregationQueryResult, Query, QueryResult
 
 
 @dataclasses.dataclass
@@ -100,20 +101,35 @@ class VisionServingEngine:
         self.stop()
 
     # --------------------------------------------------------------- serving
-    def submit(self, image: StoredImage | np.ndarray, tenant: str = DEFAULT_TENANT) -> int:
+    def submit(
+        self,
+        image: StoredImage | np.ndarray | Query,
+        tenant: str = DEFAULT_TENANT,
+    ) -> int | AggregationQueryResult:
+        """Submit one request — a bare image (legacy, deprecated) or a
+        typed query (:class:`~repro.runtime.ClassificationQuery` /
+        ``CascadeQuery`` / ``AggregationQuery``).  Aggregation queries run
+        synchronously and return their result directly; everything else
+        returns the uid and resolves through :meth:`drain`."""
         if not self._started:
             raise RuntimeError("start() the engine before submitting requests")
-        uid = self.runtime.submit(image, tenant=tenant)
+        out = self.runtime.submit(image, tenant=tenant)
         self._since_recal += 1
         if self.recalibrate_every and self._since_recal >= self.recalibrate_every:
             self._since_recal = 0
             # model-pinned tenants recalibrate their own split from their
             # own measurement window; everyone else moves the shared one
             self.runtime.serving_recalibrate(tenant if tenant != DEFAULT_TENANT else None)
-        return uid
+        return out
 
-    def drain(self, timeout: float | None = None) -> list[VisionResponse]:
-        return [self._to_response(r) for r in self.runtime.drain(timeout=timeout)]
+    def drain(self, timeout: float | None = None) -> list[VisionResponse | QueryResult]:
+        """Completed requests: typed queries come back as their
+        :class:`~repro.runtime.QueryResult` subclass, legacy bare-image
+        submissions as :class:`VisionResponse`."""
+        out: list[VisionResponse | QueryResult] = []
+        for r in self.runtime.drain(timeout=timeout):
+            out.append(r if isinstance(r, QueryResult) else self._to_response(r))
+        return out
 
     def serve_batch(
         self,

@@ -1,0 +1,354 @@
+"""Typed query API (paper §3.2 query classes) on the serving runtime.
+
+Covers the PR-9 redesign end to end: cascade serving with progressive
+rendition refetch (confident items exit from the cheap scaled decode,
+uncertain ones provably pay a second full-resolution decode), uid order
+and weighted fairness surviving internal refetches, aggregation queries
+closing their CI on the serving path, the one-shot deprecation alias for
+bare-image ``submit()``, and the v3 stats schema round-trip.
+"""
+
+import json
+import threading
+import time
+import warnings
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.planner import ModelSpec
+from repro.preprocessing.formats import ImageFormat, StoredImage
+from repro.runtime import (
+    AggregationQuery,
+    AggregationQueryResult,
+    CascadeQuery,
+    CascadeQueryResult,
+    CascadeStageSpec,
+    ClassificationQuery,
+    ClassificationResult,
+    RequestRoute,
+    RequestScheduler,
+    RuntimeConfig,
+    SmolRuntime,
+    TenantConfig,
+)
+
+INPUT = 32
+FMT_FULL = ImageFormat("jpeg", None, 95)
+FORMATS = [FMT_FULL]
+
+# bright images score class 0 with near-1.0 confidence; dark ones argmax to
+# class 1 at ~1/6 — a 0.6 threshold splits them deterministically
+BRIGHT, DARK = 210, 80
+STAGES = (CascadeStageSpec(threshold=0.6), CascadeStageSpec())
+
+
+def _flat(value: int) -> StoredImage:
+    return StoredImage.from_array(np.full((80, 80, 3), value, np.uint8), FORMATS)
+
+
+class CountingImage:
+    """StoredImage proxy counting pixel decodes vs coefficient decodes —
+    the witness that cascade stage 1 rides the scaled coefficient path and
+    only refetched items pay the full-resolution pixel decode."""
+
+    def __init__(self, inner: StoredImage):
+        self._inner = inner
+        self.pixel_decodes = 0
+        self.coeff_decodes = 0
+
+    @property
+    def variants(self):
+        return self._inner.variants
+
+    @property
+    def native_shape(self):
+        return self._inner.native_shape
+
+    def formats(self):
+        return self._inner.formats()
+
+    def nbytes(self, fmt):
+        return self._inner.nbytes(fmt)
+
+    def decode(self, fmt):
+        self.pixel_decodes += 1
+        return self._inner.decode(fmt)
+
+    def decode_to_coefficients(self, fmt):
+        self.coeff_decodes += 1
+        return self._inner.decode_to_coefficients(fmt)
+
+
+def _conf_model(x):
+    # class-0 logit rides the normalized image mean: bright inputs are
+    # confident, dark ones fall to class 1's zero logit at low confidence
+    m = jnp.mean(x, axis=(1, 2, 3))
+    z = jnp.zeros((x.shape[0], 7), jnp.float32)
+    return z.at[:, 0].set(m * 12.0)
+
+
+def _models():
+    return [
+        ModelSpec(
+            "conf", INPUT, exec_throughput=5_000.0,
+            accuracy_by_format={FMT_FULL.key: 0.95},
+        )
+    ]
+
+
+@pytest.fixture(scope="module")
+def calibration():
+    return [_flat(128) for _ in range(3)]
+
+
+def _runtime(calibration, **cfg_kwargs):
+    cfg = RuntimeConfig(batch_size=4, num_workers=2, max_wait_ms=1.0, **cfg_kwargs)
+    return SmolRuntime(
+        _models(),
+        FORMATS,
+        {"conf": _conf_model},
+        calibration=calibration,
+        config=cfg,
+        decode_time=lambda fmt: 2e-3,
+    )
+
+
+# ------------------------------------------------------------------ queries
+def test_query_validation():
+    img = _flat(128)
+    with pytest.raises(ValueError, match="2 stages"):
+        CascadeQuery(image=img, stages=(CascadeStageSpec(),))
+    with pytest.raises(ValueError, match="threshold"):
+        CascadeStageSpec(threshold=1.5)
+    with pytest.raises(ValueError, match="eps"):
+        AggregationQuery(corpus=[img], eps=0.0)
+    with pytest.raises(ValueError, match="delta"):
+        AggregationQuery(corpus=[img], eps=0.1, delta=1.0)
+
+
+def test_classification_query_returns_typed_result(calibration):
+    rt = _runtime(calibration)
+    rt.start_serving()
+    try:
+        uids = [rt.submit(ClassificationQuery(image=_flat(v))) for v in (BRIGHT, DARK)]
+        rt.flush(timeout=30.0)
+        done = rt.drain()
+    finally:
+        rt.stop_serving()
+    assert [r.uid for r in done] == uids
+    assert all(isinstance(r, ClassificationResult) and r.ok for r in done)
+    assert done[0].prediction == 0 and done[1].prediction == 1
+    assert done[0].scores.shape == (7,)
+
+
+def test_unknown_query_type_raises(calibration):
+    class WeirdQuery(ClassificationQuery.__mro__[1]):  # a bare Query subclass
+        pass
+
+    rt = _runtime(calibration)
+    rt.start_serving()
+    try:
+        with pytest.raises(TypeError, match="WeirdQuery"):
+            rt.submit(WeirdQuery())
+    finally:
+        rt.stop_serving()
+
+
+# ----------------------------------------------------------------- cascades
+def test_cascade_refetches_uncertain_items_exactly_once(calibration):
+    rt = _runtime(calibration)
+    rt.start_serving()
+    try:
+        items, expected_exit = [], []
+        for i in range(12):
+            bright = i % 3 != 0  # 8 confident, 4 uncertain
+            items.append(CountingImage(_flat(BRIGHT if bright else DARK)))
+            expected_exit.append(0 if bright else 1)
+        uids = [rt.submit(CascadeQuery(image=img, stages=STAGES)) for img in items]
+        rt.flush(timeout=60.0)
+        done = rt.drain()
+        stats = rt.stats()
+    finally:
+        rt.stop_serving()
+    # uid order survives the internal resubmissions
+    assert [r.uid for r in done] == uids
+    by_uid = {r.uid: r for r in done}
+    for uid, img, exp in zip(uids, items, expected_exit):
+        r = by_uid[uid]
+        assert isinstance(r, CascadeQueryResult) and r.ok
+        assert r.exit_stage == exp
+        assert r.refetched == (exp == 1)
+        # every item is scanned once from the scaled coefficient rendition;
+        # ONLY uncertain items additionally decode the full-res pixels
+        assert img.coeff_decodes == 1
+        assert img.pixel_decodes == (1 if exp == 1 else 0)
+        assert r.prediction == (0 if exp == 0 else 1)
+    sec = stats.cascade
+    assert sec is not None
+    assert sec.factor == 2  # 80px short side over a 37px resize target
+    assert (sec.stages[0].items, sec.stages[0].exits) == (12, 8)
+    assert (sec.stages[1].items, sec.stages[1].exits) == (4, 4)
+    assert sec.stages[1].pass_fraction == pytest.approx(4 / 12)
+    assert sec.refetched_items == 4
+    assert stats.scheduler.stats.refetched_items == 4
+    assert stats.tenants["default"].stats.refetched == 4
+
+
+def test_cascade_recalibrate_consumes_measured_window(calibration):
+    rt = _runtime(calibration)
+    rt.start_serving()
+    try:
+        for i in range(8):
+            img = _flat(BRIGHT if i % 2 else DARK)
+            rt.submit(CascadeQuery(image=img, stages=STAGES))
+        rt.flush(timeout=30.0)
+        rt.drain()
+        changed = rt.cascade_recalibrate()
+        # second call with nothing new measured: hold without an event
+        held = rt.cascade_recalibrate()
+    finally:
+        rt.stop_serving()
+    assert isinstance(changed, bool)
+    assert held is False
+    assert len(rt.cascade_recalibrations) == 1
+    event = rt.cascade_recalibrations[0]
+    assert event.threshold == 0.6
+    assert event.pass_rate == pytest.approx(0.5)
+    assert event.cheap_seconds_per_item > 0
+
+
+def test_refetch_preserves_weighted_fairness():
+    """4:1 tenant weights must hold when EVERY item refetches: the second
+    pass re-enters the same tenant's queue and bills its virtual time."""
+
+    def host_fn(item):
+        return np.full((4,), float(item), np.float32)
+
+    def device_fn(batch):
+        time.sleep(0.003)  # device stream is the bottleneck
+        return batch
+
+    sched = RequestScheduler(
+        host_fn,
+        device_fn,
+        (4,),
+        np.float32,
+        max_batch=4,
+        num_workers=2,
+        max_wait_ms=1.0,
+        tenants=[
+            TenantConfig("gold", weight=4.0, max_pending=16),
+            TenantConfig("bronze", weight=1.0, max_pending=16),
+        ],
+    )
+    sched.start()
+    expensive = sched.make_binding(host_fn, device_fn, (4,), np.float32)
+
+    def on_stage1(uid, out):
+        return None
+
+    def on_stage0(uid, out):
+        return float(out[0]), RequestRoute(
+            binding=expensive, on_result=on_stage1, stage=1
+        )
+
+    stop_at = time.perf_counter() + 1.0
+
+    def feeder(name):
+        i = 0
+        while time.perf_counter() < stop_at:
+            sched.submit(i, tenant=name, route=RequestRoute(on_result=on_stage0))
+            i += 1
+
+    try:
+        threads = [
+            threading.Thread(target=feeder, args=(n,)) for n in ("gold", "bronze")
+        ]
+        for t in threads:
+            t.start()
+        while time.perf_counter() < stop_at:
+            time.sleep(0.02)
+        counts = {n: sched.tenants[n].completed for n in ("gold", "bronze")}
+        for t in threads:
+            t.join()
+        sched.flush(timeout=30.0)
+    finally:
+        sched.stop()
+    ratio = counts["gold"] / max(1, counts["bronze"])
+    assert 3.0 <= ratio <= 5.0, f"4:1 weights gave ratio {ratio:.2f} ({counts})"
+    assert sched.stats.refetched_items > 0
+    assert sched.tenants["gold"].refetched > sched.tenants["bronze"].refetched
+
+
+# -------------------------------------------------------------- aggregation
+def test_aggregation_closes_ci_on_serving_path(calibration):
+    rt = _runtime(calibration)
+    rt.start_serving()
+    try:
+        rng = np.random.default_rng(7)
+        values = np.array([DARK] * 72 + [BRIGHT] * 168)
+        rng.shuffle(values)
+        corpus = [_flat(int(v)) for v in values]
+        res = rt.submit(
+            AggregationQuery(corpus=corpus, eps=0.2, min_samples=30, batch=30)
+        )
+    finally:
+        rt.stop_serving()
+    assert isinstance(res, AggregationQueryResult) and res.ok
+    # default value_fn is the argmax class: dark -> 1, bright -> 0, so the
+    # aggregate is the dark fraction (72/240 = 0.3)
+    assert res.ci_halfwidth <= 0.2
+    assert abs(res.estimate - 0.3) <= 0.2
+    assert res.num_specialized_invocations == len(corpus)
+    assert 30 <= res.num_target_invocations <= len(corpus)
+    assert res.latency > 0
+
+
+# --------------------------------------------------------- legacy alias
+def test_legacy_bare_submit_warns_exactly_once(calibration):
+    rt = _runtime(calibration)
+    rt.start_serving()
+    try:
+        with warnings.catch_warnings(record=True) as caught:
+            warnings.simplefilter("always")
+            for _ in range(5):
+                rt.submit(_flat(128))
+            rt.flush(timeout=30.0)
+            done = rt.drain()
+        dep = [w for w in caught if issubclass(w.category, DeprecationWarning)]
+    finally:
+        rt.stop_serving()
+    assert len(dep) == 1
+    assert "deprecated" in str(dep[0].message)
+    assert [d.uid for d in done] == list(range(5))
+    # legacy submissions still drain as raw CompletedRequest objects
+    assert all(not isinstance(d, ClassificationResult) for d in done)
+    assert all(d.error is None for d in done)
+
+
+# ------------------------------------------------------------- stats schema
+def test_stats_v3_roundtrip_with_cascade_section(calibration):
+    rt = _runtime(calibration)
+    rt.start_serving()
+    try:
+        rt.submit(CascadeQuery(image=_flat(BRIGHT), stages=STAGES))
+        rt.submit(CascadeQuery(image=_flat(DARK), stages=STAGES))
+        rt.flush(timeout=30.0)
+        rt.drain()
+        stats = rt.stats()
+    finally:
+        rt.stop_serving()
+    assert stats.schema_version == 3
+    d = stats.to_dict()
+    json.dumps(d)  # wire-safe end to end
+    assert d["schema_version"] == 3
+    assert d["cascade"]["refetched_items"] == 1
+    assert d["cascade"]["factor"] == 2
+    assert d["cascade"]["threshold"] == 0.6
+    assert d["cascade"]["stages"][0]["exits"] == 1
+    assert d["cascade"]["stages"][1]["items"] == 1
+    # dict-style access still resolves through the deprecation shim
+    with pytest.warns(DeprecationWarning, match="stats.cascade"):
+        assert stats["cascade"] is stats.cascade
