@@ -891,9 +891,11 @@ def _run_coldstart_leg(args) -> dict:
     scheduler.  Each gets its own model closure, so each owns a fresh jit
     cache — ``warmup="off"`` pays its jit trace + XLA compile on the first
     request batch (the cold-start tail this PR kills), ``warmup="full"``
-    pays it inside ``start_serving()`` instead, where the AOT program set
-    compiles and executes every batch bucket before the first submit.  The
-    startup cost is reported, the gates compare first-batch latency to the
+    pays it at startup instead: the max-batch bucket warms inside
+    ``start_serving()`` and the rest of the AOT program set warms on the
+    background thread, with ``wait_warm()`` marking full readiness.  Both
+    the inline startup cost and the full-readiness time are reported, the
+    gates compare first-batch latency (measured from readiness) to the
     steady-state p50 of the remaining batches, and ``warmup=full`` must
     leave ``programs_compiled_post_warmup == 0``.
     """
@@ -921,8 +923,13 @@ def _run_coldstart_leg(args) -> dict:
             config=RuntimeConfig(batch_size=batch, num_workers=2, warmup=warmup),
         )
         t0 = time.perf_counter()
-        runtime.start_serving()  # warmup=full compiles + executes the set here
+        runtime.start_serving()  # warmup=full warms max-batch inline here
         startup_s = time.perf_counter() - t0
+        # the rest of the bucket set warms on the background thread; the
+        # first-batch-vs-p50 gate is about the request path being
+        # compile-free, so measure from full readiness (no-op for "off")
+        runtime.wait_warm(timeout=120.0)
+        ready_s = time.perf_counter() - t0
         lat = []
         try:
             for b in range(n_batches):
@@ -937,6 +944,7 @@ def _run_coldstart_leg(args) -> dict:
             runtime.stop_serving()
         return {
             "startup_s": startup_s,
+            "ready_s": ready_s,
             "lat": lat,
             "post_compiles": runtime.programs_compiled_post_warmup,
             "compile_seconds": runtime.program_compile_seconds_total,
@@ -950,6 +958,7 @@ def _run_coldstart_leg(args) -> dict:
         "batch": batch,
         "n_batches": n_batches,
         "warm_startup_s": round(warm["startup_s"], 3),
+        "warm_ready_s": round(warm["ready_s"], 3),
         "cold_startup_s": round(cold["startup_s"], 3),
         "warm_first_batch_ms": round(warm["lat"][0] * 1e3, 2),
         "warm_steady_p50_ms": round(warm_p50 * 1e3, 2),
@@ -1066,6 +1075,113 @@ def _run_overlap_leg(args) -> dict:
         "db_speedup": round(tput_db / tput_sync, 3) if tput_sync else 0.0,
         "stage_spans": len(stages),
         "stage_spans_overlapping_dispatch": overlapped,
+    }
+
+
+def _run_hot_corpus_leg(args) -> dict:
+    """Rendition cache over a hot corpus: repeat epochs vs cold decode.
+
+    The paper's serving scenario reruns queries over the same stored
+    corpus, paying the host decode again on every epoch.  This leg runs
+    the decode-bound default workload three ways, interleaved best-of-2:
+
+    * **off** — rendition cache disabled (the PR-9-shaped hot path);
+    * **hot** — cache enabled, corpus already resident (epoch 2+): every
+      host stage is a cache hit, decode drops off the critical path;
+    * **miss** — cache enabled but every epoch submits *fresh* item
+      objects, so every lookup misses and pays lookup + admission on top
+      of the decode.  This bounds the cache machinery's overhead when it
+      never pays off.
+
+    Gates: hot >= 2x off (smoke: breakage-detector 1.3x) at *identical
+    predictions*; miss >= 0.98x off (the <=2% overhead bound; smoke
+    relaxes to 0.85 for shared-runner jitter); resident bytes stay within
+    the configured MemoryBudget child at all times (the cache-off run
+    allocating nothing at all is unit-tested, not timed).
+    """
+    import time
+
+    input_size = 96
+    decode_short = round(input_size * 256 / 224)
+    fmt = ImageFormat("pjpeg", decode_short, args.quality)
+    n = 32 if args.smoke else 64
+    corpus = make_corpus(n, args.image_size, [fmt], seed=23)
+    model_fn = make_model(input_size, width=args.model_width)
+    exec_tput = SmolRuntime.measure_exec_throughput(
+        model_fn, input_size, batch_size=args.batch_size
+    )
+    cache_bytes = 256 << 20
+
+    def rt_for(cache):
+        models = [
+            ModelSpec(
+                "bench-cnn",
+                input_size,
+                exec_throughput=exec_tput,
+                accuracy_by_format={fmt.key: 1.0},
+            )
+        ]
+        return SmolRuntime(
+            models,
+            [fmt],
+            {"bench-cnn": model_fn},
+            calibration=corpus[:8],
+            config=RuntimeConfig(
+                batch_size=args.batch_size,
+                num_workers=2,
+                recal_workers=False,
+                memory=MemoryConfig(rendition_cache_bytes=cache),
+            ),
+        )
+
+    rt_off, rt_on, rt_miss = rt_for(None), rt_for(cache_bytes), rt_for(cache_bytes)
+    eng_off, eng_on, eng_miss = rt_off.engine(), rt_on.engine(), rt_miss.engine()
+
+    def fresh_corpus():
+        # same encoded bytes, new identities: every lookup misses, every
+        # admission churns — the cache's worst case
+        return [StoredImage(im.variants, im.native_shape) for im in corpus]
+
+    # compile + warm outside the clock; the on-leg warm pass also admits
+    # the full corpus so its timed epochs are pure hits
+    outs_off, _ = eng_off.run(corpus)
+    outs_cold, _ = eng_on.run(corpus)
+    eng_miss.run(corpus[: 2 * args.batch_size], return_outputs=False)
+
+    def ips(engine, items):
+        t0 = time.perf_counter()
+        engine.run(items, return_outputs=False)
+        return len(items) / (time.perf_counter() - t0)
+
+    off_ips = hot_ips = miss_ips = 0.0
+    for _ in range(2):  # interleave so box noise lands on every leg
+        off_ips = max(off_ips, ips(eng_off, corpus))
+        hot_ips = max(hot_ips, ips(eng_on, corpus))
+        miss_ips = max(miss_ips, ips(eng_miss, fresh_corpus()))
+    outs_hot, _ = eng_on.run(corpus)
+
+    cs = rt_on.stats().cache
+    preds_match = all(
+        int(np.argmax(np.asarray(a))) == int(np.argmax(np.asarray(b)))
+        and int(np.argmax(np.asarray(a))) == int(np.argmax(np.asarray(c)))
+        for a, b, c in zip(outs_off, outs_cold, outs_hot)
+    )
+    return {
+        "items": n,
+        "image_size": args.image_size,
+        "cache_bytes": cache_bytes,
+        "off_ips": round(off_ips, 2),
+        "hot_ips": round(hot_ips, 2),
+        "miss_ips": round(miss_ips, 2),
+        "hot_speedup": round(hot_ips / off_ips, 3) if off_ips else 0.0,
+        "miss_frac_of_off": round(miss_ips / off_ips, 3) if off_ips else 0.0,
+        "predictions_match": preds_match,
+        "cache_hits": cs.hits,
+        "cache_admitted": cs.admitted,
+        "cache_evictions": cs.evictions,
+        "cache_resident_bytes": cs.resident_bytes,
+        "cache_within_budget": 0 < cs.resident_bytes <= cs.capacity_bytes,
+        "cache_seconds_saved": round(cs.seconds_saved, 4),
     }
 
 
@@ -1206,6 +1322,9 @@ def main(argv=None) -> int:
     # ---- dispatch overlap: double-buffered vs synchronous staging ---------
     overlap_leg = _run_overlap_leg(args)
 
+    # ---- hot corpus: rendition cache repeat-epoch speedup + overhead ------
+    hot_corpus_leg = _run_hot_corpus_leg(args)
+
     # the typed RuntimeStats schema is what dashboards consume — read the
     # balanced runtime's snapshot through it rather than an ad-hoc dict
     rstats = bal_runtime.stats()
@@ -1235,6 +1354,11 @@ def main(argv=None) -> int:
         # mode expectation is well above 1.3x; smoke runners time-share the
         # decode pool, so the smoke gate is a breakage detector
         "cascade_speedup": 1.05 if args.smoke else 1.3,
+        # hot corpus: a cache hit skips the whole decode-bound host stage,
+        # so full mode expects >=2x; the all-miss leg pays lookup+admission
+        # on top of the decode, bounded at 2% (smoke runners jitter more)
+        "hot_corpus_speedup": 1.3 if args.smoke else 2.0,
+        "hot_corpus_miss_tol": 0.85 if args.smoke else 0.98,
     }
     pooled_ge_unpooled = pooled_sum >= thr["pooled_tol"] * unpooled_sum
     device_gate = device_leg["fused_speedup"] >= (
@@ -1331,6 +1455,19 @@ def main(argv=None) -> int:
             if cores >= 2
             else True
         ),
+        # acceptance: a hot corpus serves >= 2x the cold decode rate from
+        # the rendition cache (full mode) ...
+        "hot_corpus_cached_ge_2x_cold": (
+            hot_corpus_leg["hot_speedup"] >= thr["hot_corpus_speedup"]
+        ),
+        # ... at bitwise-stable predictions vs the cacheless runtime
+        "hot_corpus_predictions_match": hot_corpus_leg["predictions_match"],
+        # acceptance: all-miss traffic pays <= 2% for the cache machinery
+        "hot_corpus_miss_overhead_le_2pct": (
+            hot_corpus_leg["miss_frac_of_off"] >= thr["hot_corpus_miss_tol"]
+        ),
+        # acceptance: cache residency stays inside its MemoryBudget child
+        "hot_corpus_cache_within_budget": hot_corpus_leg["cache_within_budget"],
     }
     result = {
         "benchmark": "runtime_end_to_end",
@@ -1358,6 +1495,7 @@ def main(argv=None) -> int:
         "latency": latency_leg,
         "coldstart": coldstart_leg,
         "overlap": overlap_leg,
+        "hot_corpus": hot_corpus_leg,
         "stats_schema_version": rstats.schema_version,
         "device_program_serving": {
             "backend": rstats.device_program.backend,

@@ -185,6 +185,19 @@ def coeff_device_flops(geom: CoeffGeometry, factor: int = 1) -> float:
     return flops
 
 
+def cached_host_seconds(seconds: float, cache_hit_rate: float) -> float:
+    """Cache-aware host-stage cost: the expected seconds/item of a host
+    stage whose product (staged coefficient tensor, transcoded pixel
+    rendition) is resident in the rendition cache for ``cache_hit_rate``
+    of the traffic.  A hit skips the stage entirely, so the expectation is
+    the miss fraction of the cold cost — which is what lets a plan
+    servable from resident renditions beat a nominally-cheaper cold plan
+    in the planner's ranking.
+    """
+    rate = min(max(float(cache_hit_rate), 0.0), 1.0)
+    return seconds * (1.0 - rate)
+
+
 ESTIMATORS: dict[str, Callable[..., float]] = {
     "blazeit": estimate_blazeit,
     "tahoma": estimate_tahoma,

@@ -530,16 +530,26 @@ class ProgramSet:
     retired result.  ``warm()`` (``RuntimeConfig.warmup="full"``) executes
     each entry once on zeros, moving every first-dispatch compile into
     startup.
+
+    ``require_ready=True`` makes :meth:`program_for` serve only *warmed*
+    buckets until :meth:`warm` has covered the whole set — the background-
+    warmer contract: a dispatcher never triggers a request-path compile
+    while warmup is still running; a ragged batch falls forward to the
+    smallest ready covering bucket (the warmer runs largest-first, so the
+    full-size program is ready before serving starts and always covers).
     """
 
     programs: dict[int, DevicePreprocProgram]  # bucket -> program, ascending
     geometry: tuple = ()  # the plan's staging-geometry bin (shape, dtype)
     device: Any = None
+    # serve only warmed buckets until warm() completes (background warmer)
+    require_ready: bool = False
 
     def __post_init__(self):
         if not self.programs:
             raise ValueError("ProgramSet needs at least one program")
         self.programs = dict(sorted(self.programs.items()))
+        self._warm_done = not self.require_ready
 
     @property
     def buckets(self) -> tuple[int, ...]:
@@ -556,27 +566,55 @@ class ProgramSet:
                 return b
         return None
 
+    @staticmethod
+    def _is_ready(prog: DevicePreprocProgram) -> bool:
+        """Dispatched at least once and not mid-warm — no compile risk."""
+        return prog.dispatch_count > 0 and not prog._warming
+
+    @property
+    def fully_warm(self) -> bool:
+        """True once every bucket is safe to dispatch without compiling."""
+        return self._warm_done or all(self._is_ready(p) for p in self.programs.values())
+
     def program_for(self, n: int) -> tuple[DevicePreprocProgram, int] | None:
-        """(program, bucket) dispatching ``n`` staged rows, or None."""
-        b = self.bucket_for(n)
-        if b is None:
-            return None
-        return self.programs[b], b
+        """(program, bucket) dispatching ``n`` staged rows, or None.
+
+        Under ``require_ready`` (background warmup still running) only
+        warmed buckets are served: the smallest *ready* bucket covering
+        ``n``.  None means no ready bucket covers — the caller falls back
+        to its plain per-replica program.
+        """
+        if self._warm_done:
+            b = self.bucket_for(n)
+            if b is None:
+                return None
+            return self.programs[b], b
+        for b, prog in self.programs.items():
+            if b >= n and self._is_ready(prog):
+                return prog, b
+        return None
 
     def keys(self) -> tuple:
         """Program-cache keys of every entry (for pin/unpin bookkeeping)."""
         return tuple(p.key for p in self.programs.values())
 
-    def warm(self) -> int:
+    def warm(self, buckets: tuple[int, ...] | None = None) -> int:
         """Execute each not-yet-dispatched entry once on zeros.
 
         The first dispatch of a jitted program traces and XLA-compiles
         synchronously; running it here (blocking until ready) is what turns
         "compiled at startup" into "never compiles on the request path".
-        Returns the number of programs warmed.
+        ``buckets`` restricts the pass (the facade warms the full-size
+        bucket inline at startup and hands the rest to the background
+        warmer, largest-first).  Returns the number of programs warmed.
         """
         warmed = 0
-        for bucket, prog in self.programs.items():
+        targets = (
+            self.programs.items()
+            if buckets is None
+            else [(b, self.programs[b]) for b in buckets if b in self.programs]
+        )
+        for bucket, prog in targets:
             if prog.dispatch_count:
                 continue
             zeros = np.zeros(
@@ -588,6 +626,8 @@ class ProgramSet:
             finally:
                 prog._warming = False
             warmed += 1
+        if all(p.dispatch_count for p in self.programs.values()):
+            self._warm_done = True
         return warmed
 
 

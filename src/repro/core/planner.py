@@ -149,6 +149,7 @@ class Planner:
         split_decode: str = "off",
         entropy_decode_time: Callable[[ImageFormat], float] | None = None,
         coeff_geometry: "Callable[[ImageFormat], object | None] | None" = None,
+        cache_hit_rate: Callable[[ImageFormat], float] | None = None,
     ):
         self.models = list(models)
         self.formats = list(formats)
@@ -177,7 +178,22 @@ class Planner:
         self.split_decode = split_decode
         self.entropy_decode_time = entropy_decode_time
         self.coeff_geometry = coeff_geometry
+        # rendition-cache term: measured hit fraction per format (0.0 when
+        # no cache is configured).  The host-stage costs below are
+        # discounted by it, so a plan whose renditions are resident beats
+        # a nominally-cheaper cold plan.  NOTE: hit rates evolve with the
+        # workload — generate() memoizes, so callers wanting fresh
+        # cache-aware rankings go through replan()/cache_aware_throughput.
+        self.cache_hit_rate = cache_hit_rate
         self._generated: list[QueryPlan] | None = None  # inputs are immutable
+
+    def _cached_host_time(self, fmt: ImageFormat, seconds: float) -> float:
+        """Host-stage seconds/item net of the rendition-cache hit rate."""
+        if self.cache_hit_rate is None:
+            return seconds
+        from repro.core.cost_model import cached_host_seconds
+
+        return cached_host_seconds(seconds, self.cache_hit_rate(fmt))
 
     def _place_and_estimate(
         self,
@@ -191,6 +207,10 @@ class Planner:
         device_ops_per_sec: float | None = None,
     ) -> QueryPlan:
         """Shared tail of planning: split the chain, estimate, wrap."""
+        # cache-aware term: repeat traffic over a hot corpus serves the
+        # host stage's product straight from the rendition cache, so the
+        # expected decode cost is the miss fraction of the cold cost
+        t_decode = self._cached_host_time(fmt, t_decode)
         placement = placement_mod.choose_split(
             dag_plan.ops,
             self.decoded_meta(fmt),
@@ -257,7 +277,10 @@ class Planner:
         option = placement_mod.choose_coeff_option(
             dag_plan.ops,
             geom,
-            host_entropy_time=self.entropy_decode_time(fmt),
+            # the staged coefficient tensor is exactly what the rendition
+            # cache holds for this (format, layout): discount the entropy
+            # stage by the measured hit rate
+            host_entropy_time=self._cached_host_time(fmt, self.entropy_decode_time(fmt)),
             dnn_device_time=t_dnn,
             device_ops_per_sec=device_rate,
             device_dispatch_overhead_s=self.device_dispatch_overhead_s,

@@ -59,14 +59,33 @@ PAPER_IMAGE_FORMATS = [
 
 
 class StoredImage:
-    """One logical image stored in several physical encodings."""
+    """One logical image stored in several physical encodings.
 
-    def __init__(self, variants: dict[ImageFormat, bytes], native_shape: tuple[int, int, int]):
+    ``uid`` is the corpus-level identity of the logical asset (a stable
+    key across repeat queries — think the database row id).  When set, the
+    runtime's rendition cache may key materialized physical
+    representations (staged coefficient tensors, transcoded pixel
+    renditions) on it; ``None`` falls back to object identity, which the
+    cache guards with a weakref finalizer.
+    """
+
+    def __init__(
+        self,
+        variants: dict[ImageFormat, bytes],
+        native_shape: tuple[int, int, int],
+        uid: int | str | None = None,
+    ):
         self.variants = variants
         self.native_shape = native_shape
+        self.uid = uid
 
     @classmethod
-    def from_array(cls, img: np.ndarray, formats: list[ImageFormat] | None = None) -> "StoredImage":
+    def from_array(
+        cls,
+        img: np.ndarray,
+        formats: list[ImageFormat] | None = None,
+        uid: int | str | None = None,
+    ) -> "StoredImage":
         formats = formats or PAPER_IMAGE_FORMATS
         variants: dict[ImageFormat, bytes] = {}
         for fmt in formats:
@@ -90,7 +109,7 @@ class StoredImage:
                 variants[fmt] = png.encode(src)
             else:
                 raise ValueError(f"unknown codec {fmt.codec}")
-        return cls(variants, tuple(img.shape))
+        return cls(variants, tuple(img.shape), uid=uid)
 
     def formats(self) -> list[ImageFormat]:
         return list(self.variants)

@@ -29,6 +29,7 @@ Partial-decoding features (paper §6.4, Table 4):
 from __future__ import annotations
 
 import dataclasses
+import functools
 import struct
 
 import numpy as np
@@ -59,15 +60,22 @@ class JpegHeader:
         return len(self.band_offsets)
 
 
+@functools.lru_cache(maxsize=1024)
+def _chroma_grid(n_br: int, n_bc: int, subsample: bool) -> tuple[int, int]:
+    if subsample:
+        return (n_br + 1) // 2, (n_bc + 1) // 2
+    return n_br, n_bc
+
+
 def chroma_grid(hdr) -> tuple[int, int]:
     """Chroma (block_rows, block_cols) — equals the luma grid for 4:4:4.
 
     Accepts anything with ``n_br``/``n_bc``/``subsample`` attributes (a
     :class:`JpegHeader` or the cost model's ``CoeffGeometry``); this is
-    THE 4:2:0 grid formula — staging, decode and costing all call it."""
-    if hdr.subsample:
-        return (hdr.n_br + 1) // 2, (hdr.n_bc + 1) // 2
-    return hdr.n_br, hdr.n_bc
+    THE 4:2:0 grid formula — staging, decode and costing all call it.
+    Memoized on the scalar grid key: the host staging hot path re-derives
+    the same grid for every item of a shape-uniform corpus."""
+    return _chroma_grid(hdr.n_br, hdr.n_bc, bool(hdr.subsample))
 
 
 def _plane_grids(hdr: JpegHeader) -> list[tuple[int, int]]:
@@ -317,6 +325,21 @@ def decode_to_coefficients(
     return hdr, planes_zz, qtables, row_ranges
 
 
+@functools.lru_cache(maxsize=1024)
+def _staged_coeff_shape(
+    channels: int, n_br: int, n_bc: int, subsample: bool, layout: str
+) -> tuple[int, ...]:
+    if layout == "padded":
+        return (channels, n_br, n_bc, 64)
+    if layout == "packed":
+        n = n_br * n_bc
+        if channels == 3:
+            cbr, cbc = _chroma_grid(n_br, n_bc, subsample)
+            n += 2 * cbr * cbc
+        return (n, 64)
+    raise ValueError(f"layout must be 'padded' or 'packed', got {layout!r}")
+
+
 def staged_coeff_shape(hdr: JpegHeader, layout: str = "padded") -> tuple[int, ...]:
     """Shape of the single int16 staging tensor for the split-decode path.
 
@@ -326,16 +349,14 @@ def staged_coeff_shape(hdr: JpegHeader, layout: str = "padded") -> tuple[int, ..
     the planes' blocks: ``(n_blocks_total, 64)`` — compact for 4:2:0
     (chroma is stored at its native quarter-density) at the price of the
     device program slicing the planes back apart by static offsets.
+
+    Memoized per (channels, grid, subsample, layout): the staging hot
+    path calls this once per item, and a shape-uniform corpus resolves to
+    one cached tuple instead of re-deriving the grid arithmetic.
     """
-    if layout == "padded":
-        return (hdr.channels, hdr.n_br, hdr.n_bc, 64)
-    if layout == "packed":
-        n = hdr.n_br * hdr.n_bc
-        if hdr.channels == 3:
-            cbr, cbc = chroma_grid(hdr)
-            n += 2 * cbr * cbc
-        return (n, 64)
-    raise ValueError(f"layout must be 'padded' or 'packed', got {layout!r}")
+    return _staged_coeff_shape(
+        hdr.channels, hdr.n_br, hdr.n_bc, bool(hdr.subsample), layout
+    )
 
 
 def stage_coefficients(

@@ -45,7 +45,8 @@ from repro.preprocessing.formats import ImageFormat, StoredImage
 from repro.preprocessing.ops import TensorMeta
 from repro.core.aggregation import control_variate_aggregate
 from repro.core.cascade import _softmax_conf
-from repro.runtime.memory import MemoryConfig
+from repro.runtime.memory import MemoryBudget, MemoryConfig
+from repro.runtime.rendition_cache import RenditionCache
 from repro.runtime.query import (
     AggregationQuery,
     AggregationQueryResult,
@@ -75,6 +76,8 @@ from repro.runtime.scheduler import (
     TenantConfig,
 )
 from repro.runtime.stats import (
+    CacheSection,
+    CacheTenantSection,
     CascadeSection,
     CascadeStageStats,
     DeviceProgramSection,
@@ -515,6 +518,38 @@ class SmolRuntime:
         self._agg_targets: dict[str, tuple] = {}
         self._legacy_submit_warned = False
         self.cascade_recalibrations: list[CascadeRecalibrationEvent] = []
+        # --- rendition cache (corpus-level materialized representations) ---
+        # The serving byte budget is built once here (not per start_serving)
+        # so the cache capacity can be carved out of the SAME hierarchy the
+        # scheduler admits against: cache bytes compete for unfloored
+        # headroom under the configured weight and can never eat a tenant's
+        # guaranteed floor.  With the cache off, nothing is allocated and
+        # every host stage compiles to its cacheless closure.
+        mem = cfg.memory
+        self._serving_budget = mem.build_budget()
+        self._cache_budget: MemoryBudget | None = None
+        self._rendition_cache: RenditionCache | None = None
+        if mem.rendition_cache_bytes:
+            if self._serving_budget is not None:
+                self._cache_budget = self._serving_budget.child(
+                    "rendition_cache",
+                    weight=mem.rendition_cache_weight,
+                    max_bytes=mem.rendition_cache_bytes,
+                )
+            else:
+                self._cache_budget = MemoryBudget(
+                    mem.rendition_cache_bytes, name="rendition_cache"
+                )
+            self._rendition_cache = RenditionCache(
+                self._cache_budget,
+                telemetry=self.telemetry,
+                min_utility=mem.rendition_cache_min_utility,
+            )
+        # --- background warmer (ProgramSet.warm off the startup path) ---
+        self._warm_cond = threading.Condition()
+        self._warm_queue: list[Any] = []
+        self._warm_pending = 0
+        self._warm_thread: threading.Thread | None = None
 
     # ----------------------------------------------------------- calibration
     def _decode_time(self, fmt: ImageFormat) -> float:
@@ -554,6 +589,17 @@ class SmolRuntime:
                 self.calibration, fmt
             )
         return self._entropy_time_cache[fmt.key]
+
+    def _cache_hit_rate(self, fmt: ImageFormat) -> float:
+        """Measured rendition-cache hit fraction for ``fmt`` (0.0 when the
+        cache is off or cold) — the planner's cache-aware discount."""
+        cache = self._rendition_cache
+        return cache.hit_rate(fmt.key) if cache is not None else 0.0
+
+    @property
+    def rendition_cache(self) -> RenditionCache | None:
+        """The corpus-level rendition cache (None when disabled)."""
+        return self._rendition_cache
 
     @staticmethod
     def measure_exec_throughput(
@@ -602,6 +648,9 @@ class SmolRuntime:
                 split_decode=self.config.device.split_decode,
                 entropy_decode_time=self._entropy_time,
                 coeff_geometry=self._coeff_geometry,
+                cache_hit_rate=(
+                    self._cache_hit_rate if self._rendition_cache is not None else None
+                ),
             )
         return self._planner
 
@@ -658,18 +707,54 @@ class SmolRuntime:
         out_shape = tuple(program.in_meta.shape)  # staged_coeff_shape(header, layout)
         out_dtype = np.dtype(program.in_meta.dtype)
         layout = coeff.layout
+        cache = self._rendition_cache
 
-        def host_fn(item):
-            if not hasattr(item, "decode_to_coefficients"):
-                raise TypeError("split decode requires StoredImage items with a jpeg variant")
-            hdr_i, planes_zz, _, _ = item.decode_to_coefficients(fmt)
-            arr = jpeg_mod.stage_coefficients(planes_zz, hdr_i, layout)
-            if arr.shape != out_shape:
-                raise ValueError(
-                    f"entropy stage produced {arr.shape}, expected {out_shape}; "
-                    "the corpus must be shape-uniform with the calibration set"
-                )
-            return arr
+        if cache is None:
+
+            def host_fn(item):
+                if not hasattr(item, "decode_to_coefficients"):
+                    raise TypeError(
+                        "split decode requires StoredImage items with a jpeg variant"
+                    )
+                hdr_i, planes_zz, _, _ = item.decode_to_coefficients(fmt)
+                arr = jpeg_mod.stage_coefficients(planes_zz, hdr_i, layout)
+                if arr.shape != out_shape:
+                    raise ValueError(
+                        f"entropy stage produced {arr.shape}, expected {out_shape}; "
+                        "the corpus must be shape-uniform with the calibration set"
+                    )
+                return arr
+
+        else:
+            # cache-aware host stage: the staged tensor is factor-invariant
+            # (full coefficient set, device math scales), so the entry is
+            # keyed without the factor and one admission serves every
+            # scaled-decode program of this (format, layout) — including a
+            # cascade's full-resolution stage-1 refetch.  The admission
+            # cost is the measured entropy-stage seconds a hit saves.
+            fmt_key = fmt.key
+            cost_s = self._entropy_time(fmt)
+
+            def host_fn(item):
+                if not hasattr(item, "decode_to_coefficients"):
+                    raise TypeError(
+                        "split decode requires StoredImage items with a jpeg variant"
+                    )
+                key = cache.coeff_key(item, fmt_key, layout)
+                if key is not None:
+                    hit = cache.get(key)
+                    if hit is not None and hit.shape == out_shape:
+                        return hit
+                hdr_i, planes_zz, _, _ = item.decode_to_coefficients(fmt)
+                arr = jpeg_mod.stage_coefficients(planes_zz, hdr_i, layout)
+                if arr.shape != out_shape:
+                    raise ValueError(
+                        f"entropy stage produced {arr.shape}, expected {out_shape}; "
+                        "the corpus must be shape-uniform with the calibration set"
+                    )
+                if key is not None:
+                    cache.put(key, arr, cost_s, item=item)
+                return arr
 
         return host_fn, program, out_shape, out_dtype
 
@@ -689,8 +774,15 @@ class SmolRuntime:
         model_fn = self.model_fns[plan.model.name]
 
         in_shape = tuple(in_meta.shape)
+        cache = self._rendition_cache
+        # cache key ingredient: the host chain's identity — the same stored
+        # item transcoded through a different host placement is a different
+        # pixel rendition
+        chain_sig = "|".join(repr(op) for op in host_ops)
+        cost_s = self._decode_time(fmt) if cache is not None else 0.0
+        fmt_key = fmt.key
 
-        def host_fn(item):
+        def stage_pixels(item):
             if hasattr(item, "decode"):
                 x = item.decode(fmt)
                 # enforce the shape contract at decode, not at the stage
@@ -712,6 +804,27 @@ class SmolRuntime:
                     "the corpus must be shape-uniform with the calibration set"
                 )
             return x
+
+        if cache is None:
+            host_fn = stage_pixels
+        else:
+
+            def host_fn(item):
+                # only stored items are cacheable (raw arrays have no
+                # corpus identity and already skipped the decode)
+                key = (
+                    cache.pixel_key(item, fmt_key, chain_sig)
+                    if hasattr(item, "decode")
+                    else None
+                )
+                if key is not None:
+                    hit = cache.get(key)
+                    if hit is not None and hit.shape == out_shape:
+                        return hit
+                x = stage_pixels(item)
+                if key is not None:
+                    cache.put(key, x, cost_s, item=item)
+                return x
 
         program = device_compiler.compile_device_program(
             device_ops,
@@ -913,8 +1026,14 @@ class SmolRuntime:
                     stacklevel=3,
                 )
             if self.config.warmup == "full":
+                # warm only the largest bucket on the caller's thread —
+                # serving can start on the full-size program immediately —
+                # and hand the rest to the background warmer.  The sets are
+                # built require_ready, so dispatchers fall back to a ready
+                # covering bucket instead of compiling mid-request.
                 for ps in program_sets:
-                    ps.warm()
+                    ps.warm(buckets=(ps.max_batch,))
+                    self._warm_async(ps)
         return CompiledPlan(
             plan, placement, host_fn, programs[0], out_shape, out_dtype,
             device_program=programs[0], coeff=used_coeff,
@@ -962,7 +1081,59 @@ class SmolRuntime:
             programs=programs,
             geometry=(tuple(full_program.in_meta.shape), full_program.in_meta.dtype),
             device=target,
+            # under warmup="full" the small buckets warm in the background;
+            # readiness gating preserves the zero-post-warmup-compile
+            # guarantee while they do
+            require_ready=self.config.warmup == "full",
         )
+
+    # ------------------------------------------------------- background warm
+    def _warm_async(self, ps) -> None:
+        """Queue ``ps``'s remaining buckets for the background warmer.
+
+        The warmer is one persistent daemon thread shared by every plan
+        this runtime compiles — warmup traffic is strictly sequential, so
+        concurrent XLA compiles never contend with request dispatches for
+        the device.
+        """
+        with self._warm_cond:
+            self._warm_queue.append(ps)
+            self._warm_pending += 1
+            if self._warm_thread is None:
+                self._warm_thread = threading.Thread(
+                    target=self._warm_loop, name="smol-warmup", daemon=True
+                )
+                self._warm_thread.start()
+            self._warm_cond.notify_all()
+
+    def _warm_loop(self) -> None:
+        while True:
+            with self._warm_cond:
+                while not self._warm_queue:
+                    self._warm_cond.wait()
+                ps = self._warm_queue.pop(0)
+            try:
+                ps.warm()
+            except Exception:  # pragma: no cover - backend-dependent
+                # a failed background compile must not kill the warmer; the
+                # affected bucket stays unready and dispatch falls back to
+                # a larger warmed bucket
+                pass
+            finally:
+                with self._warm_cond:
+                    self._warm_pending -= 1
+                    if self._warm_pending == 0:
+                        self._warm_cond.notify_all()
+
+    def wait_warm(self, timeout: float = 60.0) -> bool:
+        """Block until background bucket warmup has drained (True) or
+        ``timeout`` seconds elapsed (False).  Serving is already correct
+        before this returns — it gates only full-bucket-granularity
+        batching, not correctness."""
+        with self._warm_cond:
+            return self._warm_cond.wait_for(
+                lambda: self._warm_pending == 0, timeout=timeout
+            )
 
     def _release_program_sets(self, compiled: CompiledPlan | None) -> None:
         """Unpin a replaced plan's warm programs — pins live only while
@@ -1153,7 +1324,10 @@ class SmolRuntime:
                 max_pending=mem.max_pending,
                 admission=mem.admission,
                 admission_timeout_s=mem.admission_timeout_s,
-                budget=mem.build_budget(),
+                # the budget built at __init__ — the rendition cache is a
+                # child of the same hierarchy, so cache residency and
+                # in-flight admission share one accounting root
+                budget=self._serving_budget,
                 tenants=self.config.tenants,
                 num_replicas=len(targets),
                 replica_labels=[self._target_label(t) for t in targets],
@@ -1354,6 +1528,24 @@ class SmolRuntime:
         candidates = tuple(sorted({o.factor for o in options}))
         return compiled, compiled.coeff.factor, candidates
 
+    def _expensive_compiled(self, plan: QueryPlan) -> CompiledPlan:
+        """Full-resolution stage target for cascade/aggregation refetches.
+
+        Without the rendition cache this is the plan's own pixel path.
+        With it, the stage compiles as a *factor-1 coefficient* program
+        when the stream is eligible: the staged tensor is factor-invariant
+        and its cache key carries no factor, so a refetched item's host
+        stage is a pure hit on the entry the cheap scaled stage already
+        admitted — full resolution without a second entropy decode.
+        """
+        if self._rendition_cache is not None:
+            option = self._cheap_option(plan, 1)
+            if option is not None:
+                compiled = self._build_compiled(plan, plan.placement, coeff=option)
+                if compiled.coeff is not None:
+                    return compiled
+        return self._build_compiled(plan, plan.placement, coeff=None)
+
     def _cascade_ctx(self, tenant: str, query: CascadeQuery) -> _CascadeContext:
         stage0, stage1 = query.stages
         key = (tenant, stage0.model, stage1.model, stage0.threshold)
@@ -1363,10 +1555,12 @@ class SmolRuntime:
         cheap_plan = self._plan_for_model(stage0.model, tenant)
         exp_plan = self._plan_for_model(stage1.model, tenant)
         cheap, factor, candidates = self._cheap_compiled(cheap_plan)
-        # the expensive stage always decodes the full-resolution pixels —
-        # a different compiled target (and ProgramSet bucket family) than
-        # the cheap scaled program, so refetches land on warm programs
-        expensive = self._build_compiled(exp_plan, exp_plan.placement, coeff=None)
+        # the expensive stage serves the full-resolution tensor — a
+        # different compiled target (and ProgramSet bucket family) than the
+        # cheap scaled program, so refetches land on warm programs.  With
+        # the rendition cache on it compiles factor-1 split decode, whose
+        # host stage reuses the stage-0 cached coefficient entry.
+        expensive = self._expensive_compiled(exp_plan)
         recal = CascadeRecalibrator(
             factor,
             stage0.threshold,
@@ -1495,7 +1689,7 @@ class SmolRuntime:
         if ctx is None:
             plan = self.tenant_plan(tenant)
             cheap, _factor, _cands = self._cheap_compiled(plan)
-            expensive = self._build_compiled(plan, plan.placement, coeff=None)
+            expensive = self._expensive_compiled(plan)
             ctx = (cheap, expensive, self._binding_for(cheap), self._binding_for(expensive))
             self._agg_targets[tenant] = ctx
         _cheap, _expensive, cheap_binding, exp_binding = ctx
@@ -1744,6 +1938,27 @@ class SmolRuntime:
                 factor=latest.factor,
                 threshold=latest.threshold,
             )
+        cache_section = None
+        if self._rendition_cache is not None:
+            cs = self._rendition_cache.stats()
+            cache_section = CacheSection(
+                hits=cs.hits,
+                misses=cs.misses,
+                evictions=cs.evictions,
+                admitted=cs.admitted,
+                rejected=cs.rejected,
+                resident_bytes=cs.resident_bytes,
+                resident_entries=cs.resident_entries,
+                capacity_bytes=cs.capacity_bytes,
+                bytes_saved=cs.bytes_saved,
+                seconds_saved=cs.seconds_saved,
+                tenants={
+                    name: CacheTenantSection(
+                        hits=t.hits, misses=t.misses, bytes_saved=t.bytes_saved
+                    )
+                    for name, t in cs.tenants.items()
+                },
+            )
         digest = self.telemetry.summary()
         latency = LatencySection(stages=digest["stages"], tenants=digest["tenants"])
         return RuntimeStats(
@@ -1758,6 +1973,7 @@ class SmolRuntime:
             split_decode=split_decode,
             latency=latency,
             cascade=cascade_section,
+            cache=cache_section,
             programs_compiled_post_warmup=self._programs_compiled_post_warmup,
             program_compile_seconds_total=self._program_compile_seconds,
         )
@@ -1820,4 +2036,35 @@ class SmolRuntime:
             f"smol_program_compile_seconds_total "
             f"{self._program_compile_seconds:.6f}"
         )
+        if self._rendition_cache is not None:
+            cs = self._rendition_cache.stats()
+            extra.append(
+                "# HELP smol_rendition_cache_events_total Rendition-cache "
+                "events by kind."
+            )
+            extra.append("# TYPE smol_rendition_cache_events_total counter")
+            for event, count in (
+                ("hit", cs.hits),
+                ("miss", cs.misses),
+                ("eviction", cs.evictions),
+                ("admission", cs.admitted),
+                ("rejection", cs.rejected),
+            ):
+                extra.append(
+                    f'smol_rendition_cache_events_total{{event="{event}"}} {count}'
+                )
+            extra.append(
+                "# HELP smol_rendition_cache_resident_bytes Bytes resident "
+                "in the rendition cache."
+            )
+            extra.append("# TYPE smol_rendition_cache_resident_bytes gauge")
+            extra.append(f"smol_rendition_cache_resident_bytes {cs.resident_bytes}")
+            extra.append(
+                "# HELP smol_rendition_cache_saved_seconds_total Measured "
+                "host decode seconds cache hits skipped."
+            )
+            extra.append("# TYPE smol_rendition_cache_saved_seconds_total counter")
+            extra.append(
+                f"smol_rendition_cache_saved_seconds_total {cs.seconds_saved:.6f}"
+            )
         return self.telemetry.metrics_text(extra)

@@ -68,12 +68,38 @@ class MemoryConfig:
     # outstanding H2D staging buffers for double-buffered dispatch; 0 = auto
     # (the engine sizes the pool to its dispatch ring + 1)
     transfer_slots: int = 0
+    # corpus-level rendition cache (runtime/rendition_cache.py): byte cap
+    # on materialized physical representations (staged coefficient tensors,
+    # transcoded pixel renditions).  None/0 = cache off — the serving hot
+    # path is then byte-identical to the cacheless runtime (no lookups, no
+    # allocations).  When budget_bytes is also set, the cache capacity is a
+    # MemoryBudget child of the serving hierarchy: cache bytes compete for
+    # unfloored headroom under rendition_cache_weight and can never eat a
+    # tenant's guaranteed floor.
+    rendition_cache_bytes: int | None = None
+    rendition_cache_weight: float = 1.0
+    # cost-aware admission floor: measured host seconds a hit saves, per
+    # MiB of entry; 0.0 admits anything that fits the byte budget
+    rendition_cache_min_utility: float = 0.0
 
     def __post_init__(self):
         if self.admission not in ("block", "reject"):
             raise ValueError(f"admission must be 'block' or 'reject', got {self.admission!r}")
         if self.transfer_slots < 0:
             raise ValueError(f"transfer_slots must be >= 0, got {self.transfer_slots}")
+        if self.rendition_cache_bytes is not None and self.rendition_cache_bytes < 0:
+            raise ValueError(
+                f"rendition_cache_bytes must be >= 0 or None, got {self.rendition_cache_bytes}"
+            )
+        if self.rendition_cache_weight <= 0:
+            raise ValueError(
+                f"rendition_cache_weight must be positive, got {self.rendition_cache_weight}"
+            )
+        if self.rendition_cache_min_utility < 0:
+            raise ValueError(
+                "rendition_cache_min_utility must be >= 0, "
+                f"got {self.rendition_cache_min_utility}"
+            )
 
     def build_pool(self) -> "BufferPool | None":
         return (
@@ -543,6 +569,24 @@ class MemoryBudget:
             )
             self._children.append(kid)
             return kid
+
+    def remove_child(self, kid: "MemoryBudget") -> None:
+        """Detach ``kid``, returning its floor/weight to the hierarchy.
+
+        Supports a long-lived root whose consumers come and go — e.g. a
+        serving session's tenant children being replaced across restarts
+        while a rendition-cache child persists.  The child must be drained
+        (nothing in flight) or its ancestor accounting would leak.
+        """
+        with self._cond:
+            if kid._in_flight:
+                raise RuntimeError(
+                    f"cannot remove child {kid.name!r} with "
+                    f"{kid._in_flight}B in flight"
+                )
+            self._children.remove(kid)
+            kid._parent = None
+            self._cond.notify_all()
 
     def _effective_cap(self) -> int | None:
         """This budget's cap: explicit, or weight-derived under the parent.

@@ -84,6 +84,7 @@ from repro.distributed.fault_tolerance import (
     plan_elastic_restart,
 )
 from repro.runtime.memory import MemoryBudget
+from repro.runtime.rendition_cache import set_current_tenant
 from repro.runtime.telemetry import ReqTimes, Telemetry
 
 DEFAULT_TENANT = "default"
@@ -268,8 +269,12 @@ class _Binding:
         With an AOT :class:`ProgramSet` bound, a ragged batch dispatches
         through the smallest pre-compiled bucket covering ``n`` (the batch
         buffer is sliced to the bucket, padding lanes never reach outputs).
-        Returns ``(fn, bucket)``; ``bucket=None`` means dispatch the full
-        buffer through the plain per-replica program.
+        While a background warmup is still running (``require_ready``
+        program sets), only *warmed* buckets are served — the set answers
+        with the smallest ready covering bucket, so a dispatcher never
+        pays a request-path compile mid-warm.  Returns ``(fn, bucket)``;
+        ``bucket=None`` means dispatch the full buffer through the plain
+        per-replica program.
         """
         if self.program_sets and n:
             ps = self.program_sets[replica % len(self.program_sets)]
@@ -942,6 +947,10 @@ class RequestScheduler:
                     host_fn = route.binding.host_fn
                 else:
                     host_fn = state.binding.host_fn
+            # tag this worker thread so the rendition cache (consulted
+            # inside cache-aware host_fns) attributes hits/misses to the
+            # tenant whose request is being staged
+            set_current_tenant(state.config.name)
             t_in = time.perf_counter()
             try:
                 arr = host_fn(item)

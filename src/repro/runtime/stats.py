@@ -28,7 +28,9 @@ from repro.runtime.telemetry import HistogramSummary
 # histogram summaries from runtime.telemetry).
 # v3: added the ``cascade`` section (per-stage exit counters + measured
 # pass fractions of the cascade serving mode, progressive refetch).
-SCHEMA_VERSION = 3
+# v4: added the ``cache`` section (rendition-cache hit/miss/eviction
+# counters, resident bytes, bytes/seconds saved, per-tenant breakdown).
+SCHEMA_VERSION = 4
 
 
 @dataclasses.dataclass(frozen=True)
@@ -131,6 +133,39 @@ class CascadeSection:
 
 
 @dataclasses.dataclass(frozen=True)
+class CacheTenantSection:
+    """One tenant's share of rendition-cache traffic."""
+
+    hits: int
+    misses: int
+    bytes_saved: int
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheSection:
+    """Rendition-cache counters (schema v4, runtime/rendition_cache.py).
+
+    ``resident_bytes``/``resident_entries`` snapshot occupancy against
+    ``capacity_bytes`` (the cache's MemoryBudget cap — a child of the
+    serving hierarchy when one is configured); ``bytes_saved`` /
+    ``seconds_saved`` accumulate the decode work hits skipped, per the
+    entries' measured admission cost.
+    """
+
+    hits: int
+    misses: int
+    evictions: int
+    admitted: int
+    rejected: int
+    resident_bytes: int
+    resident_entries: int
+    capacity_bytes: int
+    bytes_saved: int
+    seconds_saved: float
+    tenants: Mapping[str, CacheTenantSection] = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass(frozen=True)
 class RuntimeStats:
     """Versioned snapshot of the whole runtime (see module docstring)."""
 
@@ -146,6 +181,7 @@ class RuntimeStats:
     split_decode: SplitDecodeSection | None = None
     latency: LatencySection | None = None
     cascade: CascadeSection | None = None  # cascade serving mode (schema v3)
+    cache: CacheSection | None = None  # rendition cache (schema v4)
     # cold-compile observability (additive, still schema v2): request-path
     # compiles after warmup finished, and cumulative compile wall time
     programs_compiled_post_warmup: int = 0

@@ -218,7 +218,7 @@ class TelemetryConfig:
 class Span:
     """One recorded span (a ring-buffer entry, decoded)."""
 
-    kind: str  # "request" | "batch"
+    kind: str  # "request" | "batch" | "compile" | "cache"
     name: str  # stage name, or "batch"
     tenant: str | None
     uid: int  # request uid, or batch sequence number
@@ -503,6 +503,13 @@ class Telemetry:
                 pid = pid_of("compiler")
                 tid = 0
                 thread_label = "jit"
+            elif s.kind == "cache":
+                # rendition-cache hits/admits/evictions: one process, one
+                # track per tenant ("" = untenanted), so cache traffic is
+                # readable next to the request tracks it shortens
+                pid = pid_of("rendition cache")
+                tid = abs(hash(s.tenant or "")) % 1024
+                thread_label = f"tenant:{s.tenant or 'default'}"
             else:
                 pid = pid_of(f"tenant:{s.tenant}")
                 tid = s.uid

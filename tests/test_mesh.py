@@ -395,7 +395,7 @@ def test_traced_multitenant_mesh_run(corpus, tmp_path):
     assert all(d.error is None for d in done) and len(done) == len(corpus)
 
     # schema v2 latency section reports per-tenant quantiles
-    assert stats.schema_version == 3
+    assert stats.schema_version == 4
     for tname in ("gold", "bronze"):
         summ = stats.latency.tenants[tname]["e2e"]
         assert summ.count == len(corpus) // 2
@@ -480,10 +480,10 @@ def test_runtime_stats_schema_and_json_roundtrip(corpus):
     rt.run(corpus)
     stats = rt.stats()
     assert isinstance(stats, RuntimeStats)
-    assert stats.schema_version == 3
+    assert stats.schema_version == 4
     d = stats.to_dict()
     json.dumps(d)  # wire-safe end to end
-    assert d["schema_version"] == 3
+    assert d["schema_version"] == 4
     assert d["device_program"]["backend"] == "fused"
     assert "engine" in d and "tenants" in d
     # v2: the latency section digests the streaming histograms

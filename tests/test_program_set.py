@@ -292,6 +292,11 @@ def test_warmup_full_compiles_program_set_at_startup(corpus):
     assert len(compiled.program_sets) == 1
     ps = compiled.program_sets[0]
     assert ps.buckets == batch_buckets(4) == (1, 2, 4)
+    # the largest bucket warms inline (serving can start on it at once);
+    # the rest drain through the background warmer
+    assert ps.programs[ps.max_batch].dispatch_count >= 1
+    assert rt.wait_warm(timeout=60.0)
+    assert ps.fully_warm
     # every entry executed once during warm(): no first-dispatch left
     assert all(p.dispatch_count >= 1 for p in ps.programs.values())
     assert rt.stats().program_cache.pinned == len(ps.buckets)
@@ -336,6 +341,7 @@ def test_warmup_bucketed_results_match_unbucketed(corpus):
 def test_warmup_serving_tail_batch_uses_covering_bucket(corpus):
     rt = _runtime(corpus, warmup="full", max_wait_ms=200.0)
     rt.start_serving()
+    rt.wait_warm()  # all buckets ready: tails use the exact covering bucket
     try:
         for item in corpus[:3]:  # < batch_size: a ragged tail batch
             rt.submit(item)
@@ -381,6 +387,7 @@ def test_warmup_warns_when_cache_smaller_than_warm_set(corpus):
 def test_compile_spans_appear_in_trace(tmp_path, corpus):
     rt = _runtime(corpus, warmup="full")
     rt.compile()
+    assert rt.wait_warm(timeout=60.0)  # background buckets emit spans too
     spans = rt.telemetry.spans()
     compile_spans = [s for s in spans if s.kind == "compile"]
     assert len(compile_spans) == 3  # one per bucket

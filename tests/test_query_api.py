@@ -340,10 +340,10 @@ def test_stats_v3_roundtrip_with_cascade_section(calibration):
         stats = rt.stats()
     finally:
         rt.stop_serving()
-    assert stats.schema_version == 3
+    assert stats.schema_version == 4
     d = stats.to_dict()
     json.dumps(d)  # wire-safe end to end
-    assert d["schema_version"] == 3
+    assert d["schema_version"] == 4
     assert d["cascade"]["refetched_items"] == 1
     assert d["cascade"]["factor"] == 2
     assert d["cascade"]["threshold"] == 0.6

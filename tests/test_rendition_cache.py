@@ -1,0 +1,401 @@
+"""Corpus-level rendition cache (runtime/rendition_cache.py).
+
+Covers the PR-10 materialization layer end to end: bit-identical cached
+host staging across subsample modes and scaled-decode factors, cost-aware
+eviction that can never eat a sibling tenant's guaranteed floor, cascade
+stage-1 refetch reusing the stage-0 coefficient entry (witnessed by a
+counting decode proxy), the cache-off runtime allocating nothing, the v4
+stats/metrics surface, geometry memoization, and the background warmer
+keeping ``start_serving`` off the full bucket-warm path.
+"""
+
+import gc
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from conftest import smooth_image
+from repro.core.planner import ModelSpec
+from repro.preprocessing import jpeg
+from repro.preprocessing.formats import ImageFormat, StoredImage
+from repro.runtime import (
+    CascadeQuery,
+    CascadeStageSpec,
+    DeviceCompilerConfig,
+    MemoryConfig,
+    RuntimeConfig,
+    SmolRuntime,
+)
+from repro.runtime.memory import MemoryBudget
+from repro.runtime.rendition_cache import (
+    RenditionCache,
+    item_uid,
+    set_current_tenant,
+)
+
+INPUT = 32
+FMT = ImageFormat("jpeg", None, 95)
+FMT_420 = ImageFormat("jpeg", None, 95, subsample=True)
+CACHE_BYTES = 64 << 20
+
+
+def _runtime(corpus, fmt, cache_bytes=CACHE_BYTES, split_decode="full", **cfg):
+    model = ModelSpec(
+        "m", INPUT, exec_throughput=50_000.0, accuracy_by_format={fmt.key: 0.9}
+    )
+    w = np.asarray(
+        jax.random.normal(jax.random.PRNGKey(0), (3 * INPUT * INPUT, 5)) * 0.02
+    )
+    return SmolRuntime(
+        [model],
+        [fmt],
+        {"m": lambda x: x.reshape(x.shape[0], -1) @ w},
+        calibration=corpus[:3],
+        config=RuntimeConfig(
+            batch_size=4,
+            num_workers=2,
+            host_ops_per_sec=1e7,
+            device=DeviceCompilerConfig(backend="fused", split_decode=split_decode),
+            memory=MemoryConfig(rendition_cache_bytes=cache_bytes),
+            **cfg,
+        ),
+        decode_time=lambda fmt: 1e-4,
+    )
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    rng = np.random.default_rng(11)
+    return [
+        StoredImage.from_array(smooth_image(rng, 72, 88), [FMT], uid=f"img{i}")
+        for i, a in enumerate(range(12))
+    ]
+
+
+@pytest.fixture(scope="module")
+def corpus_420():
+    rng = np.random.default_rng(13)
+    return [
+        StoredImage.from_array(smooth_image(rng, 72, 88), [FMT_420], uid=f"i420_{i}")
+        for i in range(12)
+    ]
+
+
+# --------------------------------------------------- bit-identical staging
+@pytest.mark.parametrize(
+    "fmt_name,fixture", [("444", "corpus"), ("420", "corpus_420")]
+)
+def test_cached_host_stage_is_bit_identical(fmt_name, fixture, request):
+    corpus = request.getfixturevalue(fixture)
+    fmt = FMT if fmt_name == "444" else FMT_420
+    rt = _runtime(corpus, fmt)
+    compiled = rt.compile()
+    assert compiled.coeff is not None, "split decode must engage for this test"
+    host_fn = compiled.host_fn
+    item = corpus[0]
+    cold = host_fn(item)  # decodes + admits
+    warm = host_fn(item)  # must serve the resident entry
+    cs = rt.rendition_cache.stats()
+    assert cs.admitted >= 1 and cs.hits >= 1
+    assert warm.dtype == cold.dtype and warm.shape == cold.shape
+    assert np.array_equal(cold, warm)  # bit-identical, not approximately
+    # the resident entry is the one shared copy: hits must not be writable
+    assert not warm.flags.writeable
+    # and it IS the freshly staged tensor, byte for byte
+    hdr, planes_zz, _, _ = item.decode_to_coefficients(fmt)
+    fresh = jpeg.stage_coefficients(planes_zz, hdr, compiled.coeff.layout)
+    assert np.array_equal(fresh, warm)
+
+
+def test_cached_runs_match_cold_predictions(corpus):
+    outs_off, _ = _runtime(corpus, FMT, cache_bytes=None).run(corpus)
+    rt = _runtime(corpus, FMT)
+    outs_cold, _ = rt.run(corpus)
+    outs_hot, _ = rt.run(corpus)  # second epoch: served from the cache
+    cs = rt.stats().cache
+    assert cs.hits >= len(corpus)  # every item hit at least once
+    for a, b, c in zip(outs_off, outs_cold, outs_hot):
+        np.testing.assert_array_equal(np.asarray(b), np.asarray(c))
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+# ------------------------------------------------------- budget interaction
+def test_eviction_preserves_sibling_floors():
+    root = MemoryBudget(10_000, name="root")
+    tenant = root.child("tenant", floor_bytes=6_000)
+    cache_budget = root.child("cache", max_bytes=8_000)
+    cache = RenditionCache(cache_budget)
+    # fill far past the unfloored headroom (10k - 6k floor = 4k): the cache
+    # must evict/refuse rather than occupy the tenant's guarantee
+    for i in range(16):
+        cache.put(("coeff", ("uid", i), "f", "L"), np.zeros(500, np.uint8), 1e-3)
+    assert cache.resident_bytes <= 4_000
+    assert cache_budget.in_flight_bytes <= 4_000
+    # the floored tenant admits its full guarantee with the cache saturated
+    assert tenant.try_admit(6_000)
+    tenant.release(6_000)
+    st = cache.stats()
+    assert st.admitted + st.rejected == 16
+    assert st.resident_bytes == cache_budget.in_flight_bytes
+
+
+def test_cost_aware_eviction_prefers_low_utility_victims():
+    cache = RenditionCache(MemoryBudget(1_000, name="cache"))
+    cheap = ("coeff", ("uid", "cheap"), "f", "L")
+    dear = ("coeff", ("uid", "dear"), "f", "L")
+    assert cache.put(cheap, np.zeros(500, np.uint8), cost_seconds=1e-6)
+    assert cache.put(dear, np.zeros(500, np.uint8), cost_seconds=1e-2)
+    # a mid-utility newcomer evicts the cheap entry, never the dear one
+    mid = ("coeff", ("uid", "mid"), "f", "L")
+    assert cache.put(mid, np.zeros(500, np.uint8), cost_seconds=1e-4)
+    assert cache.get(dear) is not None
+    assert cache.get(mid) is not None
+    assert cache.get(cheap) is None
+    # a newcomer worse than everything resident is refused, not admitted
+    worst = ("coeff", ("uid", "worst"), "f", "L")
+    assert not cache.put(worst, np.zeros(500, np.uint8), cost_seconds=1e-9)
+    # an entry bigger than the whole cache never evicts anything
+    huge = ("coeff", ("uid", "huge"), "f", "L")
+    assert not cache.put(huge, np.zeros(2_000, np.uint8), cost_seconds=1.0)
+    assert cache.stats().resident_entries == 2
+
+
+def test_min_utility_floor_and_identity_invalidation():
+    cache = RenditionCache(MemoryBudget(1 << 20, name="cache"), min_utility=1.0)
+    # 1 MiB/s of savings per MiB stored = utility 1.0/MiB; this entry saves
+    # far less and must be refused by the admission floor
+    k = ("coeff", ("uid", "x"), "f", "L")
+    assert not cache.put(k, np.zeros(1 << 18, np.uint8), cost_seconds=1e-6)
+    assert cache.stats().rejected == 1
+
+    class Item:
+        def decode(self, fmt):  # a stored corpus item, identity-keyed
+            raise NotImplementedError
+
+    cache2 = RenditionCache(MemoryBudget(1 << 20, name="cache"))
+    it = Item()
+    key = cache2.coeff_key(it, "f", "L")
+    assert key[1][0] == "id"  # no uid: identity-keyed
+    assert cache2.put(key, np.zeros(64, np.uint8), 1e-3, item=it)
+    assert cache2.get(key) is not None
+    del it
+    gc.collect()
+    # the finalizer dropped the entry: a recycled id can never alias it
+    assert cache2.stats().resident_entries == 0
+
+
+def test_item_uid_rules():
+    img = StoredImage.from_array(
+        np.full((16, 16, 3), 128, np.uint8), [FMT], uid="stable"
+    )
+    assert item_uid(img) == ("uid", "stable")
+    anon = StoredImage.from_array(np.full((16, 16, 3), 128, np.uint8), [FMT])
+    assert item_uid(anon) == ("id", id(anon))
+    assert item_uid(np.zeros(3)) is None  # raw arrays are uncacheable
+
+
+def test_per_tenant_attribution_via_thread_tag():
+    cache = RenditionCache(MemoryBudget(1 << 20, name="cache"))
+    key = ("coeff", ("uid", "x"), "f", "L")
+    set_current_tenant("alice")
+    try:
+        cache.get(key)  # miss
+        cache.put(key, np.zeros(100, np.uint8), 1e-3)
+        cache.get(key)  # hit
+    finally:
+        set_current_tenant(None)
+    st = cache.stats()
+    assert st.tenants["alice"].hits == 1
+    assert st.tenants["alice"].misses == 1
+    assert st.tenants["alice"].bytes_saved == 100
+
+
+# --------------------------------------------- cascade refetch reuses stage 0
+class CountingImage:
+    """StoredImage proxy counting pixel vs coefficient decodes."""
+
+    def __init__(self, inner: StoredImage):
+        self._inner = inner
+        self.pixel_decodes = 0
+        self.coeff_decodes = 0
+
+    @property
+    def variants(self):
+        return self._inner.variants
+
+    @property
+    def native_shape(self):
+        return self._inner.native_shape
+
+    def formats(self):
+        return self._inner.formats()
+
+    def nbytes(self, fmt):
+        return self._inner.nbytes(fmt)
+
+    def decode(self, fmt):
+        self.pixel_decodes += 1
+        return self._inner.decode(fmt)
+
+    def decode_to_coefficients(self, fmt):
+        self.coeff_decodes += 1
+        return self._inner.decode_to_coefficients(fmt)
+
+
+def _conf_runtime(calibration, cache_bytes):
+    import jax.numpy as jnp
+
+    def conf_model(x):
+        m = jnp.mean(x, axis=(1, 2, 3))
+        z = jnp.zeros((x.shape[0], 7), jnp.float32)
+        return z.at[:, 0].set(m * 12.0)
+
+    model = ModelSpec(
+        "conf", INPUT, exec_throughput=5_000.0, accuracy_by_format={FMT.key: 0.95}
+    )
+    cfg = RuntimeConfig(
+        batch_size=4,
+        num_workers=2,
+        max_wait_ms=1.0,
+        memory=MemoryConfig(rendition_cache_bytes=cache_bytes),
+    )
+    return SmolRuntime(
+        [model],
+        [FMT],
+        {"conf": conf_model},
+        calibration=calibration,
+        config=cfg,
+        decode_time=lambda fmt: 2e-3,
+    )
+
+
+def test_cascade_refetch_reuses_stage0_coefficients():
+    calibration = [
+        StoredImage.from_array(np.full((80, 80, 3), 128, np.uint8), [FMT])
+        for _ in range(3)
+    ]
+    rt = _conf_runtime(calibration, CACHE_BYTES)
+    stages = (CascadeStageSpec(threshold=0.6), CascadeStageSpec())
+    items = [
+        CountingImage(
+            StoredImage.from_array(
+                np.full((80, 80, 3), 210 if i % 3 else 80, np.uint8), [FMT]
+            )
+        )
+        for i in range(12)
+    ]
+    rt.start_serving()
+    try:
+        uids = [rt.submit(CascadeQuery(image=img, stages=stages)) for img in items]
+        rt.flush(timeout=60.0)
+        done = rt.drain()
+        stats = rt.stats()
+    finally:
+        rt.stop_serving()
+    by_uid = {r.uid: r for r in done}
+    assert stats.cascade.refetched_items == 4
+    for uid, img, i in zip(uids, items, range(12)):
+        r = by_uid[uid]
+        assert r.ok
+        dark = i % 3 == 0
+        assert r.refetched == dark
+        # the load-bearing claim: ONE entropy decode per item — the
+        # stage-1 full-resolution refetch is a pure hit on the stage-0
+        # cached coefficient entry (factor-free key), and nothing ever
+        # falls back to the pixel decode
+        assert img.coeff_decodes == 1
+        assert img.pixel_decodes == 0
+    cs = stats.cache
+    assert cs is not None and cs.hits >= 4  # one hit per refetched item
+
+
+def test_cascade_without_cache_decodes_refetches_twice():
+    # the pre-cache contract still holds when the cache is off: refetched
+    # items pay the full-resolution pixel decode
+    calibration = [
+        StoredImage.from_array(np.full((80, 80, 3), 128, np.uint8), [FMT])
+        for _ in range(3)
+    ]
+    rt = _conf_runtime(calibration, None)
+    stages = (CascadeStageSpec(threshold=0.6), CascadeStageSpec())
+    img = CountingImage(
+        StoredImage.from_array(np.full((80, 80, 3), 80, np.uint8), [FMT])
+    )
+    rt.start_serving()
+    try:
+        rt.submit(CascadeQuery(image=img, stages=stages))
+        rt.flush(timeout=30.0)
+        done = rt.drain()
+    finally:
+        rt.stop_serving()
+    assert done[0].refetched
+    assert img.coeff_decodes == 1 and img.pixel_decodes == 1
+
+
+# ------------------------------------------------------------- cache off
+def test_disabled_cache_allocates_nothing(corpus):
+    rt = _runtime(corpus, FMT, cache_bytes=None)
+    assert rt.rendition_cache is None
+    rt.run(corpus)
+    stats = rt.stats()
+    assert stats.cache is None
+    d = stats.to_dict()
+    assert d["cache"] is None
+    assert "smol_rendition_cache" not in rt.metrics_text()
+
+
+# ------------------------------------------------------- stats + metrics
+def test_stats_v4_cache_section_and_metrics(corpus):
+    rt = _runtime(corpus, FMT)
+    rt.run(corpus)
+    rt.run(corpus)
+    stats = rt.stats()
+    cs = stats.cache
+    assert cs is not None
+    assert cs.hits > 0 and cs.admitted > 0
+    assert cs.capacity_bytes == CACHE_BYTES
+    assert 0 < cs.resident_bytes <= cs.capacity_bytes
+    assert cs.resident_entries == cs.admitted - cs.evictions
+    assert cs.bytes_saved > 0 and cs.seconds_saved > 0
+    json.dumps(stats.to_dict())  # wire-safe with the cache section
+    text = rt.metrics_text()
+    assert 'smol_rendition_cache_events_total{event="hit"}' in text
+    assert "smol_rendition_cache_resident_bytes" in text
+    assert "smol_rendition_cache_saved_seconds_total" in text
+    # the planner's cache-aware term sees the measured hit rate
+    assert rt.rendition_cache.hit_rate(FMT.key) > 0.0
+
+
+# ------------------------------------------------------ geometry memoization
+def test_staged_shape_and_chroma_grid_memoized(corpus):
+    hdr, _, _, _ = corpus[0].decode_to_coefficients(FMT)
+    jpeg._staged_coeff_shape.cache_clear()
+    jpeg._chroma_grid.cache_clear()
+    s1 = jpeg.staged_coeff_shape(hdr, "packed")
+    s2 = jpeg.staged_coeff_shape(hdr, "packed")
+    assert s1 == s2
+    assert jpeg._staged_coeff_shape.cache_info().hits >= 1
+    g1 = jpeg.chroma_grid(hdr)
+    g2 = jpeg.chroma_grid(hdr)
+    assert g1 == g2
+    assert jpeg._chroma_grid.cache_info().hits >= 1
+
+
+# ------------------------------------------------------- background warmer
+def test_background_warmer_readiness_and_fallback(corpus):
+    rt = _runtime(corpus, FMT, warmup="full")
+    compiled = rt.compile()
+    ps = compiled.program_sets[0]
+    # the largest bucket warmed inline so serving can start immediately
+    assert ps.programs[ps.max_batch].dispatch_count >= 1
+    # while warming, every batch size resolves to SOME ready program —
+    # dispatch never jit-compiles on the request path
+    got = ps.program_for(1)
+    assert got is not None and got[1] >= 1
+    assert rt.wait_warm(timeout=60.0)
+    assert ps.fully_warm
+    assert all(p.dispatch_count >= 1 for p in ps.programs.values())
+    # background warm compiles are warmup, not request-path compiles
+    assert rt.programs_compiled_post_warmup == 0

@@ -291,7 +291,7 @@ def test_runtime_stats_v2_roundtrip_with_latency():
     stats = RuntimeStats(
         latency=LatencySection(stages=digest["stages"], tenants=digest["tenants"])
     )
-    assert stats.schema_version == 3
+    assert stats.schema_version == 4
     d = stats.to_dict()
     json.dumps(d)  # wire-safe with the latency section populated
     assert d["latency"]["tenants"]["gold"]["e2e"]["count"] == 1
